@@ -1,0 +1,82 @@
+"""Kernel micro-benchmarks.
+
+On this CPU host the Pallas kernels run in INTERPRET mode (Python per grid
+step) — wall-times are correctness-path numbers, NOT TPU performance. The
+meaningful CPU-side comparison is the pure-jnp reference path (XLA:CPU
+compiled), reported as achieved GB/s / GFLOP/s against the workload's
+analytic byte/flop counts; TPU projections come from §Roofline instead.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def timeit(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def main():
+    print("# Kernel micro-bench (jnp reference path, XLA:CPU)")
+    print("kernel,shape,us_per_call,derived")
+    key = jax.random.PRNGKey(0)
+
+    # embedding bag at RM2-small scale (per-chip slice of the paper's config)
+    T, R, L, d, B = 40, 2 ** 17, 80, 32, 200
+    k1, k2 = jax.random.split(key)
+    tables = jax.random.normal(k1, (T, R, d), jnp.float32)
+    idx = jax.random.randint(k2, (B, T, L), 0, R)
+    f = jax.jit(ref.embedding_bag_ref)
+    dt = timeit(f, tables, idx)
+    bytes_moved = B * T * L * d * 4
+    print(f"embedding_bag,(B{B} T{T} L{L} d{d}),{dt*1e6:.0f},"
+          f"{bytes_moved/dt/1e9:.1f}GB/s")
+
+    # interactions at RM2 scale
+    bot = jax.random.normal(k1, (B, d))
+    pooled = jax.random.normal(k2, (B, T, d))
+    f = jax.jit(ref.interactions_ref)
+    dt = timeit(f, bot, pooled)
+    flops = 2 * B * (T + 1) * (T + 1) * d
+    print(f"interactions,(B{B} T{T} d{d}),{dt*1e6:.0f},"
+          f"{flops/dt/1e9:.1f}GFLOP/s")
+
+    # flash attention (prefill block) — small LM slice
+    Bq, Tq, Hq, Hkv, hd = 1, 1024, 8, 2, 64
+    q = jax.random.normal(k1, (Bq, Tq, Hq, hd), jnp.bfloat16)
+    kv = jax.random.normal(k2, (Bq, Tq, Hkv, hd), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    dt = timeit(f, q, kv, kv)
+    flops = 4 * Bq * Tq * Tq * Hq * hd / 2     # causal half
+    print(f"flash_attention,(T{Tq} Hq{Hq} hd{hd}),{dt*1e6:.0f},"
+          f"{flops/dt/1e9:.1f}GFLOP/s")
+
+    # flash decode against a deep cache
+    S = 32768
+    q1 = jax.random.normal(k1, (4, Hq, hd), jnp.bfloat16)
+    kc = jax.random.normal(k2, (4, S, Hkv, hd), jnp.bfloat16)
+    lens = jnp.full((4,), S)
+    f = jax.jit(lambda q, k, v, l: ref.flash_decode_ref(q, k, v, l))
+    dt = timeit(f, q1, kc, kc, lens)
+    bytes_moved = 2 * 4 * S * Hkv * hd * 2
+    print(f"flash_decode,(S{S} Hq{Hq} hd{hd}),{dt*1e6:.0f},"
+          f"{bytes_moved/dt/1e9:.1f}GB/s")
+
+    # Pallas interpret-mode correctness spot check (tiny, not a perf number)
+    from repro.kernels.embedding_bag import embedding_bag_pallas
+    tab_s = tables[:4, :256]
+    idx_s = jnp.clip(idx[:8, :4, :8], 0, 255)
+    dt = timeit(lambda a, b: embedding_bag_pallas(a, b), tab_s, idx_s, iters=2)
+    print(f"embedding_bag_pallas_interpret,(tiny),{dt*1e6:.0f},correctness-only")
+
+
+if __name__ == "__main__":
+    main()

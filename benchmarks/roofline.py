@@ -1,0 +1,62 @@
+"""§Roofline aggregation: reads reports/dryrun/*.json (written by
+repro.launch.dryrun) and renders the per-(arch × shape × mesh) roofline
+table — three terms, dominant bottleneck, MODEL_FLOPS ratio."""
+import glob
+import json
+import os
+
+REPORT_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "reports", "dryrun")
+
+
+def load_records(report_dir: str = REPORT_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def render(recs, mesh_filter: str = "single"):
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append((r["cell"], "FAILED", "", "", "", "", "", ""))
+            continue
+        if not r["cell"].endswith(mesh_filter):
+            continue
+        rl = r["roofline"]
+        mem_gib = r["memory"]["peak_per_device_bytes"] / 2 ** 30
+        rows.append((
+            r["cell"],
+            f"{rl['t_compute_s']*1e3:.2f}",
+            f"{rl['t_memory_s']*1e3:.2f}",
+            f"{rl['t_collective_s']*1e3:.2f}",
+            rl["bottleneck"],
+            f"{rl['useful_flops_ratio']:.2f}",
+            f"{mem_gib:.2f}",
+            f"{rl['model_flops']:.3e}",
+        ))
+    return rows
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("# No dry-run reports found — run `python -m repro.launch.dryrun`")
+        return
+    for mesh in ("single", "multi"):
+        print(f"# §Roofline — {mesh}-pod mesh "
+              f"({'16x16=256' if mesh == 'single' else '2x16x16=512'} chips), "
+              "terms in ms/step")
+        print("cell,t_compute_ms,t_memory_ms,t_collective_ms,bottleneck,"
+              "useful_flops_ratio,mem_per_dev_GiB,model_flops")
+        for row in render(recs, mesh):
+            print(",".join(str(x) for x in row))
+        print()
+    n_ok = sum(1 for r in recs if r.get("status") == "ok")
+    print(f"# {n_ok}/{len(recs)} cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark driver: one section per paper table/figure + the roofline
+aggregation. `PYTHONPATH=src python -m benchmarks.run [--only NAME]`."""
+import argparse
+import sys
+import time
+
+from benchmarks import (fig6_membw, fig8_inference, fig9_latency,
+                        fig10_sharding, fig11_training, fig12_13_phases,
+                        kernel_bench, roofline, table16_17_upper_bounds)
+
+SECTIONS = [
+    ("fig6", fig6_membw.main),
+    ("fig8", fig8_inference.main),
+    ("fig9", fig9_latency.main),
+    ("fig10", fig10_sharding.main),
+    ("fig11", fig11_training.main),
+    ("fig12_13", fig12_13_phases.main),
+    ("table16_17", table16_17_upper_bounds.main),
+    ("kernels", kernel_bench.main),
+    ("roofline", roofline.main),
+]
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help="run a single section: " + ",".join(n for n, _ in SECTIONS))
+    args = p.parse_args()
+    for name, fn in SECTIONS:
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"{'='*72}\n== {name}\n{'='*72}")
+        fn()
+        print(f"== {name} done in {time.time()-t0:.1f}s\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

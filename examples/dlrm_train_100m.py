@@ -1,0 +1,87 @@
+"""End-to-end driver: train a ~100M-parameter DLRM for a few hundred steps
+with the full production substrate — sharded step (Algorithms 1+2 via
+shard_map), async checkpointing with resume, straggler accounting, and the
+deterministic step-indexed data pipeline.
+
+~100M params: 12 tables x 131072 rows x 64d = 100.7M embedding params
+(+ ~0.6M dense). Runs in a few minutes on CPU.
+
+Run: PYTHONPATH=src python examples/dlrm_train_100m.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import DLRMConfig
+from repro.core import dlrm as dlrm_lib
+from repro.core import sharding as dsh
+from repro.data import make_recsys_batch
+from repro.launch.mesh import make_host_mesh
+from repro.runtime import TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = DLRMConfig(
+        name="dlrm-100m", num_tables=12, lookups_per_table=16,
+        embed_dim=64, rows_per_table=131_072, num_dense=256,
+        batch_size=args.batch, sharding="table_wise")
+    n_params = (cfg.num_tables * cfg.rows_per_table * cfg.embed_dim
+                + sum(a * b for a, b in zip(
+                    (cfg.num_dense,) + cfg.bot_mlp_dims[:-1], cfg.bot_mlp_dims))
+                + sum(a * b for a, b in zip(
+                    (cfg.top_mlp_in,) + cfg.top_mlp[:-1], cfg.top_mlp)))
+    print(f"== {cfg.name}: {n_params/1e6:.1f}M params, batch {cfg.batch_size}")
+
+    mesh = make_host_mesh()
+    step = dsh.make_dlrm_train_step(cfg, mesh, ("data", "model"), lr=0.2,
+                                    optimizer="adagrad")
+    params = dlrm_lib.init_dlrm(jax.random.PRNGKey(0), cfg)
+    params = dsh.shard_dlrm_params(params, cfg, mesh, ("data", "model"))
+    opt = {"table_acc": jnp.zeros((cfg.num_tables, cfg.rows_per_table),
+                                  jnp.float32)}
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="dlrm100m_")
+    ckpt = CheckpointManager(ckpt_dir, keep=2)
+
+    def loop_step(state, batch):
+        p, o = state
+        p, o, loss = step(p, o, batch["dense"], batch["indices"],
+                          batch["labels"])
+        return (p, o), {"loss": loss}
+
+    loop = TrainLoop(step_fn=loop_step,
+                     batch_fn=lambda s: make_recsys_batch(cfg, s, alpha=0.8),
+                     ckpt=ckpt, ckpt_every=50)
+    state, start = loop.resume((params, opt))
+    if start:
+        print(f"== resumed from checkpoint at step {start}")
+    t0 = time.time()
+    state = loop.run(state, args.steps, start)
+    dt = time.time() - t0
+
+    losses = [h["loss"] for h in loop.history]
+    qps = args.steps * cfg.batch_size / dt
+    w = max(1, min(10, len(losses) // 4))
+    head = sum(losses[:w]) / w
+    tail = sum(losses[-w:]) / w
+    print(f"== {args.steps} steps in {dt:.1f}s  ({qps:,.0f} samples/s)")
+    print(f"== loss (mean of {w}) {head:.4f} -> {tail:.4f} "
+          f"(decreased: {tail < head})")
+    print(f"== checkpoints in {ckpt_dir} (latest step "
+          f"{ckpt.latest_step()}) — rerun with --ckpt-dir to resume")
+    assert tail < head, "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

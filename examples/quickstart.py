@@ -1,0 +1,53 @@
+"""Quickstart: the paper's workload end to end in ~a minute on CPU.
+
+1. Build DLRM-RM2 (reduced) and train it on the synthetic click-log.
+2. Serve a query batch and read out click probabilities.
+3. Ask the RecSpeed planner what the PAPER'S analysis says about how to
+   distribute the FULL model on RecSpeed-class vs DGX-2-class hardware.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.registry import get_dlrm
+from repro.core import dlrm as dlrm_lib
+from repro.core.perf_model import dgx2_system, recspeed_system, tpu_v5e_system
+from repro.core.planner import plan_dlrm
+from repro.data import make_recsys_batch
+
+
+def main():
+    cfg = get_dlrm("dlrm-rm2-small-unsharded").reduced()
+    print(f"== DLRM {cfg.name}: {cfg.num_tables} tables x {cfg.rows_per_table}"
+          f" rows x d={cfg.embed_dim}")
+
+    # --- train ---------------------------------------------------------
+    params = dlrm_lib.init_dlrm(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(dlrm_lib.reference_train_step,
+                   static_argnames=("cfg", "lr"))
+    for s in range(25):
+        b = make_recsys_batch(cfg, s)
+        params, loss = step(params, b["dense"], b["indices"], b["labels"],
+                            cfg, 0.05)
+        if s % 8 == 0:
+            print(f"  step {s:3d}  bce={float(loss):.4f}")
+
+    # --- serve ----------------------------------------------------------
+    q = make_recsys_batch(cfg, 999)
+    probs = dlrm_lib.predict(params, q["dense"], q["indices"], cfg)
+    print(f"== served query of {probs.shape[0]}: "
+          f"P(click) head = {[round(float(p), 3) for p in probs[:4]]}")
+
+    # --- plan (the paper's contribution as a feature) --------------------
+    full = get_dlrm("dlrm-rm2-small-unsharded")
+    for system in (recspeed_system(), dgx2_system(), tpu_v5e_system(16)):
+        plan = plan_dlrm(full, system, "inference")
+        print(f"== planner[{system.name}]: mode={plan.mode} "
+              f"exchange={plan.exchange} predicted {plan.predicted_qps:,.0f} QPS"
+              f"  (table-wise {plan.qps_table_wise:,.0f} / row-wise-unpooled"
+              f" {plan.qps_row_wise_unpooled:,.0f} / row-wise-partial"
+              f" {plan.qps_row_wise_partial:,.0f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,328 @@
+"""DLRM system performance model — paper Sec. V (the paper's primary artifact).
+
+Computes upper-bound step time / QPS / memory utilization for distributed
+DLRM inference and training (paper Algorithms 1 & 2) on a homogeneous
+n-chip system, as a function of:
+
+  * DLRM configuration (paper Table XII, `DLRMConfig`),
+  * sharding strategy ("table_wise" == paper "unsharded",
+                       "row_wise"  == paper "full sharding"),
+  * hardware: CC latency/bandwidth/topology (`Interconnect`), random-access
+    memory behaviour (`MemorySystem`), dense compute FLOP/s.
+
+Model structure (derived from paper Sec. V-B "maximal overlap within a
+batch": memory activity overlaps communications chunk-wise, but the indices
+all-to-all must complete before lookups can begin, and phases that the paper
+reports separately — FWD / ALLREDUCE / SPARSE-UPDATE, Fig. 12b — are serial):
+
+  T_inference = T_idx_a2a + max(T_lookup, T_emb_exchange, T_dense_fwd)
+
+  T_training  = T_inference                      # forward
+              + max(T_dense_allreduce, T_bwd)    # allreduce pipelined w/ bwd
+              + T_grad_exchange + T_row_write    # SPARSE UPDT phase
+
+Embedding-exchange payloads per processor (paper Sec. VI-B quotes):
+  unsharded fwd  : pooled rows      B*T*e/n        (64 KB small cfg @ n=8)
+  sharded  fwd   : unpooled rows    B*T*L*e/n      (~5.2 MB small, ~60 MB large)
+  indices  a2a   : B*T*L*4/n                       (320 KB small)
+  dense allreduce: all dense-layer grads           (~2.4 MB wire small)
+  unsharded bwd  : pooled grads     B*T*e/n   (all-to-all)
+  sharded  bwd   : pooled grads     B*T*e     (all-gather, Alg. 2)
+
+BEYOND-PAPER option (`row_wise_exchange="partial_pool"`): with sum pooling,
+row-sharded processors can partially pool their owned rows per (sample,
+table) and reduce-scatter the partial sums — wire bytes drop from
+B*T*L*e/n to B*T*e*(n-1)/n, an L/n reduction (10x for RM2-small @ n=8).
+The paper's model ships unpooled rows; we reproduce that faithfully as the
+default and expose the optimization separately.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.configs.base import DLRMConfig
+from repro.core.collectives import (
+    CollectiveOp, Interconnect, Topology, collective_time)
+from repro.core.memsys import (
+    MemorySystem, recspeed_hbm2e, recspeed_sweep_hbm2e, tpu_v5e_hbm, v100_hbm2)
+
+
+# ---------------------------------------------------------------------------
+# System descriptions
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SystemConfig:
+    """A homogeneous n-chip system (paper Sec. VI-A)."""
+
+    name: str
+    n_chips: int
+    compute_flops: float              # dense FLOP/s per chip (fp16/bf16)
+    a2a: Interconnect                 # all-to-all / all-gather characteristics
+    allreduce: Interconnect           # all-reduce characteristics
+    mem: MemorySystem                 # per-chip attached memory
+    index_bytes: int = 4              # paper: 320 KB = B*T*L*4/n
+    elem_bytes: int = 2               # fp16 everywhere (paper Sec. V-A)
+
+    def with_cc(self, latency_s: float, bandwidth: float) -> "SystemConfig":
+        """Sweep helper: same system, different CC latency/bandwidth."""
+        a2a = Interconnect(bandwidth, latency_s, self.a2a.topology)
+        ar = Interconnect(bandwidth, latency_s, self.allreduce.topology)
+        return SystemConfig(self.name, self.n_chips, self.compute_flops,
+                            a2a, ar, self.mem, self.index_bytes, self.elem_bytes)
+
+
+def recspeed_system() -> SystemConfig:
+    """Paper Table XIV: 16 chips, 1 us / 1000 GB/s CC, 200 TFLOPS,
+    6 stacks HBM2E @ 3000 MHz (+ 256 GB DDR4 bulk, used by the planner)."""
+    link = Interconnect(1000e9, 1e-6, Topology.QUADRATIC)
+    return SystemConfig("recspeed", 16, 200e12, link, link, recspeed_hbm2e())
+
+
+def dgx2_system() -> SystemConfig:
+    """Paper Table XV: 16 x V100, 150 GB/s/chip, measured CC latencies
+    (Table VI: all-reduce ~50 us, all-gather/all-to-all ~100 us)."""
+    a2a = Interconnect(150e9, 100e-6, Topology.SWITCHED)
+    ar = Interconnect(150e9, 50e-6, Topology.SWITCHED)
+    return SystemConfig("dgx-2", 16, 125e12, a2a, ar, v100_hbm2())
+
+
+def sweep_system(latency_s: float, bandwidth: float, n_chips: int = 8) -> SystemConfig:
+    """Paper Table XIII: 8 chips, 200 TFLOPS, 6 x HBM2E @ 2400; CC swept."""
+    link = Interconnect(bandwidth, latency_s, Topology.QUADRATIC)
+    return SystemConfig(f"sweep-l{latency_s*1e6:g}us-b{bandwidth/1e9:g}",
+                        n_chips, 200e12, link, link, recspeed_sweep_hbm2e())
+
+
+def tpu_v5e_system(n_chips: int = 256) -> SystemConfig:
+    """TPU v5e adaptation target (DESIGN.md): 2D torus ICI, ~100 GB/s/chip
+    aggregate injection, ~1 us/hop latency, 197 bf16 TFLOP/s, 16 GB HBM."""
+    side = max(1, int(round(math.sqrt(n_chips))))
+    a2a = Interconnect(100e9, 1e-6 * max(1, side // 2), Topology.TORUS_2D)
+    ar = Interconnect(100e9, 1e-6 * max(1, side // 2), Topology.TORUS_2D)
+    return SystemConfig(f"tpu-v5e-{n_chips}", n_chips, 197e12, a2a, ar,
+                        tpu_v5e_hbm())
+
+
+# ---------------------------------------------------------------------------
+# DLRM dense-parameter account
+# ---------------------------------------------------------------------------
+def dense_param_count(cfg: DLRMConfig) -> int:
+    n = 0
+    prev = cfg.num_dense
+    for w in cfg.bot_mlp_dims:
+        n += prev * w + w
+        prev = w
+    prev = cfg.top_mlp_in
+    for w in cfg.top_mlp:
+        n += prev * w + w
+        prev = w
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Step breakdown
+# ---------------------------------------------------------------------------
+@dataclass
+class StepBreakdown:
+    """All times in seconds; *per step* (= one query of cfg.batch_size)."""
+
+    system: str
+    config: str
+    mode: str                          # "inference" | "training"
+    t_idx_a2a: float = 0.0
+    t_lookup: float = 0.0
+    t_emb_exchange: float = 0.0
+    t_dense_fwd: float = 0.0
+    t_fwd: float = 0.0
+    t_bwd_compute: float = 0.0
+    t_dense_allreduce: float = 0.0
+    t_grad_exchange: float = 0.0
+    t_row_write: float = 0.0
+    t_step: float = 0.0
+    notes: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def qps(self) -> float:
+        return 1.0 / self.t_step if self.t_step > 0 else float("inf")
+
+    @property
+    def mem_util(self) -> float:
+        """Fraction of the step the memory system is busy doing lookups —
+        matches the paper's Table XVI 'Mem. Util' definition."""
+        return self.t_lookup / self.t_step if self.t_step > 0 else 0.0
+
+    @property
+    def allreduce_frac(self) -> float:
+        return (max(self.t_dense_allreduce, self.t_bwd_compute) / self.t_step
+                if self.t_step > 0 else 0.0)
+
+    def phase_fractions(self) -> Dict[str, float]:
+        """Paper Fig. 12b/13b: FWD / ALLREDUCE / SPARSE-UPDT shares."""
+        fwd = self.t_fwd
+        ar = max(self.t_dense_allreduce, self.t_bwd_compute)
+        sp = self.t_grad_exchange + self.t_row_write
+        tot = max(self.t_step, 1e-30)
+        return {"fwd": fwd / tot, "allreduce": ar / tot, "sparse_updt": sp / tot}
+
+
+def _payloads(cfg: DLRMConfig, sys: SystemConfig) -> Dict[str, float]:
+    b, t, l = cfg.batch_size, cfg.num_tables, cfg.lookups_per_table
+    e = cfg.embed_dim * sys.elem_bytes
+    n = sys.n_chips
+    return {
+        "indices": b * t * l * sys.index_bytes / n,
+        "pooled": b * t * e / n,
+        "unpooled": b * t * l * e / n,
+        "partial_pool": b * t * e,          # reduce-scatter payload per proc
+        "pooled_all": b * t * e,            # all-gather total (bwd, sharded)
+        "lookup_bytes": b * t * l * e / n,  # per-chip memory traffic
+        # gradients are accumulated/all-reduced in fp32 (the paper's ~2.4 MB
+        # quote for RM2's ~600k dense params matches 4 B/elem, not fp16)
+        "dense_grad": dense_param_count(cfg) * 4,
+    }
+
+
+def inference_breakdown(
+    cfg: DLRMConfig,
+    sys: SystemConfig,
+    row_wise_exchange: str = "unpooled",   # "unpooled" (paper) | "partial_pool"
+) -> StepBreakdown:
+    p = _payloads(cfg, sys)
+    n = sys.n_chips
+    bd = StepBreakdown(sys.name, cfg.name, "inference")
+
+    bd.t_idx_a2a = collective_time(
+        CollectiveOp.ALL_TO_ALL, p["indices"], n, sys.a2a).total_s
+    bd.t_lookup = p["lookup_bytes"] / sys.mem.random_access_bytes_per_s(
+        cfg.embed_dim * sys.elem_bytes)
+
+    if cfg.sharding == "table_wise":
+        bd.t_emb_exchange = collective_time(
+            CollectiveOp.ALL_TO_ALL, p["pooled"], n, sys.a2a).total_s
+    elif row_wise_exchange == "unpooled":      # paper-faithful full sharding
+        bd.t_emb_exchange = collective_time(
+            CollectiveOp.ALL_TO_ALL, p["unpooled"], n, sys.a2a).total_s
+    else:                                      # beyond-paper: partial pooling
+        bd.t_emb_exchange = collective_time(
+            CollectiveOp.REDUCE_SCATTER, p["partial_pool"], n, sys.a2a).total_s
+
+    bd.t_dense_fwd = (cfg.flops_per_sample() * cfg.batch_size / n
+                      / sys.compute_flops)
+    bd.t_fwd = bd.t_idx_a2a + max(bd.t_lookup, bd.t_emb_exchange, bd.t_dense_fwd)
+    bd.t_step = bd.t_fwd
+    return bd
+
+
+def training_breakdown(
+    cfg: DLRMConfig,
+    sys: SystemConfig,
+    row_wise_exchange: str = "unpooled",
+    overlap_allreduce: bool = True,
+) -> StepBreakdown:
+    p = _payloads(cfg, sys)
+    n = sys.n_chips
+    bd = inference_breakdown(cfg, sys, row_wise_exchange)
+    bd.mode = "training"
+
+    # backward dense compute ~ 2x forward FLOPs (dgrad + wgrad)
+    bd.t_bwd_compute = 2.0 * bd.t_dense_fwd
+    bd.t_dense_allreduce = collective_time(
+        CollectiveOp.ALL_REDUCE, p["dense_grad"], n, sys.allreduce).total_s
+
+    # SPARSE UPDT phase (paper Fig. 12b): pooled-grad exchange + row writes.
+    if cfg.sharding == "table_wise":
+        bd.t_grad_exchange = collective_time(
+            CollectiveOp.ALL_TO_ALL, p["pooled"], n, sys.a2a).total_s
+    else:
+        # Alg. 2: all-gather of pooled grads so every row owner sees the
+        # full batch's gradients.
+        bd.t_grad_exchange = collective_time(
+            CollectiveOp.ALL_GATHER, p["pooled_all"], n, sys.a2a).total_s
+    # Originally-looked-up rows are buffered on-chip (paper Sec. V-B), so the
+    # update is a write-only stream of B*T*L/n rows.
+    bd.t_row_write = p["lookup_bytes"] / sys.mem.random_write_bytes_per_s(
+        cfg.embed_dim * sys.elem_bytes)
+
+    ar_phase = (max(bd.t_dense_allreduce, bd.t_bwd_compute) if overlap_allreduce
+                else bd.t_dense_allreduce + bd.t_bwd_compute)
+    bd.t_step = bd.t_fwd + ar_phase + bd.t_grad_exchange + bd.t_row_write
+    return bd
+
+
+def breakdown(cfg: DLRMConfig, sys: SystemConfig, mode: str,
+              row_wise_exchange: str = "unpooled") -> StepBreakdown:
+    if mode == "inference":
+        return inference_breakdown(cfg, sys, row_wise_exchange)
+    if mode == "training":
+        return training_breakdown(cfg, sys, row_wise_exchange)
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# Sweeps (paper Figs. 8-13)
+# ---------------------------------------------------------------------------
+LATENCY_GRID_US: Tuple[float, ...] = (0.5, 1.0, 2.0, 4.0, 6.0, 8.0, 10.0)
+BANDWIDTH_GRID_GBS: Tuple[float, ...] = (100.0, 200.0, 400.0, 600.0, 800.0, 1000.0)
+
+
+def cc_sweep(
+    cfg: DLRMConfig,
+    mode: str,
+    latencies_us: Iterable[float] = LATENCY_GRID_US,
+    bandwidths_gbs: Iterable[float] = BANDWIDTH_GRID_GBS,
+    n_chips: int = 8,
+    row_wise_exchange: str = "unpooled",
+) -> List[Dict[str, float]]:
+    """Paper Figs. 8 (inference) / 11 (training): QPS over the CC grid."""
+    rows = []
+    for lat in latencies_us:
+        for bw in bandwidths_gbs:
+            sys = sweep_system(lat * 1e-6, bw * 1e9, n_chips)
+            bd = breakdown(cfg, sys, mode, row_wise_exchange)
+            rows.append({
+                "latency_us": lat, "bandwidth_gbs": bw, "qps": bd.qps,
+                "t_step_us": bd.t_step * 1e6, "mem_util": bd.mem_util,
+                **{f"frac_{k}": v for k, v in bd.phase_fractions().items()
+                   if mode == "training"},
+            })
+    return rows
+
+
+def latency_sensitivity(cfg: DLRMConfig, mode: str = "inference",
+                        bandwidth_gbs: float = 1000.0,
+                        n_chips: int = 8) -> Dict[str, float]:
+    """Paper Fig. 9: QPS drop from best (0.5 us) to worst (10 us) latency."""
+    best = breakdown(cfg, sweep_system(0.5e-6, bandwidth_gbs * 1e9, n_chips), mode)
+    worst = breakdown(cfg, sweep_system(10e-6, bandwidth_gbs * 1e9, n_chips), mode)
+    return {"qps_best": best.qps, "qps_worst": worst.qps,
+            "drop": best.qps / worst.qps}
+
+
+def sharding_penalty(cfg_unshard: DLRMConfig, cfg_shard: DLRMConfig,
+                     latency_us: float, bandwidth_gbs: float,
+                     mode: str = "inference", n_chips: int = 8,
+                     row_wise_exchange: str = "unpooled") -> float:
+    """Paper Fig. 10: QPS(unsharded) / QPS(sharded) at one CC point."""
+    sys = sweep_system(latency_us * 1e-6, bandwidth_gbs * 1e9, n_chips)
+    u = breakdown(cfg_unshard, sys, mode)
+    s = breakdown(cfg_shard, sys, mode, row_wise_exchange)
+    return u.qps / s.qps
+
+
+# ---------------------------------------------------------------------------
+# Paper Tables XVI / XVII reference values (for validation + benchmarks)
+# ---------------------------------------------------------------------------
+PAPER_TABLE_XVI = {  # inference: (RecSpeed QPS, mem util, DGX-2 QPS, speedup)
+    "dlrm-rm2-small-unsharded": (300e3, 0.67, 4.9e3, 62),
+    "dlrm-rm2-small-sharded": (207e3, 0.47, 4.5e3, 46),
+    "dlrm-rm2-large-unsharded": (56e3, 0.93, 4.7e3, 12),
+    "dlrm-rm2-large-sharded": (30e3, 0.50, 2.1e3, 14),
+}
+PAPER_TABLE_XVII = {  # training: (RecSpeed QPS, allred frac, DGX-2 QPS, speedup)
+    "dlrm-rm2-small-unsharded": (99e3, 0.33, 2.2e3, 45),
+    "dlrm-rm2-small-sharded": (83e3, 0.28, 2.1e3, 39),
+    "dlrm-rm2-large-unsharded": (25e3, 0.09, 2.0e3, 12),
+    "dlrm-rm2-large-sharded": (16e3, 0.06, 1.2e3, 13),
+}

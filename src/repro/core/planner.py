@@ -1,0 +1,146 @@
+"""RecSpeed planner — the paper's analysis operationalized as a feature.
+
+The paper's conclusion is not just "build different HW"; it is that the
+OPTIMAL DISTRIBUTION of a recommender model is a function of measurable HW
+parameters (CC latency/bandwidth, random-access memory rate) and model
+parameters (batch, embedding size, lookups, table sizes). This module makes
+that decision automatically:
+
+  plan = plan_dlrm(cfg, system)          # -> ShardingPlan
+
+chooses, per the generalized-roofline perf model (core/perf_model.py):
+  * sharding mode   : table_wise vs row_wise (the paper's two extremes),
+  * exchange mode   : paper-faithful "unpooled" vs beyond-paper
+                      "partial_pool" reduce-scatter,
+  * table placement : hot tables -> fast memory tier ("HBM-like": replicated
+                      or table-wise near compute), cold -> bulk tier
+                      (row-sharded across the mesh) — the TPU adaptation of
+                      the paper's hybrid HBM+DDR4 memory (DESIGN.md §1).
+
+The hot/cold split takes per-table access frequencies (from data stats or a
+profile pass) and greedily fills the fast tier by access-per-byte density —
+the same static-allocation policy the paper argues for over caching
+(Sec. VII-A, Knights-Landing lesson).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import DLRMConfig
+from repro.core.perf_model import SystemConfig, breakdown
+
+
+@dataclass(frozen=True)
+class TablePlacement:
+    table_id: int
+    tier: str              # "fast" | "bulk"
+    mode: str              # "table_wise" | "row_wise"
+    owner: Optional[int]   # processor id for table_wise; None for row_wise
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    config: str
+    mode: str                        # chosen global mode
+    exchange: str                    # "unpooled" | "partial_pool"
+    qps_table_wise: float
+    qps_row_wise_unpooled: float
+    qps_row_wise_partial: float
+    placements: Tuple[TablePlacement, ...] = ()
+    fast_bytes_used: int = 0
+    bulk_bytes_used: int = 0
+
+    @property
+    def predicted_qps(self) -> float:
+        return {
+            ("table_wise", "unpooled"): self.qps_table_wise,
+            ("table_wise", "partial_pool"): self.qps_table_wise,
+            ("row_wise", "unpooled"): self.qps_row_wise_unpooled,
+            ("row_wise", "partial_pool"): self.qps_row_wise_partial,
+        }[(self.mode, self.exchange)]
+
+
+def plan_dlrm(cfg: DLRMConfig, system: SystemConfig, mode: str = "inference",
+              allow_partial_pool: bool = True) -> ShardingPlan:
+    """Pick the sharding/exchange combination the perf model says is fastest.
+
+    The paper's two extremes are evaluated faithfully; the beyond-paper
+    partial-pool exchange is considered only when `allow_partial_pool`.
+    """
+    tw = breakdown(replace(cfg, sharding="table_wise"), system, mode)
+    rw_u = breakdown(replace(cfg, sharding="row_wise"), system, mode,
+                     row_wise_exchange="unpooled")
+    rw_p = breakdown(replace(cfg, sharding="row_wise"), system, mode,
+                     row_wise_exchange="partial_pool")
+
+    candidates = {("table_wise", "unpooled"): tw.qps,
+                  ("row_wise", "unpooled"): rw_u.qps}
+    if allow_partial_pool:
+        candidates[("row_wise", "partial_pool")] = rw_p.qps
+    (best_mode, best_ex), _ = max(candidates.items(), key=lambda kv: kv[1])
+    return ShardingPlan(
+        config=cfg.name, mode=best_mode, exchange=best_ex,
+        qps_table_wise=tw.qps, qps_row_wise_unpooled=rw_u.qps,
+        qps_row_wise_partial=rw_p.qps)
+
+
+def place_tables(
+    cfg: DLRMConfig,
+    access_freq: Sequence[float],
+    fast_capacity_bytes: int,
+    bulk_capacity_bytes: int,
+    n_chips: int,
+    table_bytes: Optional[Sequence[int]] = None,
+) -> Tuple[List[TablePlacement], int, int]:
+    """Greedy hot/cold placement by access density (accesses per byte).
+
+    Hot tables go to the fast tier table-wise (whole table near one
+    processor's fast memory, pooled-row exchange only); cold tables are
+    row-sharded across the bulk tier. Mirrors the paper's static
+    HBM-vs-DDR4 allocation argument.
+    """
+    t_bytes = list(table_bytes) if table_bytes is not None else [
+        cfg.rows_per_table * cfg.embed_dim * 2] * cfg.num_tables
+    assert len(access_freq) == cfg.num_tables == len(t_bytes)
+
+    density = np.asarray(access_freq, dtype=np.float64) / np.maximum(t_bytes, 1)
+    order = np.argsort(-density)
+
+    placements: List[Optional[TablePlacement]] = [None] * cfg.num_tables
+    fast_used = bulk_used = 0
+    owner_rr = 0
+    # fast tier budget is per-chip; a table_wise table occupies one chip's fast mem
+    fast_left = [fast_capacity_bytes] * n_chips
+    for t in order:
+        t = int(t)
+        placed = False
+        # try fast tier: least-loaded chip that fits
+        chip = int(np.argmax(fast_left))
+        if fast_left[chip] >= t_bytes[t]:
+            fast_left[chip] -= t_bytes[t]
+            fast_used += t_bytes[t]
+            placements[t] = TablePlacement(t, "fast", "table_wise", chip)
+            placed = True
+        if not placed:
+            bulk_used += t_bytes[t]
+            placements[t] = TablePlacement(t, "bulk", "row_wise", None)
+        owner_rr += 1
+    assert bulk_used <= bulk_capacity_bytes * n_chips, (
+        f"model does not fit: bulk needs {bulk_used}, "
+        f"capacity {bulk_capacity_bytes * n_chips}")
+    return [p for p in placements if p is not None], fast_used, bulk_used
+
+
+def plan_with_placement(cfg: DLRMConfig, system: SystemConfig,
+                        access_freq: Sequence[float],
+                        fast_capacity_bytes: int, bulk_capacity_bytes: int,
+                        mode: str = "inference") -> ShardingPlan:
+    base = plan_dlrm(cfg, system, mode)
+    placements, fast_used, bulk_used = place_tables(
+        cfg, access_freq, fast_capacity_bytes, bulk_capacity_bytes,
+        system.n_chips)
+    return replace(base, placements=tuple(placements),
+                   fast_bytes_used=fast_used, bulk_bytes_used=bulk_used)

@@ -1,0 +1,56 @@
+"""Synthetic LM token pipeline (same stateless step-indexed contract as the
+recsys pipeline).
+
+Tokens follow a planted bigram chain so cross-entropy has learnable
+structure: token t+1 = hash(token t) with probability q, else uniform.
+A model that learns the chain drops below the uniform-entropy floor —
+the loss-decreases integration test keys off that.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def make_lm_batch(cfg: ModelConfig, step: int, seed: int = 0,
+                  batch: int = 8, seq: int = 128,
+                  chain_prob: float = 0.8) -> Dict[str, jax.Array]:
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k0, kc, ku = jax.random.split(key, 3)
+    V = cfg.vocab_size
+
+    first = jax.random.randint(k0, (batch,), 0, V)
+    use_chain = jax.random.bernoulli(kc, chain_prob, (batch, seq))
+    uniform = jax.random.randint(ku, (batch, seq), 0, V)
+
+    def step_fn(tok, inp):
+        chain, unif = inp
+        nxt = ((tok.astype(jnp.uint32) * jnp.uint32(1103515245) + 12345)
+               % jnp.uint32(V)).astype(jnp.int32)
+        tok = jnp.where(chain, nxt, unif)
+        return tok, tok
+
+    _, toks = jax.lax.scan(step_fn, first,
+                           (use_chain.swapaxes(0, 1), uniform.swapaxes(0, 1)))
+    tokens = toks.swapaxes(0, 1)                       # (B, T)
+    out = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+    if cfg.frontend is not None and not cfg.is_encoder_decoder:
+        out["frontend_embeds"] = jnp.zeros(
+            (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.is_encoder_decoder:
+        out["encoder_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 99),
+            (batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32) * 0.02
+    return out
+
+
+def lm_batch_iterator(cfg: ModelConfig, seed: int = 0, start_step: int = 0,
+                      batch: int = 8, seq: int = 128) -> Iterator[Dict[str, jax.Array]]:
+    step = start_step
+    while True:
+        yield make_lm_batch(cfg, step, seed, batch, seq)
+        step += 1

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: embedding-bag (gather + sum-pool) — THE DLRM hot spot.
+
+Paper context (Sec. IV-D-2): embedding lookups are scattered 64-256 B reads
+with no spatial locality; throughput is bound by the memory system's random
+access rate, not FLOPs. The TPU-native adaptation (DESIGN.md) is a
+*scalar-prefetch gather*: lookup indices are prefetched into SMEM before the
+kernel body runs, so each grid step's BlockSpec ``index_map`` can select
+WHICH table row the next DMA brings HBM→VMEM. The DMA engine then pipelines
+row fetches back-to-back — the structural analogue of the paper's
+"near-memory pooling" (rows are summed in VMEM; only the pooled vector is
+ever written back / crosses ICI).
+
+Grid layout: ``(B, T, L)`` — one looked-up row per step, innermost over L so
+the (1, 1, d) output block stays resident in VMEM while L rows accumulate
+into it (Pallas keeps an output block live across consecutive grid steps
+that map to the same block).
+
+Alignment note: the natural TPU lane width is 128; d=32 (RM2-small, 64 B
+rows) under-fills a lane vector exactly as 64 B reads under-fill a DRAM
+burst — the kernel is still correct, and the ``memsys`` model quantifies the
+efficiency loss on the DRAM side.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _embedding_bag_kernel(idx_ref, row_ref, out_ref):
+    """One grid step: accumulate one (1, 1, d) row into the output block."""
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += row_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_pallas(tables: jax.Array, indices: jax.Array,
+                         *, interpret: bool = True) -> jax.Array:
+    """tables (T, R, d) any float dtype; indices (B, T, L) int32 -> (B, T, d) fp32.
+
+    ``interpret=True`` executes the kernel body in Python on CPU (validation
+    mode); on TPU pass ``interpret=False``.
+    """
+    T, R, d = tables.shape
+    B, T2, L = indices.shape
+    assert T == T2, (tables.shape, indices.shape)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, T, L),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, t, l, idx: (t, idx[b, t, l], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, t, l, idx: (b, t, 0)),
+    )
+    return pl.pallas_call(
+        _embedding_bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, d), jnp.float32),
+        interpret=interpret,
+    )(indices, tables)
+
+
+# ---------------------------------------------------------------------------
+# Blocked variant: pool a whole L-block per grid step (fewer, larger DMAs).
+# The row gather becomes a VMEM-local take over an L-row scratch strip the
+# scalar-prefetched indices selected. Used when L is large and rows are
+# small (RM2: L=80, 64 B rows) so per-row DMA issue overhead dominates.
+# ---------------------------------------------------------------------------
+def _embedding_bag_rowblock_kernel(idx_ref, rows_ref, out_ref, *, lblk: int):
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # rows_ref: (1, lblk, d) — lblk rows DMA'd this step, already selected by
+    # the index_map; sum them locally (associativity of sum pooling).
+    out_ref[...] += rows_ref[...].sum(axis=1, keepdims=True).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("lblk", "interpret"))
+def embedding_bag_pallas_blocked(tables: jax.Array, indices: jax.Array,
+                                 *, lblk: int = 8, interpret: bool = True
+                                 ) -> jax.Array:
+    """Variant that fetches ``lblk`` CONSECUTIVE-SLOT rows per DMA.
+
+    Correct only when lookups within each L-block hit consecutive table rows
+    (sorted/batched index streams); used as the fast path by the planner when
+    the index stream is post-sorted. For arbitrary streams use
+    ``embedding_bag_pallas``.
+    """
+    T, R, d = tables.shape
+    B, T2, L = indices.shape
+    assert L % lblk == 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, T, L // lblk),
+        in_specs=[
+            pl.BlockSpec((1, lblk, d),
+                         lambda b, t, l, idx: (t, idx[b, t, l * lblk] // lblk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, t, l, idx: (b, t, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_embedding_bag_rowblock_kernel, lblk=lblk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, d), jnp.float32),
+        interpret=interpret,
+    )(indices, tables)

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: blockwise (flash) attention with GQA + sliding window.
+
+Used by the LM substrate for train/prefill so no (T×S) score tensor ever
+exists in HBM. Online-softmax state (m, l, acc) persists in VMEM scratch
+across the innermost (KV-block) grid axis.
+
+Grid: (B, Hq, nq, nk) — nk innermost. Blocks:
+  q   (1, 1, bq, hd)   indexed (b, h, iq)
+  k/v (1, 1, bk, hd)   indexed (b, h // G, ik)      <- GQA via index_map
+  out (1, 1, bq, hd)   indexed (b, h, iq), written on the last nk step
+
+Causality/window masking is computed from absolute positions derived from
+program_ids — no mask tensors are materialized. KV blocks entirely in the
+masked-out region are skipped with pl.when (DMA still issues; the XLA TPU
+scheduler elides fully-dead steps when the grid is trimmed — the wrapper
+trims the causal upper triangle by limiting nk per iq where possible).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, seq_k: int):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = pl.program_id(2) * block_q
+    k_start = ik * block_k
+
+    # Skip KV blocks that are fully masked (strictly future for causal; or
+    # strictly outside the sliding window).
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window is not None:
+        run = jnp.logical_and(run, k_start + block_k - 1 >= q_start - window + 1) \
+            if causal else run
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)               # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = kpos < seq_k                                  # padding mask
+        if causal:
+            ok &= kpos <= qpos
+        if window is not None:
+            ok &= qpos - kpos < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           *, causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q (B, T, Hq, hd); k, v (B, S, Hkv, hd) -> (B, T, Hq, hd)."""
+    B, T, Hq, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, T)
+    block_k = min(block_k, S)
+    Tp = ((T + block_q - 1) // block_q) * block_q
+    Sp = ((S + block_k - 1) // block_k) * block_k
+    qt = jnp.moveaxis(q, 2, 1)                             # (B, Hq, T, hd)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if Tp != T:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    if Sp != S:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+
+    grid = (B, Hq, Tp // block_q, Sp // block_k)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, block_q=block_q, block_k=block_k,
+                          seq_k=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Tp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)[:, :T]

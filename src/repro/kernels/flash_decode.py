@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a KV cache.
+
+The `decode_32k` / `long_500k` shape cells' hot spot: one query token
+attending to a seq_len-deep cache. Memory-bound (the whole KV cache streams
+HBM→VMEM once), so the kernel's job is to keep the stream dense and avoid
+materializing (Hq, S) scores in HBM.
+
+Grid: (B, nk) — KV blocks innermost; all Hq heads are processed per step
+(q is tiny: Hq×hd ≤ 96×128×4B = 48 KB « VMEM). Online-softmax scratch
+(m, l, acc) carries across KV blocks; `lengths` masks the valid cache
+prefix so one compiled kernel serves any fill level.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, block_k: int, groups: int):
+    ik = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid_len = len_ref[0]
+    k_start = ik * block_k
+
+    @pl.when(k_start < valid_len)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                  # (Hq, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, Hkv, hd)
+        v = v_ref[0].astype(jnp.float32)
+        Hq, hd = q.shape
+        bk, Hkv, _ = k.shape
+        qg = q.reshape(Hkv, groups, hd)
+        # scores (Hkv, G, bk)
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bk), 2)
+        s = jnp.where(kpos < valid_len, s, NEG_INF)
+
+        m_prev = m_ref[...]                                # (Hkv, G)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        # acc (Hkv, G, hd) += p (Hkv, G, bk) @ v (bk, Hkv, hd)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        Hkv, G, hd = acc_ref.shape
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = out.reshape(Hkv * G, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode_pallas(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                        lengths: jax.Array, *, block_k: int = 256,
+                        interpret: bool = True) -> jax.Array:
+    """q (B, Hq, hd); caches (B, S, Hkv, hd); lengths (B,) -> (B, Hq, hd)."""
+    B, Hq, hd = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    block_k = min(block_k, S)
+    Sp = ((S + block_k - 1) // block_k) * block_k
+    if Sp != S:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Sp // block_k),
+        in_specs=[
+            pl.BlockSpec((1, Hq, hd), lambda b, ik, lens: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, Hkv, hd), lambda b, ik, lens: (b, ik, 0, 0)),
+            pl.BlockSpec((1, block_k, Hkv, hd), lambda b, ik, lens: (b, ik, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, hd), lambda b, ik, lens: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, G), jnp.float32),
+            pltpu.VMEM((Hkv, G), jnp.float32),
+            pltpu.VMEM((Hkv, G, hd), jnp.float32),
+        ],
+    )
+    # NOTE: lengths enters as the scalar-prefetch operand, so the per-batch
+    # valid length is readable in SMEM before each grid step; but it is also
+    # blocked per-b via len_ref in the kernel: we slice it there.
+
+    def kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        b = pl.program_id(0)
+        _decode_kernel(lens_ref.at[pl.ds(b, 1)], q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref,
+                       scale=scale, block_k=block_k, groups=G)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k_cache, v_cache)

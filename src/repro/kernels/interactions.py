@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: FM feature-interactions bmm (paper Sec. III-D).
+
+Computes F = A·Aᵀ per sample where A = concat([bot_out, pooled]) is
+(s+1, d). The bmm is DLRM's only MXU-shaped dense hot spot outside the MLPs;
+RM2 has s+1 = 41, d ∈ {32, 128} — tiny matrices, so the win on TPU comes
+from batching many samples per grid step so the MXU sees a
+(bb·s1, d) × (d, s1) contraction instead of 41×32 crumbs.
+
+Block layout: grid over batch blocks; per step the (bb, s1, d) activation
+block lives in VMEM, the kernel computes (bb, s1, s1) with fp32 accumulation
+on the MXU. The strict-lower-triangle extraction (a static gather) happens
+outside — it is a data-movement op, not compute.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _interactions_kernel(a_ref, out_ref):
+    a = a_ref[...].astype(jnp.float32)            # (bb, s1, d)
+    out_ref[...] = jax.lax.dot_general(
+        a, a, (((2,), (2,)), ((0,), (0,))),       # batch dim 0, contract d
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def interactions_pallas(bot_out: jax.Array, pooled: jax.Array,
+                        *, block_b: int = 64, interpret: bool = True
+                        ) -> jax.Array:
+    """bot_out (B, d), pooled (B, T, d) -> (B, d + (T+1)T/2) fp32."""
+    B, T, d = pooled.shape
+    s1 = T + 1
+    a = jnp.concatenate([bot_out[:, None, :], pooled], axis=1)  # (B, s1, d)
+
+    block_b = min(block_b, B)
+    pad = (-B) % block_b
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0), (0, 0)))
+    Bp = a.shape[0]
+
+    f = pl.pallas_call(
+        _interactions_kernel,
+        grid=(Bp // block_b,),
+        in_specs=[pl.BlockSpec((block_b, s1, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_b, s1, s1), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, s1, s1), jnp.float32),
+        interpret=interpret,
+    )(a)[:B]
+
+    li, lj = jnp.tril_indices(s1, k=-1)
+    return jnp.concatenate([bot_out.astype(jnp.float32), f[:, li, lj]], axis=1)

@@ -1,0 +1,65 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the compiled kernel runs natively
+(``interpret=False``); everywhere else the kernel body executes in
+interpret mode (Python on CPU) so correctness is validated on any host.
+Set ``REPRO_FORCE_REF=1`` to bypass Pallas entirely (pure-jnp oracles) —
+useful for bisecting kernel bugs and for platforms without Pallas support.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.interactions import interactions_pallas
+
+
+def _use_ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def embedding_bag(tables: jax.Array, indices: jax.Array) -> jax.Array:
+    """(T, R, d) × (B, T, L) -> (B, T, d) pooled, fp32."""
+    if _use_ref():
+        return ref.embedding_bag_ref(tables, indices)
+    return embedding_bag_pallas(tables, indices, interpret=_interpret())
+
+
+def interactions(bot_out: jax.Array, pooled: jax.Array,
+                 block_b: int = 64) -> jax.Array:
+    """(B, d) × (B, T, d) -> (B, d + (T+1)T/2) fp32."""
+    if _use_ref():
+        return ref.interactions_ref(bot_out, pooled)
+    return interactions_pallas(bot_out, pooled, block_b=block_b,
+                               interpret=_interpret())
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """(B,T,Hq,hd) × (B,S,Hkv,hd)² -> (B,T,Hq,hd)."""
+    if _use_ref():
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=_interpret())
+
+
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 lengths: jax.Array, block_k: int = 256) -> jax.Array:
+    """(B,Hq,hd) × (B,S,Hkv,hd)² × (B,) -> (B,Hq,hd)."""
+    if _use_ref():
+        return ref.flash_decode_ref(q, k_cache, v_cache, lengths)
+    return flash_decode_pallas(q, k_cache, v_cache, lengths, block_k=block_k,
+                               interpret=_interpret())

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` mirrors its kernel's exact signature and semantics; kernel
+tests sweep shapes/dtypes asserting allclose against these.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(tables: jax.Array, indices: jax.Array) -> jax.Array:
+    """tables (T, R, d), indices (B, T, L) -> pooled (B, T, d) fp32."""
+    def one_table(tab, idx):                   # (R, d), (B, L)
+        return jnp.take(tab, idx, axis=0).astype(jnp.float32).sum(axis=1)
+    return jax.vmap(one_table, in_axes=(0, 1), out_axes=1)(tables, indices)
+
+
+def interactions_ref(bot_out: jax.Array, pooled: jax.Array) -> jax.Array:
+    """FM pairwise dot products (paper Sec. III-D), strict lower triangle,
+    concatenated after bot_out. bot_out (B, d), pooled (B, T, d)
+    -> (B, d + (T+1)T/2) fp32."""
+    B, T, d = pooled.shape
+    a = jnp.concatenate([bot_out[:, None, :], pooled], axis=1).astype(jnp.float32)
+    f = jnp.einsum("bid,bjd->bij", a, a)
+    li, lj = jnp.tril_indices(T + 1, k=-1)
+    return jnp.concatenate([bot_out.astype(jnp.float32), f[:, li, lj]], axis=1)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """Naive softmax attention with GQA. q (B, T, Hq, hd), k/v (B, S, Hkv, hd)
+    -> (B, T, Hq, hd) fp32 accumulation, cast back to q.dtype."""
+    B, T, Hq, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qr = q.reshape(B, T, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bthgd,bshd->bhgts", qr, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    ok = jnp.ones((T, S), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= qpos - kpos < window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", p, v.astype(jnp.float32))
+    return out.reshape(B, T, Hq, hd).astype(q.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     lengths: jax.Array) -> jax.Array:
+    """Single-token GQA attention vs a cache. q (B, Hq, hd),
+    caches (B, S, Hkv, hd), lengths (B,) valid-prefix lengths
+    -> (B, Hq, hd)."""
+    B, Hq, hd = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qr = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qr, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    ok = jnp.arange(S)[None, :] < lengths[:, None]              # (B, S)
+    s = jnp.where(ok[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)

@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell against placeholder devices, prove the distribution config is coherent,
+and extract the roofline terms from the compiled artifact.
+
+MUST be imported before any other jax-touching module — the XLA_FLAGS line
+above runs before jax locks the device count (that is why it precedes even
+the module docstring's imports).
+
+Usage:
+  python -m repro.launch.dryrun --list                 # print cell ids
+  python -m repro.launch.dryrun --cell <id>            # run one cell
+  python -m repro.launch.dryrun                        # run everything
+  python -m repro.launch.dryrun --mesh single          # one mesh only
+
+Cell ids:  lm:<arch>:<shape>:<single|multi>
+           dlrm:<config>:<train|serve>:<single|multi>
+
+Outputs: reports/dryrun/<cell-id>.json with memory analysis, cost analysis,
+collective summary (from HLO), and the three roofline terms.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.configs.base import DLRMConfig, ModelConfig, ShapeConfig, shape_applicable
+from repro.configs.registry import ARCHS, DLRM_CONFIGS, LM_SHAPES
+from repro.launch import hlo_analysis, steps
+from repro.launch.mesh import make_production_mesh
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+# DLRM dry-run row count per table: paper assumes the model fills memory;
+# we size tables so the FULL-SHARDED model occupies ~1.4 TB (≈ RM2-scale,
+# ~0.3 GB/chip on 512 chips) without exploding CPU-compile memory.
+DLRM_DRYRUN_ROWS = 2 ** 22
+
+
+def all_cell_ids() -> List[str]:
+    ids = []
+    for arch in ARCHS.values():
+        for shape in LM_SHAPES:
+            ok, _ = shape_applicable(arch, shape)
+            if not ok:
+                continue
+            for mesh in ("single", "multi"):
+                ids.append(f"lm:{arch.name}:{shape.name}:{mesh}")
+    for cfg in DLRM_CONFIGS.values():
+        for mode in ("train", "serve"):
+            for mesh in ("single", "multi"):
+                ids.append(f"dlrm:{cfg.name}:{mode}:{mesh}")
+    return ids
+
+
+def model_flops_estimate(kind: str, cfg, shape=None) -> float:
+    """MODEL_FLOPS: 6·N·D train / 2·N·D inference (N = active params)."""
+    if isinstance(cfg, DLRMConfig):
+        per_sample = cfg.flops_per_sample()
+        b = shape  # here `shape` carries the global batch
+        return (3.0 if kind == "train" else 1.0) * per_sample * b
+    n_active = cfg.param_count(active_only=True)
+    if kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch          # decode: 1 token
+
+
+def run_cell(cell_id: str, skip_hlo: bool = False,
+             dlrm_exchange: str = "unpooled") -> Dict:
+    kind, *rest = cell_id.split(":")
+    t0 = time.time()
+    record: Dict = {"cell": cell_id, "status": "ok"}
+
+    if kind == "lm":
+        arch_name, shape_name, mesh_kind = rest
+        cfg = ARCHS[arch_name]
+        shape = next(s for s in LM_SHAPES if s.name == shape_name)
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        with mesh:
+            cell = steps.build_lm_cell(cfg, shape, mesh)
+            lowered = cell.lower()
+            compiled = lowered.compile()
+        record["model_flops"] = model_flops_estimate(shape.kind, cfg, shape)
+    else:
+        cfg_name, mode, mesh_kind = rest
+        cfg = DLRM_CONFIGS[cfg_name]
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        with mesh:
+            cell = steps.build_dlrm_cell(cfg, mode, mesh,
+                                         row_wise_exchange=dlrm_exchange,
+                                         rows_per_table=DLRM_DRYRUN_ROWS)
+            lowered = cell.lower()
+            compiled = lowered.compile()
+        b_global = cell.args[2].shape[0]
+        record["model_flops"] = model_flops_estimate(mode, cfg, b_global)
+        record["global_batch"] = b_global
+
+    n_chips = int(mesh.devices.size)
+    record["n_chips"] = n_chips
+    record["mesh_shape"] = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    # --- memory analysis (proves it fits) ---
+    ma = compiled.memory_analysis()
+    record["memory"] = {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_per_device_bytes": (ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+    }
+
+    # --- cost analysis (FLOPs / HBM bytes) ---
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+    except Exception:
+        ca = {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    record["cost"] = {k: float(v) for k, v in ca.items()
+                      if isinstance(v, (int, float)) and (
+                          "flops" in k or "bytes" in k or "utilization" in k.lower())}
+    record["cost"]["flops"] = flops
+    record["cost"]["bytes_accessed"] = bytes_accessed
+
+    # --- loop-aware structural analysis from HLO ---
+    # (cost_analysis counts while bodies once; the analyzer expands them by
+    # their known_trip_count, so IT is the roofline source of truth.)
+    if not skip_hlo:
+        hlo = compiled.as_text()
+        record["hlo_chars"] = len(hlo)
+        a = hlo_analysis.analyze(hlo)
+        record["hlo_analysis"] = a
+        an_flops = a["flops_per_chip"]
+        an_bytes = a["traffic_bytes_per_chip"]
+        cbytes = a["collective_bytes_per_chip"]
+        ccount = a.get("collective_count", 0.0)
+    else:
+        an_flops, an_bytes, cbytes, ccount = flops, bytes_accessed, 0.0, 0.0
+
+    # --- roofline terms ---
+    terms = hlo_analysis.roofline_terms(an_flops, an_bytes, cbytes, ccount)
+    record["roofline"] = terms
+    mf = record["model_flops"]
+    record["roofline"]["model_flops"] = mf
+    per_chip_model = mf / n_chips
+    record["roofline"]["useful_flops_ratio"] = (
+        per_chip_model / an_flops if an_flops > 0 else 0.0)
+    record["elapsed_s"] = time.time() - t0
+    return record
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--list", action="store_true")
+    p.add_argument("--cell", type=str, default=None)
+    p.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    p.add_argument("--arch", type=str, default=None)
+    p.add_argument("--out", type=str, default=REPORT_DIR)
+    p.add_argument("--skip-hlo", action="store_true")
+    p.add_argument("--dlrm-exchange", choices=["unpooled", "partial_pool"],
+                   default="unpooled",
+                   help="row-wise embedding exchange: 'unpooled' is the "
+                        "paper-faithful baseline; 'partial_pool' is the "
+                        "beyond-paper reduce-scatter of partial pools")
+    args = p.parse_args(argv)
+
+    cells = all_cell_ids()
+    if args.cell:
+        cells = [c for c in cells if c == args.cell] or [args.cell]
+    if args.mesh != "both":
+        cells = [c for c in cells if c.endswith(f":{args.mesh}")]
+    if args.arch:
+        cells = [c for c in cells if f":{args.arch}:" in c or f":{args.arch}" in c.split(":")[1]]
+
+    if args.list:
+        for c in cells:
+            print(c)
+        return 0
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for cell_id in cells:
+        out_path = os.path.join(args.out, cell_id.replace(":", "__") + ".json")
+        try:
+            rec = run_cell(cell_id, skip_hlo=args.skip_hlo,
+                           dlrm_exchange=args.dlrm_exchange)
+            r = rec["roofline"]
+            print(f"[dryrun] OK   {cell_id}: "
+                  f"mem/dev={rec['memory']['peak_per_device_bytes']/2**30:.2f}GiB "
+                  f"compute={r['t_compute_s']*1e3:.2f}ms "
+                  f"memory={r['t_memory_s']*1e3:.2f}ms "
+                  f"collective={r['t_collective_s']*1e3:.2f}ms "
+                  f"-> {r['bottleneck']}", flush=True)
+        except Exception as e:
+            failures += 1
+            rec = {"cell": cell_id, "status": "fail", "error": str(e),
+                   "traceback": traceback.format_exc()}
+            print(f"[dryrun] FAIL {cell_id}: {e}", flush=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+    print(f"[dryrun] {len(cells) - failures}/{len(cells)} cells passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Axis semantics (the paper's scale-in principle as mesh placement):
+  model : intra-pod tensor/table-parallel axis — carries the LATENCY-BOUND
+          collectives (embedding all-to-alls, TP all-reduces). 16 chips =
+          one ICI-adjacent block.
+  data  : intra-pod data/FSDP axis — per-layer param all-gathers and
+          gradient reduce-scatters (bandwidth-bound, pipelined with compute).
+  pod   : cross-pod axis (DCN/optical) — ONLY bandwidth-tolerant traffic
+          (the dense gradient all-reduce, optionally int8-compressed).
+
+Functions, not module constants: importing this module must not touch jax
+device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh for tests / elastic re-scale experiments."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: Optional[int] = None):
+    """Mesh over whatever devices exist (CPU tests: 1 or
+    --xla_force_host_platform_device_count)."""
+    n = len(jax.devices())
+    model = model or 1
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

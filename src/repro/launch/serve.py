@@ -1,0 +1,82 @@
+"""Serving launcher: batched DLRM inference under the paper's SLA model.
+
+Implements the deployment scenario of paper Sec. III-B / Fig. 3: queries of
+size B arrive, are batched, ranked by the RecSys, and the system must keep
+PPF(D_Q, P) <= C_SLA (Eq. 1). The server measures the per-query latency
+distribution and reports the P50/P90/P99 percentiles against the SLA.
+
+  PYTHONPATH=src python -m repro.launch.serve --config dlrm-rm2-small-unsharded \
+      --smoke --queries 200 --sla-ms 50
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_dlrm
+from repro.core import dlrm as dlrm_lib
+from repro.core import sharding as dsh
+from repro.data import make_recsys_batch
+from repro.launch.mesh import make_host_mesh
+
+
+def percentile(xs: List[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p))
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="dlrm-rm2-small-unsharded")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--queries", type=int, default=100)
+    ap.add_argument("--sla-ms", type=float, default=50.0,
+                    help="C_SLA (paper Eq. 1), milliseconds")
+    ap.add_argument("--sla-percentile", type=float, default=99.0)
+    ap.add_argument("--exchange", default="partial_pool")
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_dlrm(args.config)
+    if args.smoke:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh(model=args.model_axis)
+
+    serve = dsh.make_dlrm_serve_step(cfg, mesh, ("data", "model"),
+                                     args.exchange)
+    params = dlrm_lib.init_dlrm(jax.random.PRNGKey(args.seed), cfg)
+    params = dsh.shard_dlrm_params(params, cfg, mesh, ("data", "model"))
+
+    # warm up (compile)
+    b0 = make_recsys_batch(cfg, 0, args.seed)
+    serve(params, b0["dense"], b0["indices"]).block_until_ready()
+
+    lat_ms: List[float] = []
+    t_all0 = time.perf_counter()
+    for q in range(args.queries):
+        batch = make_recsys_batch(cfg, q, args.seed)
+        t0 = time.perf_counter()
+        probs = serve(params, batch["dense"], batch["indices"])
+        probs.block_until_ready()
+        lat_ms.append((time.perf_counter() - t0) * 1e3)
+    wall = time.perf_counter() - t_all0
+
+    p50, p90, p99 = (percentile(lat_ms, p) for p in (50, 90, 99))
+    ppf = percentile(lat_ms, args.sla_percentile)
+    ok = ppf <= args.sla_ms
+    qps = args.queries / wall
+    print(f"[serve] {cfg.name}: {args.queries} queries, "
+          f"QPS={qps:.1f} p50={p50:.2f}ms p90={p90:.2f}ms p99={p99:.2f}ms")
+    print(f"[serve] SLA check PPF(D_Q, {args.sla_percentile:.0f}) = "
+          f"{ppf:.2f}ms {'<=' if ok else '>'} C_SLA={args.sla_ms}ms -> "
+          f"{'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,330 @@
+"""Step builders: (jit-able fn, in/out shardings, abstract inputs) per cell.
+
+The dry-run, the trainers, and the benchmarks all consume these, so the
+distribution configuration is defined exactly once.
+
+LM cells:
+  train_4k     -> train_step(state, batch)
+  prefill_32k  -> prefill(params, batch)
+  decode_32k   -> decode(params, caches, token, pos)    [+ memory for enc-dec]
+  long_500k    -> decode with a 512k-deep cache (sub-quadratic archs only)
+
+DLRM cells (the paper's own workload):
+  {4 RM2 configs} × {train, serve}, embedding axis per sharding mode:
+    table_wise -> tables on the intra-pod `model` axis (hot/fast tier,
+                  replicated across ('pod','data') — planner's choice for
+                  latency-bound pooled exchanges);
+    row_wise   -> rows fully sharded over EVERY chip (paper's full sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DLRMConfig, ModelConfig, ShapeConfig
+from repro.core import sharding as dlrm_sharding
+from repro.models import lm, transformer as T
+from repro.models import sharding_rules as rules
+from repro.models.common import Sharder
+from repro.optim import adamw
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Abstract-input construction (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """The model-input stand-ins for one LM cell."""
+    B = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        Ttxt = shape.seq_len
+        out = {}
+        if cfg.frontend is not None and not cfg.is_encoder_decoder:
+            Ttxt = shape.seq_len - cfg.n_frontend_tokens
+            out["frontend_embeds"] = sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                         jnp.float32)
+        out["tokens"] = sds((B, Ttxt), jnp.int32)
+        out["labels"] = sds((B, Ttxt), jnp.int32)
+        if cfg.is_encoder_decoder:
+            out["encoder_embeds"] = sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                        jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        Ttxt = shape.seq_len
+        out = {}
+        if cfg.frontend is not None and not cfg.is_encoder_decoder:
+            Ttxt = shape.seq_len - cfg.n_frontend_tokens
+            out["frontend_embeds"] = sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                         jnp.float32)
+        out["tokens"] = sds((B, Ttxt), jnp.int32)
+        if cfg.is_encoder_decoder:
+            out["encoder_embeds"] = sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                        jnp.float32)
+        return out
+    # decode: one new token against a seq_len-deep cache
+    return {"token": sds((B,), jnp.int32), "pos": sds((), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig) -> Params:
+    return jax.eval_shape(
+        functools.partial(T.init_model, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    return jax.eval_shape(
+        functools.partial(T.init_cache, cfg, batch, max_len))
+
+
+def abstract_train_state(cfg: ModelConfig) -> Params:
+    params = abstract_params(cfg)
+    opt = adamw(1e-4)
+    return {
+        "params": params,
+        "opt": jax.eval_shape(opt.init, params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly
+# ---------------------------------------------------------------------------
+def _sharder(mesh: Mesh) -> Sharder:
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return Sharder(mesh, batch_axes=batch_axes, model_axes=("model",))
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh) -> Params:
+    params = abstract_params(cfg)
+    p_specs = rules.filter_specs(rules.param_specs(cfg, params), params, mesh)
+    opt = adamw(1e-4)
+    opt_abs = jax.eval_shape(opt.init, jax.eval_shape(lambda: params)
+                             if False else params)
+    # mu/nu mirror the param tree; count is replicated
+    mu_specs = p_specs
+    nu_specs = p_specs
+    state_specs = {
+        "params": p_specs,
+        "opt": type(opt_abs)(mu=mu_specs, nu=nu_specs, count=P()),
+        "step": P(),
+    }
+
+    def to_ns(s):
+        return NamedSharding(mesh, s)
+    return jax.tree_util.tree_map(to_ns, state_specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh) -> Params:
+    params = abstract_params(cfg)
+    return rules.named_shardings(cfg, params, mesh)
+
+
+def batch_shardings(batch_abs: Params, mesh: Mesh) -> Params:
+    specs = rules.batch_specs(batch_abs, mesh)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_shardings(cfg: ModelConfig, caches_abs: Params, mesh: Mesh) -> Params:
+    specs = rules.cache_specs(cfg, caches_abs, mesh)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# LM cell builders — return (fn, example_args, in_shardings, out_shardings)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CellProgram:
+    name: str
+    fn: Callable
+    args: Tuple          # abstract (or concrete) args, positionally
+    in_shardings: Tuple
+    out_shardings: Any   # may be None (infer)
+    donate_argnums: Tuple[int, ...] = ()
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*self.args)
+
+
+def build_lm_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                  remat: bool = True) -> CellProgram:
+    sharder = _sharder(mesh)
+    name = f"{cfg.name}/{shape.name}"
+    batch_abs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt = adamw(1e-4)
+        loss_fn = _make_remat_loss(cfg, sharder, remat)
+
+        def train_step(state, batch):
+            params, opt_state, step_idx = state["params"], state["opt"], state["step"]
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            updates, new_opt = opt.update(grads, opt_state, params)
+            new_params = jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+            return ({"params": new_params, "opt": new_opt, "step": step_idx + 1},
+                    {"loss": loss})
+
+        state_abs = abstract_train_state(cfg)
+        state_sh = train_state_shardings(cfg, mesh)
+        return CellProgram(
+            name, train_step, (state_abs, batch_abs),
+            in_shardings=(state_sh, batch_shardings(batch_abs, mesh)),
+            out_shardings=(state_sh, None), donate_argnums=(0,))
+
+    if shape.kind == "prefill":
+        max_len = shape.seq_len
+        prefill = lm.make_prefill_step(cfg, max_len, sharder)
+        params_abs = abstract_params(cfg)
+        caches_abs = abstract_caches(cfg, shape.global_batch, max_len)
+        return CellProgram(
+            name, prefill, (params_abs, batch_abs),
+            in_shardings=(param_shardings(cfg, mesh),
+                          batch_shardings(batch_abs, mesh)),
+            out_shardings=(cache_shardings(cfg, caches_abs, mesh), None))
+
+    # decode
+    max_len = shape.seq_len
+    decode = lm.make_decode_step(cfg, sharder)
+    params_abs = abstract_params(cfg)
+    caches_abs = abstract_caches(cfg, shape.global_batch, max_len)
+    caches_sh = cache_shardings(cfg, caches_abs, mesh)
+    tok_abs = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    args = [params_abs, caches_abs, tok_abs, pos_abs]
+    in_sh = [param_shardings(cfg, mesh), caches_sh,
+             batch_shardings(tok_abs, mesh), NamedSharding(mesh, P())]
+    if cfg.is_encoder_decoder:
+        hd = cfg.resolved_head_dim
+        U = cfg.n_layers  # cross_attn stacked over all layers
+        mem_abs = tuple(
+            jax.ShapeDtypeStruct(
+                (U, shape.global_batch, cfg.encoder_seq_len, cfg.n_kv_heads, hd),
+                jnp.bfloat16) for _ in range(2))
+        mem_spec = rules._fits(
+            mem_abs[0].shape,
+            P(None, tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+              "model", None, None),
+            dict(zip(mesh.axis_names, mesh.devices.shape)))
+        args.append(mem_abs)
+        in_sh.append((NamedSharding(mesh, mem_spec),) * 2)
+
+        def decode_encdec(params, caches, token, pos, memory_kv):
+            return decode(params, caches, token, pos, memory_kv=memory_kv)
+        fn = decode_encdec
+    else:
+        fn = decode
+    return CellProgram(name, fn, tuple(args), tuple(in_sh),
+                       out_shardings=(caches_sh, None), donate_argnums=(1,))
+
+
+def _make_remat_loss(cfg: ModelConfig, sharder: Sharder, remat: bool):
+    def loss_fn(params, batch):
+        hidden = T.forward(
+            params, cfg, batch["tokens"], sharder=sharder, remat=remat,
+            frontend_embeds=batch.get("frontend_embeds"),
+            encoder_embeds=batch.get("encoder_embeds"))
+        fe = cfg.n_frontend_tokens if (cfg.frontend and not cfg.is_encoder_decoder) else 0
+        return lm.chunked_cross_entropy(params, cfg, hidden[:, fe:, :],
+                                        batch["labels"], sharder)
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# DLRM cell builders
+# ---------------------------------------------------------------------------
+def dlrm_queries_per_step(mesh: Mesh) -> int:
+    """Queries batched per step: one per 16-chip group (the paper's system
+    granularity), so per-chip load matches the paper's per-processor load."""
+    return max(1, int(mesh.devices.size) // 16)
+
+
+def dlrm_dryrun_config(cfg: DLRMConfig, mesh: Mesh) -> DLRMConfig:
+    """Adapt an RM2 config to the mesh: table_wise pads the table count to a
+    multiple of the model axis (production padding); row_wise is unchanged."""
+    if cfg.sharding == "table_wise":
+        model = mesh.shape["model"]
+        t_pad = ((cfg.num_tables + model - 1) // model) * model
+        if t_pad != cfg.num_tables:
+            cfg = dataclasses.replace(cfg, num_tables=t_pad,
+                                      name=cfg.name + f"-pad{t_pad}")
+    return cfg
+
+
+def build_dlrm_cell(cfg: DLRMConfig, mode: str, mesh: Mesh,
+                    row_wise_exchange: str = "unpooled",
+                    rows_per_table: Optional[int] = None,
+                    table_dtype=jnp.bfloat16) -> CellProgram:
+    """mode: "train" | "serve". Sharding axes per module docstring.
+
+    table_dtype: embedding tables are bf16 by default — the paper stores all
+    parameters in fp16 (Sec. V-A), and halving the row size halves the
+    memory-roofline lookup term (the dominant term once the exchange is
+    partial-pooled)."""
+    cfg = dlrm_dryrun_config(cfg, mesh)
+    if rows_per_table is not None:
+        cfg = dataclasses.replace(cfg, rows_per_table=rows_per_table)
+    axes = mesh.axis_names
+    if cfg.sharding == "table_wise":
+        emb_axis: Any = "model"
+        dp_axes = tuple(a for a in axes if a != "model")
+    else:
+        emb_axis = tuple(axes)          # rows over every chip
+        dp_axes = ()
+
+    n_queries = dlrm_queries_per_step(mesh) * 16
+    B_global = n_queries * cfg.batch_size
+    # round to divisibility over all chips
+    n_all = int(mesh.devices.size)
+    B_global = ((B_global + n_all - 1) // n_all) * n_all
+
+    full_axes = tuple(dp_axes) + ((emb_axis,) if isinstance(emb_axis, str)
+                                  else tuple(emb_axis))
+    data_sh = NamedSharding(mesh, P(full_axes))
+    sds = jax.ShapeDtypeStruct
+    dense_abs = sds((B_global, cfg.num_dense), jnp.float32)
+    idx_abs = sds((B_global, cfg.num_tables, cfg.lookups_per_table), jnp.int32)
+    labels_abs = sds((B_global,), jnp.float32)
+
+    params_abs = jax.eval_shape(
+        functools.partial(dlrm_lib_init, cfg=cfg), jax.random.PRNGKey(0))
+    if table_dtype is not None:
+        params_abs = dict(params_abs, tables=jax.ShapeDtypeStruct(
+            params_abs["tables"].shape, table_dtype))
+    p_specs = dlrm_sharding.param_specs(cfg, emb_axis)
+    p_sh = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), p_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    name = f"{cfg.name}/{mode}"
+    if mode == "serve":
+        fn = dlrm_sharding.make_dlrm_serve_step(
+            cfg, mesh, emb_axis, row_wise_exchange, dp_axes=dp_axes)
+        return CellProgram(name, fn, (params_abs, dense_abs, idx_abs),
+                           in_shardings=(p_sh, data_sh, data_sh),
+                           out_shardings=data_sh)
+    fn = dlrm_sharding.make_dlrm_train_step(
+        cfg, mesh, emb_axis, lr=0.01, row_wise_exchange=row_wise_exchange,
+        optimizer="sgd", dp_axes=dp_axes)
+    return CellProgram(
+        name, fn, (params_abs, None, dense_abs, idx_abs, labels_abs),
+        in_shardings=(p_sh, None, data_sh, data_sh, data_sh),
+        out_shardings=(p_sh, None, NamedSharding(mesh, P())),
+        donate_argnums=(0,))
+
+
+def dlrm_lib_init(key, cfg: DLRMConfig):
+    from repro.core import dlrm as dlrm_lib
+    return dlrm_lib.init_dlrm(key, cfg)

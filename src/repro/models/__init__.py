@@ -1,0 +1,3 @@
+from repro.models.common import (  # noqa: F401
+    COMPUTE_DTYPE, NULL_SHARDER, PARAM_DTYPE, Params, Sharder, cast_compute,
+    count_params)

@@ -1,0 +1,371 @@
+"""Core transformer layers: norms, RoPE, GQA/SWA attention (blockwise prefill +
+cached decode), SwiGLU MLP, and sort-based capacity MoE.
+
+All functions are pure; params are plain dict pytrees created by the matching
+`init_*` functions. Attention never materializes a (T x T) score tensor: the
+train/prefill path is a blockwise (flash-style) online-softmax scan.
+"""
+from __future__ import annotations
+
+import math
+import os
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (COMPUTE_DTYPE, Sharder, NULL_SHARDER,
+                                 dense_init, split_keys)
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def init_rms_norm(d: int) -> jax.Array:
+    return jnp.ones((d,), dtype=jnp.float32)
+
+
+# -------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, hd); positions: (..., T). Rotates pairs (even, odd)."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., T, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+def init_attention(key: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = split_keys(key, 4)
+    p = {
+        "wq": dense_init(kq, d, cfg.n_heads * hd),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+    return p
+
+
+def _block_mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+                window: Optional[int], k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """(bq, bk) additive mask from absolute positions."""
+    diff = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(diff.shape, dtype=bool)
+    if causal:
+        ok &= diff >= 0
+    if window is not None:
+        ok &= diff < window
+    if k_valid is not None:
+        ok &= k_valid[None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_positions: jax.Array, k_positions: jax.Array,
+                        causal: bool = True, window: Optional[int] = None,
+                        block_q: int = 512, block_kv: int = 1024,
+                        k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Flash-style attention in pure JAX (no (T,S) score tensor).
+
+    q: (B, T, Hq, hd); k, v: (B, S, Hkv, hd); GQA via head grouping.
+    q_positions: (T,), k_positions: (S,) absolute positions.
+    Returns (B, T, Hq, hd). fp32 accumulation.
+    """
+    B, T, Hq, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, T)
+    block_kv = min(block_kv, S)
+    # pad T and S to block multiples
+    Tp = ((T + block_q - 1) // block_q) * block_q
+    Sp = ((S + block_kv - 1) // block_kv) * block_kv
+    if Tp != T:
+        q = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, Tp - T), constant_values=-1)
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, Sp - S), constant_values=2**30)
+        if k_valid is not None:
+            k_valid = jnp.pad(k_valid, (0, Sp - S), constant_values=False)
+    if k_valid is None:
+        k_valid = k_positions < 2**30
+
+    nq, nk = Tp // block_q, Sp // block_kv
+    # (B, nq, bq, Hkv, G, hd)
+    qb = q.reshape(B, nq, block_q, Hkv, G, hd)
+    kb = k.reshape(B, nk, block_kv, Hkv, hd)
+    vb = v.reshape(B, nk, block_kv, Hkv, hd)
+    qp = q_positions.reshape(nq, block_q)
+    kp = k_positions.reshape(nk, block_kv)
+    kvb = k_valid.reshape(nk, block_kv)
+
+    def q_block(qi, q_i, qp_i):
+        # online softmax over kv blocks
+        acc = jnp.zeros((B, block_q, Hkv, G, hd), jnp.float32)
+        m = jnp.full((B, block_q, Hkv, G), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, block_q, Hkv, G), jnp.float32)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            k_j, v_j, kp_j, kv_j = inp
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", q_i.astype(jnp.float32),
+                           k_j.astype(jnp.float32)) * scale
+            mask = _block_mask(qp_i, kp_j, causal, window, kv_j)  # (bq, bk)
+            s = s + mask[None, :, None, None, :]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p, v_j.astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc, m, l),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kp, kvb))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qb, 1, 0), qp))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Tp, Hq, hd)[:, :T]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     q_position: jax.Array, k_positions: jax.Array,
+                     window: Optional[int] = None) -> jax.Array:
+    """Single-position attention against a cache.
+
+    q: (B, 1, Hq, hd); caches: (B, S, Hkv, hd); q_position: (B,) or scalar;
+    k_positions: (B, S) absolute position of each cache slot (-1 = empty).
+    """
+    B, _, Hq, hd = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qr, k_cache.astype(jnp.float32)) * scale
+    qpos = jnp.broadcast_to(jnp.asarray(q_position).reshape(-1), (B,))
+    diff = qpos[:, None] - k_positions  # (B, S)
+    ok = (k_positions >= 0) & (diff >= 0)
+    if window is not None:
+        ok &= diff < window
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+def attention_block(p: Dict[str, jax.Array], x: jax.Array, positions: jax.Array,
+                    cfg: ModelConfig, sharder: Sharder = NULL_SHARDER,
+                    cache: Optional[Dict[str, jax.Array]] = None,
+                    cache_pos: Optional[jax.Array] = None,
+                    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    causal: bool = True, collect_kv: bool = False,
+                    ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full attention sublayer (no residual/norm).
+
+    Modes:
+      cache is None, kv_override None      -> self-attention over x (train/prefill)
+      cache given (decode)                 -> append x's kv at cache_pos, attend
+      kv_override given (cross-attention)  -> attend to provided (k, v) memory
+    Returns (out, new_cache); with collect_kv=True (prefill), new_cache is
+    {"k": (B,T,Hkv,hd), "v": …} — the post-RoPE K/V for cache seeding.
+    """
+    B, T, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(B, T, cfg.n_heads, hd)
+
+    if kv_override is None:
+        k = x @ p["wk"].astype(x.dtype)
+        v = x @ p["wv"].astype(x.dtype)
+        if "bk" in p:
+            k = k + p["bk"].astype(x.dtype)
+            v = v + p["bv"].astype(x.dtype)
+        k = k.reshape(B, T, cfg.n_kv_heads, hd)
+        v = v.reshape(B, T, cfg.n_kv_heads, hd)
+        q = apply_rope(q, positions[None, :].repeat(B, 0), cfg.rope_theta)
+        k = apply_rope(k, positions[None, :].repeat(B, 0), cfg.rope_theta)
+    else:
+        k, v = kv_override
+
+    new_cache = None
+    if cache is not None and kv_override is None:
+        # decode: write this step's k/v into the ring/linear cache
+        S = cache["k"].shape[1]
+        if cfg.sliding_window is not None and S < 2**20:
+            slot = jnp.asarray(cache_pos) % S
+        else:
+            slot = jnp.asarray(cache_pos)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=1) \
+            if False else cache["k"].at[:, slot].set(k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[:, slot].set(v[:, 0].astype(cache["v"].dtype))
+        kpos = cache["pos"].at[:, slot].set(jnp.broadcast_to(jnp.asarray(cache_pos), (B,)))
+        new_cache = {"k": k_cache, "v": v_cache, "pos": kpos}
+        out = decode_attention(q, k_cache, v_cache, cache_pos, kpos,
+                               window=cfg.sliding_window)
+    elif kv_override is not None:
+        S = k.shape[1]
+        kpos = jnp.arange(S)
+        out = blockwise_attention(q, k, v, positions, kpos, causal=False, window=None)
+    else:
+        kpos = positions
+        out = blockwise_attention(q, k, v, positions, kpos, causal=causal,
+                                  window=cfg.sliding_window)
+        if collect_kv:
+            new_cache = {"k": k, "v": v}
+
+    out = out.reshape(B, T, cfg.n_heads * hd)
+    out = sharder.act(out, sharder.batch_axes, None, sharder.model_axes)
+    return out @ p["wo"].astype(x.dtype), new_cache
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
+                         dtype=COMPUTE_DTYPE) -> Dict[str, jax.Array]:
+    """Cache for ONE attention layer. SWA uses a ring buffer of window size."""
+    S = max_len
+    if cfg.sliding_window is not None:
+        S = min(max_len, cfg.sliding_window)
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, S, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, S, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((batch, S), -1, jnp.int32),
+    }
+
+
+# -------------------------------------------------------------------- MLP
+def init_mlp(key: jax.Array, cfg: ModelConfig, d_ff: Optional[int] = None
+             ) -> Dict[str, jax.Array]:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    kg, ku, kd = split_keys(key, 3)
+    return {
+        "w_gate": dense_init(kg, d, ff),
+        "w_up": dense_init(ku, d, ff),
+        "w_down": dense_init(kd, ff, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def mlp_block(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+              sharder: Sharder = NULL_SHARDER) -> jax.Array:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    h = sharder.act(h, sharder.batch_axes, None, sharder.model_axes)
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# -------------------------------------------------------------------- MoE
+def init_moe(key: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    assert cfg.moe is not None
+    E = cfg.moe.num_experts
+    d, ff = cfg.d_model, cfg.d_ff
+    kr, kg, ku, kd = split_keys(key, 4)
+
+    def experts(k, a, b, scale=1.0):
+        keys = jax.random.split(k, E)
+        return jnp.stack([dense_init(ki, a, b, scale) for ki in keys])
+
+    return {
+        "router": dense_init(kr, d, E),
+        "w_gate": experts(kg, d, ff),
+        "w_up": experts(ku, d, ff),
+        "w_down": experts(kd, ff, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def moe_block(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+              sharder: Sharder = NULL_SHARDER) -> jax.Array:
+    """Sort-based capacity-dropping top-k MoE (tokens routed to expert buffers).
+
+    x: (B, T, d) -> (B, T, d). Expert buffers (E, C, d) are the unit that
+    expert-parallelism shards over the 'model' axis when E % |model| == 0.
+
+    Implementation selection (REPRO_MOE_IMPL env var, default "auto"):
+      global : this GSPMD global-scatter formulation (the §Perf BASELINE —
+               GSPMD cannot prove dispatch locality and gathers the full
+               token buffer; mixtral train_4k baseline: 365 GiB/dev).
+      local  : shard_map local dispatch (moe_dist.moe_block_local_dispatch)
+      ep     : expert-parallel all-to-all (moe_dist.moe_block_ep_a2a)
+      auto   : ep when E % |model| == 0 else local, when a mesh is attached.
+    """
+    assert cfg.moe is not None
+    impl = os.environ.get("REPRO_MOE_IMPL", "auto")
+    if sharder.mesh is not None and "model" in sharder.mesh.axis_names \
+            and impl != "global":
+        from repro.models import moe_dist
+        M = sharder.mesh.shape["model"]
+        if impl == "ep" or (impl == "auto" and cfg.moe.num_experts % M == 0
+                            and M > 1):
+            return moe_dist.moe_block_ep_a2a(p, x, cfg, sharder)
+        return moe_dist.moe_block_local_dispatch(p, x, cfg, sharder)
+    B, T, d = x.shape
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    N = B * T
+    xt = x.reshape(N, d)
+
+    logits = xt @ p["router"].astype(x.dtype)                # (N, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                      # (N, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(-1)                                  # (N*K,)
+    order = jnp.argsort(flat_e)                               # stable sort
+    fe_s = flat_e[order]
+    tok_s = order // K
+    slot_gate = gate.reshape(-1)[order]
+
+    # position of each routed copy within its expert's group
+    seg_start = jnp.searchsorted(fe_s, jnp.arange(E))         # (E,)
+    pos = jnp.arange(N * K) - seg_start[fe_s]
+
+    C = max(1, int(math.ceil(cfg.moe.capacity_factor * N * K / E / 8.0)) * 8)
+    keep = pos < C
+    safe_pos = jnp.where(keep, pos, 0)
+
+    gathered = jnp.where(keep[:, None], xt[tok_s], 0).astype(x.dtype)
+    buf = jnp.zeros((E, C, d), x.dtype).at[fe_s, safe_pos].add(gathered)
+    buf = sharder.act(buf, sharder.model_axes, None, None)
+
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    h = sharder.act(h, sharder.model_axes, None, None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+
+    y_slot = out_buf[fe_s, safe_pos]                          # (N*K, d)
+    y_slot = jnp.where(keep[:, None], y_slot, 0) * slot_gate[:, None].astype(x.dtype)
+    y = jnp.zeros((N, d), x.dtype).at[tok_s].add(y_slot)
+    return y.reshape(B, T, d)

@@ -1,0 +1,198 @@
+"""LM training / serving steps for the assigned architectures.
+
+These are the functions the dry-run lowers:
+
+  train_step(state, batch)        -> (state, metrics)       [train_4k]
+  prefill_step(params, batch)     -> (caches, first_token)   [prefill_32k]
+  decode_step(params, caches, …)  -> (caches, next_token)    [decode_32k/long_500k]
+
+Cross-entropy is CHUNKED: a scan over token chunks computes logits for
+`ce_chunk` tokens at a time so the (tokens × padded_vocab) logits tensor is
+never materialized at once — at train_4k/command-r scale that tensor would be
+4096·256·256k·4B ≈ 1 PB-sharded disaster; chunking keeps peak activation
+memory flat.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models.common import COMPUTE_DTYPE, NULL_SHARDER, Params, Sharder
+
+CE_CHUNK = 512  # tokens per cross-entropy chunk
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy
+# ---------------------------------------------------------------------------
+def chunked_cross_entropy(params: Params, cfg: ModelConfig, hidden: jax.Array,
+                          labels: jax.Array, sharder: Sharder = NULL_SHARDER,
+                          chunk: int = CE_CHUNK) -> jax.Array:
+    """Mean CE over (B, T) labels without materializing (B, T, V) logits.
+
+    hidden: (B, T, d). labels: (B, T) int32 in [0, vocab). Label positions
+    >= vocab_size (padding ids) are masked out.
+    """
+    B, Tlen, d = hidden.shape
+    chunk = min(chunk, Tlen)
+    n_chunks = math.ceil(Tlen / chunk)
+    pad = n_chunks * chunk - Tlen
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+
+    hc = hidden.reshape(B, n_chunks, chunk, d).swapaxes(0, 1)   # (n, B, c, d)
+    lc = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)      # (n, B, c)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    head = head.astype(COMPUTE_DTYPE)
+
+    def body(carry, inp):
+        loss_sum, count = carry
+        h, y = inp
+        logits = (h @ head).astype(jnp.float32)                 # (B, c, V)
+        logits = sharder.act(logits, sharder.batch_axes, None, sharder.model_axes)
+        valid = (y >= 0) & (y < cfg.vocab_size)
+        ysafe = jnp.clip(y, 0, cfg.padded_vocab - 1)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ysafe[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * valid.astype(jnp.float32)
+        return (loss_sum + nll.sum(), count + valid.sum()), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, lc))
+    return loss_sum / jnp.maximum(count, 1).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+def make_loss_fn(cfg: ModelConfig, sharder: Sharder = NULL_SHARDER):
+    def loss_fn(params, batch):
+        hidden = T.forward(
+            params, cfg, batch["tokens"], sharder=sharder,
+            frontend_embeds=batch.get("frontend_embeds"),
+            encoder_embeds=batch.get("encoder_embeds"))
+        fe = cfg.n_frontend_tokens if (cfg.frontend and not cfg.is_encoder_decoder) else 0
+        hidden_txt = hidden[:, fe:, :]
+        return chunked_cross_entropy(params, cfg, hidden_txt, batch["labels"],
+                                     sharder)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer, sharder: Sharder = NULL_SHARDER):
+    """Returns step(train_state, batch) -> (train_state, metrics).
+
+    `optimizer` follows repro.optim's (init, update) protocol.
+    """
+    loss_fn = make_loss_fn(cfg, sharder)
+
+    def step(state, batch):
+        params, opt_state, step_idx = state["params"], state["opt"], state["step"]
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        updates, new_opt = optimizer.update(grads, opt_state, params)
+        new_params = jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+        gnorm = optax_like_global_norm(grads)
+        return ({"params": new_params, "opt": new_opt, "step": step_idx + 1},
+                {"loss": loss, "grad_norm": gnorm})
+    return step
+
+
+def optax_like_global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      sharder: Sharder = NULL_SHARDER):
+    """prefill(params, batch) -> (caches, next_token (B,)).
+
+    PARALLEL prefill: one blockwise-attention forward over the whole prompt
+    (collect=True gathers each layer's post-RoPE K/V and each SSM layer's
+    final state), then a single bulk scatter seeds the decode caches —
+    no per-token sequential scan.
+    """
+    def prefill(params, batch):
+        tokens = batch["tokens"]                               # (B, Tp)
+        B, Tp = tokens.shape
+        hidden, extras = T.forward(
+            params, cfg, tokens, sharder=sharder, collect=True,
+            frontend_embeds=batch.get("frontend_embeds"),
+            encoder_embeds=batch.get("encoder_embeds"))
+        caches = T.caches_from_prefill(cfg, extras, Tp, max_len)
+        logits = T.logits_from_hidden(params, cfg, hidden[:, -1:, :], sharder)
+        next_tok = jnp.argmax(logits[:, 0, :cfg.vocab_size], axis=-1)
+        return caches, next_tok
+    return prefill
+
+
+def prefill_into_cache(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                       caches: Params, sharder: Sharder,
+                       frontend_embeds=None, encoder_embeds=None,
+                       ) -> Tuple[jax.Array, Params]:
+    """Chunk-scan the prompt through `forward_with_state`-compatible layers.
+
+    For simplicity and O(1) HLO size we process the prompt via the decode path
+    in chunks of one token inside a scan — correct but serial. The optimized
+    path (per-layer blockwise prefill writing K/V in bulk) is what the Pallas
+    flash kernel provides on TPU; here the cache is filled by scanning
+    positions, which lowers fine and keeps memory flat.
+    """
+    B, Tp = tokens.shape
+    memory_kv = None
+    if cfg.is_encoder_decoder and encoder_embeds is not None:
+        enc_out = T.encode(params, cfg, encoder_embeds, sharder)
+        memory_kv = T._project_kv_memory(cfg, params["cross_attn"], enc_out)
+
+    def body(carry, t):
+        caches = carry
+        tok_t = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)  # (B, 1)
+        hid, caches = T.forward_with_state(params, cfg, tok_t, caches, t,
+                                           sharder, memory_kv=memory_kv)
+        return caches, hid[:, 0]
+
+    caches, hiddens = jax.lax.scan(body, caches, jnp.arange(Tp))
+    hidden = jnp.moveaxis(hiddens, 0, 1)                       # (B, Tp, d)
+    return hidden, caches
+
+
+def make_decode_step(cfg: ModelConfig, sharder: Sharder = NULL_SHARDER):
+    """decode(params, caches, token (B,), pos ()) -> (caches, next_token (B,)).
+
+    THE `decode_*` shape cell: one new token against a seq_len-deep cache.
+    """
+    def decode(params, caches, token, pos, memory_kv=None):
+        hid, caches = T.forward_with_state(
+            params, cfg, token[:, None], caches, pos, sharder,
+            memory_kv=memory_kv)
+        logits = T.logits_from_hidden(params, cfg, hid, sharder)
+        next_tok = jnp.argmax(logits[:, 0, :cfg.vocab_size], axis=-1)
+        return caches, next_tok
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# Reduced-config smoke helpers (used by tests and examples)
+# ---------------------------------------------------------------------------
+def smoke_batch(cfg: ModelConfig, batch: int = 2, seq: int = 16,
+                seed: int = 0) -> Dict[str, jax.Array]:
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    out = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size),
+    }
+    if cfg.frontend is not None and not cfg.is_encoder_decoder:
+        out["frontend_embeds"] = jnp.zeros(
+            (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    if cfg.is_encoder_decoder:
+        out["encoder_embeds"] = jnp.zeros(
+            (batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+    return out

@@ -1,0 +1,264 @@
+"""Distributed MoE dispatch (§Perf hillclimb for the MoE cells).
+
+BASELINE pathology (recorded in EXPERIMENTS.md §Perf): `moe_block`'s
+token→expert scatter is written on GLOBAL shapes; the scatter indices are
+data-dependent, so GSPMD cannot prove locality and falls back to gathering
+the full token buffer onto every chip — mixtral train_4k showed 365 GiB/dev
+and a 527 s collective term.
+
+FIX 1 (`moe_block_local_dispatch`): wrap dispatch+combine in a shard_map
+that is MANUAL over the batch axes and AUTO over `model`. Each data shard
+scatters only its own N/|data| tokens into a local (E, C_loc, d) buffer —
+zero cross-chip traffic for dispatch. Expert compute stays under GSPMD, so
+d_ff tensor parallelism (mixtral) or expert sharding (llama4/jamba) over
+`model` is unchanged.
+
+FIX 2 (`moe_block_ep_a2a`): for expert-sharded layouts, the full
+expert-parallel exchange: tokens hop to their expert's owner chip via
+all-to-all over `model`, experts run dense local einsums, results hop back.
+Wire bytes per chip ≈ 2 · C_out · |model| · d — the collective the PAPER
+builds its whole analysis on (pooled-embedding exchange ≡ MoE token
+exchange), at the a2a lower bound instead of FIX 1's all-gather.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Sharder
+
+
+def _capacity(n_tokens: int, k: int, e: int, factor: float) -> int:
+    return max(8, int(math.ceil(factor * n_tokens * k / e / 8.0)) * 8)
+
+
+def _pack_by_segment(seg_ids: jax.Array, n_segments: int, capacity: int
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sort-based capacity packing. seg_ids (N,) in [0, n_segments).
+
+    Returns (seg_sorted, pos_in_seg, keep) aligned with the SORTED order,
+    plus the sort `order` is recoverable by the caller via argsort — we
+    return it instead: (order, seg_sorted, pos, keep)."""
+    order = jnp.argsort(seg_ids)                       # stable
+    seg_sorted = seg_ids[order]
+    seg_start = jnp.searchsorted(seg_sorted, jnp.arange(n_segments))
+    pos = jnp.arange(seg_ids.shape[0]) - seg_start[seg_sorted]
+    keep = pos < capacity
+    return order, seg_sorted, jnp.where(keep, pos, 0), keep
+
+
+def _local_moe_math(p, xt: jax.Array, cfg: ModelConfig, sharder: Sharder
+                    ) -> jax.Array:
+    """The dense per-shard MoE math on a LOCAL token slab xt (n, d).
+    Identical numerics to layers.moe_block, but n is per-shard."""
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    n, d = xt.shape
+
+    logits = xt @ p["router"].astype(xt.dtype)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    C = _capacity(n, K, E, cfg.moe.capacity_factor)
+    flat_e = idx.reshape(-1)
+    order, fe_s, pos, keep = _pack_by_segment(flat_e, E, C)
+    tok_s = order // K
+    slot_gate = gate.reshape(-1)[order]
+
+    gathered = jnp.where(keep[:, None], xt[tok_s], 0).astype(xt.dtype)
+    buf = jnp.zeros((E, C, d), xt.dtype).at[fe_s, pos].add(gathered)
+    buf = sharder.act(buf, sharder.model_axes, None, None)
+
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(xt.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(xt.dtype))
+    h = sharder.act(h, sharder.model_axes, None, None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(xt.dtype))
+
+    y_slot = out_buf[fe_s, pos]
+    y_slot = jnp.where(keep[:, None], y_slot, 0) * slot_gate[:, None].astype(xt.dtype)
+    y = jnp.zeros((n, d), xt.dtype).at[tok_s].add(y_slot)
+    return y
+
+
+def moe_block_local_dispatch(p: Dict[str, jax.Array], x: jax.Array,
+                             cfg: ModelConfig, sharder: Sharder) -> jax.Array:
+    """FIX 1+2: fully-manual sequence-parallel TP MoE.
+
+    Iteration 1 (manual dispatch over batch axes, AUTO expert compute over
+    `model`) cut mixtral's collective term 527s -> 51s but GSPMD still
+    all-gathered the (E, C, ff) expert hidden in f32 (8.4 GiB wire each).
+    Iteration 2 makes the whole layer manual:
+
+      x enters SEQUENCE-SHARDED over `model`  (B_l, T/M, d)
+      -> all_gather over model: local token slab (n, d)          [~n·d bf16]
+      -> dispatch + expert einsums on the LOCAL ff shard (E, C, ff/M)
+      -> the down-proj partial sums are LINEAR in the combine, so combine
+         FIRST (y_partial (n, d)) and reduce-scatter back to sequence
+         shards                                                  [~n·d bf16]
+
+    Wire per layer ≈ 2·n·d·2B — identical to a dense Megatron TP layer; the
+    capacity-slack (E·C ≈ 2.5·n) never crosses the wire.
+    """
+    mesh = sharder.mesh
+    B, T, d = x.shape
+    M = mesh.shape.get("model", 1)
+    bsize = 1
+    for a in sharder.batch_axes:
+        bsize *= mesh.shape[a]
+    if B % bsize != 0 or T % max(M, 1) != 0 or cfg.d_ff % max(M, 1) != 0:
+        # odd (smoke-scale) shapes: fall back to the global formulation with
+        # no mesh attached (avoids re-entering this function)
+        from repro.models.layers import moe_block
+        return moe_block(p, x, cfg, Sharder(None))
+
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    manual_axes = set(sharder.batch_axes) | {"model"}
+
+    def body(router, w_gate, w_up, w_down, x_loc):
+        Bl, Ts, dl = x_loc.shape                     # Ts = T / M
+        xt = jax.lax.all_gather(x_loc, "model", axis=1, tiled=True)
+        n = Bl * Ts * M
+        xt = xt.reshape(n, dl)
+
+        logits = xt @ router.astype(xt.dtype)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gate, idx = jax.lax.top_k(probs, K)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        C = _capacity(n, K, E, cfg.moe.capacity_factor)
+        order, fe_s, pos, keep = _pack_by_segment(idx.reshape(-1), E, C)
+        tok_s = order // K
+        slot_gate = gate.reshape(-1)[order]
+
+        gathered = jnp.where(keep[:, None], xt[tok_s], 0).astype(xt.dtype)
+        buf = jnp.zeros((E, C, dl), xt.dtype).at[fe_s, pos].add(gathered)
+
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(xt.dtype)))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, w_up.astype(xt.dtype))
+        out_buf = jnp.einsum("ecf,efd->ecd", h, w_down.astype(xt.dtype))
+        # out_buf holds PARTIAL sums (local ff shard); combine is linear, so
+        # build y_partial first and let the reduce-scatter finish the sum.
+        y_slot = out_buf[fe_s, pos]
+        y_slot = jnp.where(keep[:, None], y_slot, 0) * slot_gate[:, None].astype(xt.dtype)
+        y_partial = jnp.zeros((n, dl), xt.dtype).at[tok_s].add(y_slot)
+        # inverse of the entry all_gather: chip r keeps tokens [r·Ts,(r+1)·Ts)
+        y = jax.lax.psum_scatter(
+            y_partial.reshape(Bl, M * Ts, dl), "model",
+            scatter_dimension=1, tiled=True)
+        return y
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(None, None, "model"), P(None, None, "model"),
+                  P(None, "model", None),
+                  P(sharder.batch_axes, "model", None)),
+        out_specs=P(sharder.batch_axes, "model", None),
+        axis_names=manual_axes,
+        check_vma=False)
+    return fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
+
+
+# ---------------------------------------------------------------------------
+# FIX 2: full expert-parallel all-to-all (paper-relevant collective)
+# ---------------------------------------------------------------------------
+def moe_block_ep_a2a(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+                     sharder: Sharder, send_capacity_factor: float = 2.0
+                     ) -> jax.Array:
+    """Tokens hop to expert owners over `model` via all-to-all and back.
+
+    Requirements: E % |model| == 0 (expert weights sharded on E over
+    `model`), batch divisible by the batch axes. Falls back to FIX 1
+    otherwise. Gates stay at the source; only token vectors + expert-local
+    ids travel.
+    """
+    mesh = sharder.mesh
+    B, T, d = x.shape
+    M = mesh.shape["model"]
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    bsize = 1
+    for a in sharder.batch_axes:
+        bsize *= mesh.shape[a]
+    if E % M != 0 or M == 1 or B % bsize != 0 or (T % M != 0):
+        return moe_block_local_dispatch(p, x, cfg, sharder)
+    E_loc = E // M
+
+    manual_axes = set(sharder.batch_axes) | {"model"}
+
+    def body(router, w_gate, w_up, w_down, x_loc):
+        # x_loc: (B_loc, T_loc, d) — tokens split over batch axes AND model
+        Bl, Tl, dl = x_loc.shape
+        n = Bl * Tl
+        xt = x_loc.reshape(n, dl)
+
+        logits = xt @ router.astype(xt.dtype)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gate, idx = jax.lax.top_k(probs, K)                 # (n, K)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        dest = idx // E_loc                                 # owner chip (n, K)
+        eloc = idx % E_loc
+
+        # ---- pack per destination chip ----
+        C_out = _capacity(n, K, M, send_capacity_factor)
+        order, dest_s, pos, keep = _pack_by_segment(dest.reshape(-1), M, C_out)
+        tok_s = order // K
+        send = jnp.zeros((M, C_out, dl), xt.dtype).at[dest_s, pos].add(
+            jnp.where(keep[:, None], xt[tok_s], 0).astype(xt.dtype))
+        send_eid = jnp.full((M, C_out), -1, jnp.int32).at[dest_s, pos].max(
+            jnp.where(keep, eloc.reshape(-1)[order], -1))
+
+        # ---- the paper's collective: all-to-all over the model axis ----
+        recv = jax.lax.all_to_all(send, "model", 0, 0, tiled=False)
+        recv_eid = jax.lax.all_to_all(send_eid[..., None], "model", 0, 0,
+                                      tiled=False)[..., 0]
+        recv = recv.reshape(M * C_out, dl)
+        reid = recv_eid.reshape(M * C_out)
+
+        # ---- local expert compute (capacity-pack by local expert id) ----
+        C_in = _capacity(M * C_out, 1, E_loc, 1.0)
+        valid = reid >= 0
+        seg = jnp.where(valid, reid, 0)
+        order2, seg_s, pos2, keep2 = _pack_by_segment(
+            jnp.where(valid, seg, E_loc), E_loc + 1, C_in)
+        keep2 &= seg_s < E_loc
+        seg_s = jnp.where(keep2, seg_s, 0)
+        buf = jnp.zeros((E_loc, C_in, dl), xt.dtype).at[seg_s, pos2].add(
+            jnp.where(keep2[:, None], recv[order2], 0))
+
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(xt.dtype)))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, w_up.astype(xt.dtype))
+        out_buf = jnp.einsum("ecf,efd->ecd", h, w_down.astype(xt.dtype))
+
+        # unpack to the received-slot order, send back
+        y_recv = jnp.zeros((M * C_out, dl), xt.dtype)
+        y_slot2 = out_buf[seg_s, pos2]
+        y_recv = y_recv.at[order2].add(
+            jnp.where(keep2[:, None], y_slot2, 0))
+        y_back = jax.lax.all_to_all(y_recv.reshape(M, C_out, dl),
+                                    "model", 0, 0, tiled=False)
+
+        # combine at the source with gates
+        y_sent_back = y_back[dest_s, pos]                    # sorted order
+        contrib = jnp.where(keep[:, None], y_sent_back, 0)
+        contrib = contrib * gate.reshape(-1)[order][:, None].astype(xt.dtype)
+        y = jnp.zeros((n, dl), xt.dtype).at[tok_s].add(contrib)
+        return y.reshape(Bl, Tl, dl)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P("model", None, None), P("model", None, None),
+                  P("model", None, None),
+                  P(sharder.batch_axes, "model", None)),
+        out_specs=P(sharder.batch_axes, "model", None),
+        axis_names=manual_axes,
+        check_vma=False)
+    return fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)

@@ -1,0 +1,333 @@
+"""State-space / linear-attention layers: Mamba (jamba) and RWKV6 (finch).
+
+Both are written with two execution modes that share parameters:
+
+  * ``*_scan``  : full-sequence mode for train/prefill. A `jax.lax.scan`
+    (possibly chunked) over time carries the recurrent state. O(T) compute,
+    O(1) state — this is what makes the SSM/hybrid archs eligible for the
+    ``long_500k`` shape.
+  * ``*_step``  : single-token mode for decode. Takes and returns the state
+    explicitly, mirroring the KV-cache protocol of attention layers.
+
+State layouts:
+  mamba : {"conv": (B, d_conv-1, d_inner), "ssm": (B, d_inner, d_state)}
+  rwkv6 : {"wkv": (B, H, hd, hd), "x_prev": (B, d_model), "cx_prev": (B, d_model)}
+
+Equivalence `scan(tokens) == fold(step, tokens)` is a tested property
+(tests/test_ssm.py).
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Sharder, NULL_SHARDER, dense_init, split_keys
+
+
+def _ssm_chunk() -> int:
+    """Time-chunk length for recurrent scans (REPRO_SSM_CHUNK, default 64;
+    0 disables chunking = the §Perf BASELINE).
+
+    Why: a T-step lax.scan under autodiff saves the carried state at EVERY
+    step for the backward pass — for rwkv6 train_4k that is T=4096 copies of
+    the (B, H, 64, 64) wkv state per layer, an ~8000 s HBM-traffic roofline
+    term. Scanning over CHUNKS with jax.checkpoint on the chunk body keeps
+    only T/chunk boundary states and recomputes inside each chunk: state
+    traffic drops by the chunk length for ~1 extra forward of compute
+    (compute term was 17x below the memory term, so this trades the cheap
+    resource for the expensive one).
+    """
+    return int(os.environ.get("REPRO_SSM_CHUNK", "64"))
+
+
+def chunked_time_scan(step_fn: Callable, state, xs_tuple, T: int):
+    """scan(step_fn) over T steps, rematerialized per chunk.
+
+    step_fn(state, per_step_slices) -> (state, y_t); xs_tuple: tuple of
+    (T, ...) arrays. Returns (state, ys (T, ...)).
+    """
+    chunk = _ssm_chunk()
+    if chunk <= 1 or T <= chunk or T % chunk != 0:
+        return jax.lax.scan(step_fn, state, xs_tuple)
+
+    n_chunks = T // chunk
+    xs_c = tuple(x.reshape((n_chunks, chunk) + x.shape[1:]) for x in xs_tuple)
+
+    @jax.checkpoint
+    def chunk_body(state, xs_chunk):
+        return jax.lax.scan(step_fn, state, xs_chunk)
+
+    state, ys = jax.lax.scan(chunk_body, state, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda y: y.reshape((T,) + y.shape[2:]), ys)
+    return state, ys
+
+# ---------------------------------------------------------------------------
+# Mamba (S6) — selective state space, jamba's non-attention mixer
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    assert cfg.ssm is not None and cfg.ssm.kind == "mamba"
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    ds = cfg.ssm.d_state
+    dt_rank = max(1, math.ceil(d / 16))
+    k_in, k_conv, k_x, k_dt, k_out = split_keys(key, 5)
+
+    # S4D-real init for A (negative real spectrum)
+    a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    dt = jnp.exp(
+        jax.random.uniform(k_dt, (di,), jnp.float32)
+        * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    inv_softplus_dt = dt + jnp.log(-jnp.expm1(-dt))
+
+    return {
+        "w_in": dense_init(k_in, d, 2 * di),            # x and gate z
+        "conv_w": (jax.random.normal(k_conv, (cfg.ssm.d_conv, di), jnp.float32)
+                   / math.sqrt(cfg.ssm.d_conv)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "w_x": dense_init(k_x, di, dt_rank + 2 * ds),   # dt, B, C projections
+        "w_dt": dense_init(k_dt, dt_rank, di),
+        "dt_bias": inv_softplus_dt,
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(k_out, di, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _mamba_inner(p, xz: jax.Array, cfg: ModelConfig,
+                 conv_state: jax.Array, ssm_state: jax.Array,
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared scan body. xz: (B, T, 2*di) pre-computed input projection.
+    conv_state: (B, d_conv-1, di), ssm_state: (B, di, ds). Returns
+    (y (B,T,di gated), conv_state', ssm_state')."""
+    B, T, _ = xz.shape
+    di = p["d_skip"].shape[0]
+    ds = p["a_log"].shape[1]
+    dt_rank = p["w_dt"].shape[0]
+    dc = p["conv_w"].shape[0]
+
+    x, z = jnp.split(xz, 2, axis=-1)                       # (B, T, di) each
+
+    # depthwise causal conv via the carried conv_state (last dc-1 inputs)
+    x_ext = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (B, T+dc-1, di)
+    new_conv_state = x_ext[:, -(dc - 1):] if dc > 1 else conv_state
+
+    def conv_tap(i):
+        return x_ext[:, i:i + T] * p["conv_w"][i].astype(x.dtype)
+    xc = sum(conv_tap(i) for i in range(dc)) + p["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ p["w_x"].astype(x.dtype)                   # (B, T, dt_rank+2ds)
+    dt_low, b_t, c_t = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["w_dt"].astype(x.dtype)
+                         + p["dt_bias"].astype(x.dtype))   # (B, T, di)
+
+    a = -jnp.exp(p["a_log"])                               # (di, ds) fp32
+    # discretize per step: dA = exp(dt*A) (B,T,di,ds); dB = dt*B
+    dt32 = dt.astype(jnp.float32)
+    xc32 = xc.astype(jnp.float32)
+    b32 = b_t.astype(jnp.float32)
+    c32 = c_t.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, x_t, b_tt, c_tt = inp                        # (B,di),(B,di),(B,ds),(B,ds)
+        da = jnp.exp(dt_t[..., None] * a)                  # (B, di, ds)
+        dbx = (dt_t * x_t)[..., None] * b_tt[:, None, :]   # (B, di, ds)
+        h = h * da + dbx
+        y = jnp.einsum("bds,bs->bd", h, c_tt)              # (B, di)
+        return h, y
+
+    h0 = ssm_state.astype(jnp.float32)
+    h_last, ys = chunked_time_scan(
+        step, h0,
+        (jnp.moveaxis(dt32, 1, 0), jnp.moveaxis(xc32, 1, 0),
+         jnp.moveaxis(b32, 1, 0), jnp.moveaxis(c32, 1, 0)), T)
+    y = jnp.moveaxis(ys, 0, 1)                             # (B, T, di)
+    y = y + xc32 * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y, new_conv_state.astype(conv_state.dtype), h_last.astype(ssm_state.dtype)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                     ) -> Dict[str, jax.Array]:
+    di = cfg.ssm.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.ssm.d_state), jnp.float32),
+    }
+
+
+def mamba_scan(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+               state: Optional[Dict[str, jax.Array]] = None,
+               sharder: Sharder = NULL_SHARDER,
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence mamba mixer. x: (B, T, d) -> (B, T, d), final state."""
+    B = x.shape[0]
+    if state is None:
+        state = init_mamba_state(cfg, B, x.dtype)
+    xz = x @ p["w_in"].astype(x.dtype)
+    xz = sharder.act(xz, sharder.batch_axes, None, sharder.model_axes)
+    y, conv_s, ssm_s = _mamba_inner(p, xz, cfg, state["conv"], state["ssm"])
+    out = y @ p["w_out"].astype(x.dtype)
+    return out, {"conv": conv_s, "ssm": ssm_s}
+
+
+def mamba_step(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+               state: Dict[str, jax.Array], sharder: Sharder = NULL_SHARDER,
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode step. x: (B, 1, d)."""
+    return mamba_scan(p, x, cfg, state, sharder)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 "Finch" — data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+def init_rwkv6(key: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """Time-mix block parameters. Heads of size ssm.head_dim over d_model."""
+    assert cfg.ssm is not None and cfg.ssm.kind == "rwkv6"
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    assert d % hd == 0
+    kr, kk, kv, kg, ko, kw, kw2, ku = split_keys(key, 8)
+    lora = max(32, d // 16)  # decay LoRA rank (rwkv6 uses 64 for 2.5k width)
+    return {
+        # token-shift mix coefficients (per-channel, one per projection)
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d,), 0.5, jnp.float32),
+        "mix_g": jnp.full((d,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "w_r": dense_init(kr, d, d),
+        "w_k": dense_init(kk, d, d),
+        "w_v": dense_init(kv, d, d),
+        "w_g": dense_init(kg, d, d),
+        "w_o": dense_init(ko, d, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+        # data-dependent decay: w = exp(-exp(decay_base + lora(x)))
+        "decay_base": jnp.zeros((d,), jnp.float32) - 6.0,
+        "w_decay_a": dense_init(kw, d, lora, scale=0.1),
+        "w_decay_b": dense_init(kw2, lora, d, scale=0.1),
+        "bonus": jax.random.normal(ku, (d // hd, hd), jnp.float32) * 0.05,  # u (per head)
+        "ln_w": jnp.ones((d,), jnp.float32),   # per-head group norm scale
+        "ln_b": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                     ) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    H = d // hd
+    return {
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_prev": jnp.zeros((batch, d), dtype),
+    }
+
+
+def _rwkv_group_norm(x: jax.Array, w: jax.Array, b: jax.Array, H: int) -> jax.Array:
+    """Per-head layer norm on (B, T, d) viewed as (B, T, H, hd)."""
+    B, T, d = x.shape
+    xh = x.reshape(B, T, H, d // H).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (xh.reshape(B, T, d) * w + b).astype(x.dtype)
+
+
+def rwkv6_scan(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+               state: Optional[Dict[str, jax.Array]] = None,
+               sharder: Sharder = NULL_SHARDER,
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """RWKV6 time-mix over a full sequence. x: (B, T, d)."""
+    B, T, d = x.shape
+    hd = cfg.ssm.head_dim
+    H = d // hd
+    if state is None:
+        state = init_rwkv6_state(cfg, B, x.dtype)
+
+    # token shift: x_{t-1} (state carries the last token of the previous chunk)
+    x_prev = jnp.concatenate([state["x_prev"][:, None, :].astype(x.dtype),
+                              x[:, :-1]], axis=1)
+    def mix(m):
+        return x * m.astype(x.dtype) + x_prev * (1.0 - m).astype(x.dtype)
+
+    r = mix(p["mix_r"]) @ p["w_r"].astype(x.dtype)
+    k = mix(p["mix_k"]) @ p["w_k"].astype(x.dtype)
+    v = mix(p["mix_v"]) @ p["w_v"].astype(x.dtype)
+    g = jax.nn.silu(mix(p["mix_g"]) @ p["w_g"].astype(x.dtype))
+    # data-dependent decay (the "6" in rwkv6)
+    dec_in = mix(p["mix_w"])
+    decay_x = (dec_in @ p["w_decay_a"].astype(x.dtype)) @ p["w_decay_b"].astype(x.dtype)
+    logw = -jnp.exp(jnp.clip(p["decay_base"] + decay_x.astype(jnp.float32), -20.0, 8.0))
+    w = jnp.exp(logw)                                       # (B, T, d) in (0,1)
+
+    rh = r.reshape(B, T, H, hd).astype(jnp.float32)
+    kh = k.reshape(B, T, H, hd).astype(jnp.float32)
+    vh = v.reshape(B, T, H, hd).astype(jnp.float32)
+    wh = w.reshape(B, T, H, hd)
+    u = p["bonus"]                                          # (H, hd)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                            # (B,H,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)          # outer product
+        # out_t = r · (s + u*kv)  — current token gets the bonus path
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = s * w_t[..., None] + kv
+        return s, y
+
+    s0 = state["wkv"]
+    s_last, ys = chunked_time_scan(
+        step, s0,
+        (jnp.moveaxis(rh, 1, 0), jnp.moveaxis(kh, 1, 0),
+         jnp.moveaxis(vh, 1, 0), jnp.moveaxis(wh, 1, 0)), T)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, d)             # fp32
+
+    y = _rwkv_group_norm(y.astype(x.dtype), p["ln_w"], p["ln_b"], H)
+    y = y * g
+    y = sharder.act(y, sharder.batch_axes, None, sharder.model_axes)
+    out = y @ p["w_o"].astype(x.dtype)
+    return out, {"wkv": s_last, "x_prev": x[:, -1, :]}
+
+
+def rwkv6_step(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
+               state: Dict[str, jax.Array], sharder: Sharder = NULL_SHARDER,
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode. x: (B, 1, d)."""
+    return rwkv6_scan(p, x, cfg, state, sharder)
+
+
+# ---------------------------------------------------------------------------
+# RWKV channel-mix (the MLP analogue; uses token shift too)
+# ---------------------------------------------------------------------------
+def init_rwkv6_channel_mix(key: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    d, ff = cfg.d_model, cfg.d_ff
+    kk, kv, kr = split_keys(key, 3)
+    return {
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "w_k": dense_init(kk, d, ff),
+        "w_v": dense_init(kv, ff, d, scale=1.0 / math.sqrt(2 * cfg.n_layers)),
+        "w_r": dense_init(kr, d, d),
+    }
+
+
+def rwkv6_channel_mix(p: Dict[str, jax.Array], x: jax.Array,
+                      x_prev_last: Optional[jax.Array] = None,
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, d); x_prev_last: (B, d) last token of the previous chunk.
+    Returns (out, new x_prev_last)."""
+    B, T, d = x.shape
+    if x_prev_last is None:
+        x_prev_last = jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([x_prev_last[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+    xk = x * p["mix_k"].astype(x.dtype) + x_prev * (1 - p["mix_k"]).astype(x.dtype)
+    xr = x * p["mix_r"].astype(x.dtype) + x_prev * (1 - p["mix_r"]).astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(x.dtype)))
+    r = jax.nn.sigmoid(xr @ p["w_r"].astype(x.dtype))
+    return r * (k @ p["w_v"].astype(x.dtype)), x[:, -1, :]

@@ -1,0 +1,410 @@
+"""Model stacks for the 10 assigned architectures.
+
+One `init_model` / forward pair covers every family via the ModelConfig
+switches (GQA/SWA attention, MoE every-k, Mamba/RWKV mixers, enc-dec,
+modality-frontend stubs).
+
+Layer stacking: layers with identical structure are STACKED (params have a
+leading (n_layers,) dim) and iterated with `jax.lax.scan` — O(1) HLO size so
+72-layer jamba and 64-layer command-r lower quickly, and under FSDP each
+layer's gather happens per scan step. Heterogeneous interleaves (jamba's
+1-attention-per-8, llama4's MoE-every-2) are handled by stacking each *kind*
+separately and scanning over the period (grouped scan).
+
+Mixed-structure periods are expressed as a `LayerPlan`: the repeating unit of
+`period` layers; within the unit, layer i has an attention-or-ssm mixer and a
+dense-or-moe MLP. The scan runs over n_layers // period units.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.common import (COMPUTE_DTYPE, NULL_SHARDER, Params, Sharder,
+                                 dense_init, embed_init, split_keys)
+
+
+# ---------------------------------------------------------------------------
+# Layer plan: which mixer/MLP each position in the repeating unit uses
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class LayerPlan:
+    period: int                   # repeating unit length
+    mixers: Tuple[str, ...]       # per-position: "attn" | "mamba" | "rwkv6"
+    mlps: Tuple[str, ...]         # per-position: "dense" | "moe" | "rwkv_cmix"
+
+    @property
+    def n_units(self) -> int:
+        return 0  # filled by plan_for
+
+
+def plan_for(cfg: ModelConfig) -> LayerPlan:
+    periods = [1]
+    if cfg.attn_every > 1:
+        periods.append(cfg.attn_every)
+    if cfg.moe is not None and cfg.moe.every > 1:
+        periods.append(cfg.moe.every)
+    period = math.lcm(*periods)
+    assert cfg.n_layers % period == 0, (cfg.name, cfg.n_layers, period)
+
+    mixers, mlps = [], []
+    for i in range(period):
+        if cfg.family == "ssm":
+            mixers.append("rwkv6")
+            mlps.append("rwkv_cmix")
+            continue
+        if cfg.ssm is not None:  # hybrid: attention on the last slot of each unit
+            is_attn = (i % cfg.attn_every) == (cfg.attn_every - 1)
+            mixers.append("attn" if is_attn else "mamba")
+        else:
+            mixers.append("attn")
+        if cfg.moe is not None and (i % cfg.moe.every) == cfg.moe.offset:
+            mlps.append("moe")
+        else:
+            mlps.append("dense")
+    return LayerPlan(period, tuple(mixers), tuple(mlps))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _init_one_layer(key: jax.Array, cfg: ModelConfig, mixer: str, mlp: str
+                    ) -> Dict[str, Any]:
+    km, kf, kn1, kn2 = split_keys(key, 4)
+    p: Dict[str, Any] = {"norm1": L.init_rms_norm(cfg.d_model),
+                         "norm2": L.init_rms_norm(cfg.d_model)}
+    if mixer == "attn":
+        p["attn"] = L.init_attention(km, cfg)
+    elif mixer == "mamba":
+        p["mamba"] = S.init_mamba(km, cfg)
+    elif mixer == "rwkv6":
+        p["rwkv"] = S.init_rwkv6(km, cfg)
+    else:
+        raise ValueError(mixer)
+    if mlp == "dense":
+        p["mlp"] = L.init_mlp(kf, cfg)
+    elif mlp == "moe":
+        p["moe"] = L.init_moe(kf, cfg)
+    elif mlp == "rwkv_cmix":
+        p["cmix"] = S.init_rwkv6_channel_mix(kf, cfg)
+    else:
+        raise ValueError(mlp)
+    return p
+
+
+def _stack(trees: List[Params]) -> Params:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> Params:
+    """Full parameter pytree. Per-kind layer params are stacked over units."""
+    plan = plan_for(cfg)
+    n_units = cfg.n_layers // plan.period
+    k_emb, k_head, k_layers, k_enc, k_xattn, k_fe, k_fn = split_keys(key, 7)
+
+    params: Dict[str, Any] = {
+        "embed": embed_init(k_emb, cfg.padded_vocab, cfg.d_model),
+        "final_norm": L.init_rms_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.padded_vocab)
+
+    # decoder stack: one stacked pytree per position-in-unit
+    unit_keys = split_keys(k_layers, plan.period)
+    stacked = []
+    for pos in range(plan.period):
+        lkeys = split_keys(unit_keys[pos], n_units)
+        stacked.append(_stack([
+            _init_one_layer(lk, cfg, plan.mixers[pos], plan.mlps[pos])
+            for lk in lkeys]))
+    params["units"] = stacked
+
+    if cfg.is_encoder_decoder:
+        ekeys = split_keys(k_enc, cfg.n_encoder_layers)
+        params["encoder"] = _stack([
+            _init_one_layer(ek, cfg, "attn", "dense") for ek in ekeys])
+        xkeys = split_keys(k_xattn, n_units * plan.period)
+        params["cross_attn"] = _stack([
+            {"attn": L.init_attention(xk, cfg), "norm": L.init_rms_norm(cfg.d_model)}
+            for xk in xkeys])
+        params["enc_final_norm"] = L.init_rms_norm(cfg.d_model)
+    if cfg.frontend is not None:
+        # stub frontend: a single linear adapter applied to precomputed
+        # patch/frame embeddings (input_specs supplies them at d_model)
+        params["frontend_proj"] = dense_init(k_fe, cfg.d_model, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches / recurrent state
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=COMPUTE_DTYPE) -> Params:
+    """Decode state for the whole stack, shaped like `units` (stacked)."""
+    plan = plan_for(cfg)
+    n_units = cfg.n_layers // plan.period
+
+    def stacked_state(make_one):
+        one = make_one()
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_units,) + x.shape).copy(), one)
+
+    states = []
+    for pos in range(plan.period):
+        mixer = plan.mixers[pos]
+        if mixer == "attn":
+            states.append(stacked_state(
+                lambda: L.init_attention_cache(cfg, batch, max_len, dtype)))
+        elif mixer == "mamba":
+            states.append(stacked_state(lambda: S.init_mamba_state(cfg, batch, dtype)))
+        else:  # rwkv6: time-mix state + channel-mix shift
+            def mk():
+                st = S.init_rwkv6_state(cfg, batch, dtype)
+                st["cmix_prev"] = jnp.zeros((batch, cfg.d_model), dtype)
+                return st
+            states.append(stacked_state(mk))
+    return states
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _unit_forward(layer_p, x, positions, cfg, mixer, mlp, sharder,
+                  state=None, cache_pos=None, memory=None, xattn_p=None,
+                  collect=False):
+    """One layer: pre-norm mixer + pre-norm MLP (+ optional cross-attention).
+    Returns (x, new_state). With collect=True (full-sequence prefill),
+    new_state carries cache-seeding data: post-RoPE K/V for attention,
+    final recurrent state for mamba/rwkv."""
+    h = L.rms_norm(x, layer_p["norm1"], cfg.norm_eps)
+    new_state = state
+    if mixer == "attn":
+        out, new_state = L.attention_block(
+            layer_p["attn"], h, positions, cfg, sharder,
+            cache=state, cache_pos=cache_pos, collect_kv=collect)
+        x = x + out
+    elif mixer == "mamba":
+        if state is None:
+            out, st = S.mamba_scan(layer_p["mamba"], h, cfg, None, sharder)
+            new_state = st if collect else None
+        else:
+            out, new_state = S.mamba_step(layer_p["mamba"], h, cfg, state, sharder)
+        x = x + out
+    elif mixer == "rwkv6":
+        tm_state = None if (state is None) else {
+            "wkv": state["wkv"], "x_prev": state["x_prev"]}
+        out, tm_new = S.rwkv6_scan(layer_p["rwkv"], h, cfg, tm_state, sharder)
+        x = x + out
+        if state is not None:
+            new_state = {**state, **tm_new}
+        elif collect:
+            new_state = tm_new
+
+    if memory is not None and xattn_p is not None:
+        hx = L.rms_norm(x, xattn_p["norm"], cfg.norm_eps)
+        out, _ = L.attention_block(
+            xattn_p["attn"], hx, positions, cfg, sharder,
+            kv_override=memory, causal=False)
+        x = x + out
+
+    h = L.rms_norm(x, layer_p["norm2"], cfg.norm_eps)
+    if mlp == "dense":
+        x = x + L.mlp_block(layer_p["mlp"], h, cfg, sharder)
+    elif mlp == "moe":
+        x = x + L.moe_block(layer_p["moe"], h, cfg, sharder)
+    else:  # rwkv channel mix
+        prev = None if state is None else state["cmix_prev"]
+        out, cmix_prev = S.rwkv6_channel_mix(layer_p["cmix"], h, prev)
+        x = x + out
+        if (state is not None or collect) and new_state is not None:
+            new_state = {**new_state, "cmix_prev": cmix_prev}
+    return x, new_state
+
+
+def _project_kv_memory(cfg: ModelConfig, xattn_stacked, enc_out: jax.Array):
+    """Precompute (k, v) for cross-attention from encoder output, per layer.
+    Returns stacked (n_layers, B, S, Hkv, hd) pair."""
+    hd = cfg.resolved_head_dim
+    B, Ssrc, _ = enc_out.shape
+
+    def per_layer(xp):
+        k = enc_out @ xp["attn"]["wk"].astype(enc_out.dtype)
+        v = enc_out @ xp["attn"]["wv"].astype(enc_out.dtype)
+        return (k.reshape(B, Ssrc, cfg.n_kv_heads, hd),
+                v.reshape(B, Ssrc, cfg.n_kv_heads, hd))
+    return jax.vmap(per_layer)(xattn_stacked)
+
+
+def encode(params: Params, cfg: ModelConfig, src_embeds: jax.Array,
+           sharder: Sharder = NULL_SHARDER) -> jax.Array:
+    """Encoder stack over precomputed frame/patch embeddings (stub frontend)."""
+    assert cfg.is_encoder_decoder
+    x = src_embeds.astype(COMPUTE_DTYPE)
+    if "frontend_proj" in params:
+        x = x @ params["frontend_proj"].astype(x.dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, layer_p):
+        h = L.rms_norm(x, layer_p["norm1"], cfg.norm_eps)
+        out, _ = L.attention_block(layer_p["attn"], h, positions, cfg, sharder,
+                                   causal=False)
+        x = x + out
+        h = L.rms_norm(x, layer_p["norm2"], cfg.norm_eps)
+        x = x + L.mlp_block(layer_p["mlp"], h, cfg, sharder)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            positions: Optional[jax.Array] = None,
+            sharder: Sharder = NULL_SHARDER,
+            frontend_embeds: Optional[jax.Array] = None,
+            encoder_embeds: Optional[jax.Array] = None,
+            collect: bool = False, remat: bool = False,
+            ):
+    """Full-sequence forward (train / prefill). Returns final hidden (B, T, d);
+    with collect=True also returns per-unit cache-seed extras (post-RoPE K/V
+    stacks / final SSM states) for decode-cache construction.
+
+    frontend_embeds: (B, n_frontend_tokens, d_model) precomputed patch/frame
+      embeddings (VLM/audio stub) — prepended to the token embeddings.
+    encoder_embeds : (B, S_src, d_model) for enc-dec archs.
+    remat: rematerialize each layer in backward (train memory policy).
+    """
+    B, T = tokens.shape
+    # cast the table BEFORE the gather: the cast's transpose then happens at
+    # the (V, d) parameter (once), not at the (B, T, d) activation — so the
+    # embedding cotangent psum over `model` travels in bf16, not f32
+    # (§Perf iteration 7).
+    x = jnp.take(params["embed"].astype(COMPUTE_DTYPE), tokens, axis=0)
+    if frontend_embeds is not None and not cfg.is_encoder_decoder:
+        fe = frontend_embeds.astype(COMPUTE_DTYPE) @ params["frontend_proj"].astype(COMPUTE_DTYPE)
+        x = jnp.concatenate([fe, x], axis=1)
+        T = x.shape[1]
+    x = sharder.batch_act(x)
+    if positions is None:
+        positions = jnp.arange(T)
+
+    memory_kv = None
+    if cfg.is_encoder_decoder:
+        assert encoder_embeds is not None
+        enc_out = encode(params, cfg, encoder_embeds, sharder)
+        memory_kv = _project_kv_memory(cfg, params["cross_attn"], enc_out)
+
+    plan = plan_for(cfg)
+    extras = []
+    for pos in range(plan.period):
+        stacked = params["units"][pos]
+        mixer, mlp = plan.mixers[pos], plan.mlps[pos]
+        if cfg.is_encoder_decoder:
+            def body(x, inp):
+                layer_p, xp, mem_k, mem_v = inp
+                x, ex = _unit_forward(layer_p, x, positions, cfg, mixer, mlp,
+                                      sharder, memory=(mem_k, mem_v),
+                                      xattn_p=xp, collect=collect)
+                return x, ex
+            if remat:
+                body = jax.checkpoint(body)
+            x, ex = jax.lax.scan(
+                body, x, (stacked, params["cross_attn"],
+                          memory_kv[0], memory_kv[1]))
+        else:
+            def body(x, layer_p):
+                x, ex = _unit_forward(layer_p, x, positions, cfg, mixer, mlp,
+                                      sharder, collect=collect)
+                return x, ex
+            if remat:
+                body = jax.checkpoint(body)
+            x, ex = jax.lax.scan(body, x, stacked)
+        extras.append(ex)
+    hidden = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if collect:
+        return hidden, extras
+    return hidden
+
+
+def caches_from_prefill(cfg: ModelConfig, extras, prompt_len: int,
+                        max_len: int, dtype=COMPUTE_DTYPE) -> Params:
+    """Convert `forward(collect=True)` extras into decode caches.
+
+    Attention units: scatter the post-RoPE prompt K/V into (ring) cache
+    buffers — the parallel-prefill path (one bulk write per layer instead of
+    T sequential updates). SSM units: the final recurrent state IS the cache.
+    """
+    plan = plan_for(cfg)
+    caches = []
+    for pos in range(plan.period):
+        mixer = plan.mixers[pos]
+        ex = extras[pos]
+        if mixer == "attn":
+            k, v = ex["k"], ex["v"]                    # (U, B, T, Hkv, hd)
+            U, B, T, Hkv, hd = k.shape
+            S = max_len
+            if cfg.sliding_window is not None:
+                S = min(max_len, cfg.sliding_window)
+            n = min(T, S)
+            positions = jnp.arange(T - n, T)
+            slots = positions % S
+            kc = jnp.zeros((U, B, S, Hkv, hd), dtype)
+            vc = jnp.zeros((U, B, S, Hkv, hd), dtype)
+            pc = jnp.full((U, B, S), -1, jnp.int32)
+            kc = kc.at[:, :, slots].set(k[:, :, T - n:].astype(dtype))
+            vc = vc.at[:, :, slots].set(v[:, :, T - n:].astype(dtype))
+            pc = pc.at[:, :, slots].set(
+                jnp.broadcast_to(positions, (U, B, n)).astype(jnp.int32))
+            caches.append({"k": kc, "v": vc, "pos": pc})
+        else:
+            caches.append(ex)                          # SSM state is the cache
+    return caches
+
+
+def forward_with_state(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                       caches: Params, cache_pos: jax.Array,
+                       sharder: Sharder = NULL_SHARDER,
+                       memory_kv=None) -> Tuple[jax.Array, Params]:
+    """Single-token decode step. tokens: (B, 1). Returns (hidden (B,1,d), caches')."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(COMPUTE_DTYPE)
+    positions = jnp.asarray(cache_pos).reshape(())[None]  # (1,)
+
+    plan = plan_for(cfg)
+    new_caches = []
+    for pos in range(plan.period):
+        stacked = params["units"][pos]
+        state = caches[pos]
+        mixer, mlp = plan.mixers[pos], plan.mlps[pos]
+        if cfg.is_encoder_decoder and memory_kv is not None:
+            def body(x, inp):
+                layer_p, st, xp, mem_k, mem_v = inp
+                x, st2 = _unit_forward(layer_p, x, positions, cfg, mixer, mlp,
+                                       sharder, state=st, cache_pos=cache_pos,
+                                       memory=(mem_k, mem_v), xattn_p=xp)
+                return x, st2
+            x, st_new = jax.lax.scan(
+                body, x, (stacked, state, params["cross_attn"],
+                          memory_kv[0], memory_kv[1]))
+        else:
+            def body(x, inp):
+                layer_p, st = inp
+                x, st2 = _unit_forward(layer_p, x, positions, cfg, mixer, mlp,
+                                       sharder, state=st, cache_pos=cache_pos)
+                return x, st2
+            x, st_new = jax.lax.scan(body, x, (stacked, state))
+        new_caches.append(st_new)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), new_caches
+
+
+def logits_from_hidden(params: Params, cfg: ModelConfig, hidden: jax.Array,
+                       sharder: Sharder = NULL_SHARDER) -> jax.Array:
+    """(B, T, d) -> (B, T, padded_vocab). Vocab-sharded over model axis."""
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = hidden @ head.astype(hidden.dtype)
+    return sharder.act(logits, sharder.batch_axes, None, sharder.model_axes)

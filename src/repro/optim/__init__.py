@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adagrad, adamw, cosine_schedule, sgd)
+from repro.optim.compression import (  # noqa: F401
+    int8_compress, int8_decompress, make_compressed_allreduce)

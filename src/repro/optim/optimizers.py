@@ -1,0 +1,112 @@
+"""Optimizers: vanilla SGD (the paper's choice, Alg. 2), AdaGrad (the DLRM
+repo's sparse optimizer), AdamW (LM substrate).
+
+Protocol (optax-like, no dependency):
+
+  opt = sgd(lr)
+  state = opt.init(params)
+  updates, state = opt.update(grads, state, params)
+  params = tree_map(lambda p, u: p + u, params, updates)
+
+All states are pytrees shardable like their params, so they checkpoint and
+re-mesh for free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params], Tuple[Params, Any]]
+    name: str = ""
+
+
+def _tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+# ---------------------------------------------------------------------------
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    """Paper Alg. 2 vanilla SGD (momentum=0 default for paper-faithfulness)."""
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return _tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        if momentum == 0.0:
+            return _tree_map(lambda g: -lr * g, grads), state
+        new_m = _tree_map(lambda m, g: momentum * m + g, state, grads)
+        return _tree_map(lambda m: -lr * m, new_m), new_m
+
+    return Optimizer(init, update, f"sgd(lr={lr})")
+
+
+def adagrad(lr: float, eps: float = 1e-8) -> Optimizer:
+    """Dense AdaGrad. (Sparse row-wise AdaGrad for embedding tables lives in
+    core/sharding.py `adagrad_row_update` — it must touch only looked-up
+    rows, which a dense optimizer cannot express.)"""
+    def init(params):
+        return _tree_map(jnp.zeros_like, params)
+
+    def update(grads, acc, params=None):
+        new_acc = _tree_map(lambda a, g: a + jnp.square(g), acc, grads)
+        updates = _tree_map(
+            lambda g, a: -lr * g * jax.lax.rsqrt(a + eps), grads, new_acc)
+        return updates, new_acc
+
+    return Optimizer(init, update, f"adagrad(lr={lr})")
+
+
+class AdamWState(NamedTuple):
+    mu: Params
+    nu: Params
+    count: jax.Array
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1,
+          lr_schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+          ) -> Optimizer:
+    """AdamW with optional schedule (takes the int step, returns the lr scale)."""
+    def init(params):
+        return AdamWState(
+            mu=_tree_map(jnp.zeros_like, params),
+            nu=_tree_map(jnp.zeros_like, params),
+            count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        count = state.count + 1
+        mu = _tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = _tree_map(lambda n, g: b2 * n + (1 - b2) * jnp.square(g),
+                       state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        step_lr = lr * (lr_schedule(count) if lr_schedule is not None else 1.0)
+
+        def upd(m, n, p):
+            mhat = m / c1
+            nhat = n / c2
+            return -step_lr * (mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p)
+        updates = _tree_map(upd, mu, nu, params)
+        return updates, AdamWState(mu, nu, count)
+
+    return Optimizer(init, update, f"adamw(lr={lr})")
+
+
+def cosine_schedule(warmup: int, total: int, min_frac: float = 0.1):
+    def schedule(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return schedule

@@ -1,0 +1,3 @@
+from repro.runtime.elastic import remesh_tree  # noqa: F401
+from repro.runtime.straggler import StepTimer, StragglerPolicy  # noqa: F401
+from repro.runtime.trainer import TrainLoop  # noqa: F401

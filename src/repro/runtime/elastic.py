@@ -1,0 +1,63 @@
+"""Elastic re-meshing: move a sharded pytree onto a different mesh.
+
+Scenario at scale: a pod (or a slice of one) fails; the job restarts on a
+smaller device set, restores the latest checkpoint, and continues. Because
+(a) checkpoints are mesh-agnostic host arrays (checkpoint/manager.py) and
+(b) the data pipeline is step-indexed (data/*.py), the ONLY mesh-coupled
+state is the sharded param/opt pytree — and `remesh_tree` rebuilds it.
+
+Constraints checked: divisibility of sharded dims by the new axis sizes
+(vocab padding and the table/row layout guarantee this for any power-of-two
+re-scale), else the spec degrades to replication with a warning entry in
+the returned report.
+"""
+from __future__ import annotations
+
+import logging
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+log = logging.getLogger(__name__)
+Params = Any
+
+
+def _spec_fits(x, spec: P, mesh: Mesh) -> bool:
+    for dim, axes in enumerate(spec):
+        if axes is None:
+            continue
+        axes = axes if isinstance(axes, tuple) else (axes,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if dim >= x.ndim or x.shape[dim] % size != 0:
+            return False
+    return True
+
+
+def remesh_tree(tree: Params, specs: Params, new_mesh: Mesh
+                ) -> Tuple[Params, Dict[str, int]]:
+    """Re-shard every leaf of `tree` onto `new_mesh` per `specs`.
+
+    specs: pytree of PartitionSpec congruent with `tree` (is_leaf on P).
+    Returns (new_tree, report) where report counts resharded/replicated.
+    """
+    report = {"resharded": 0, "replicated_fallback": 0}
+
+    def place(x, spec):
+        nonlocal report
+        if not isinstance(spec, P):
+            spec = P()
+        if not _spec_fits(x, spec, new_mesh):
+            log.warning("remesh: %s does not divide %s on %s; replicating",
+                        spec, getattr(x, "shape", None), new_mesh.shape)
+            report["replicated_fallback"] += 1
+            spec = P()
+        else:
+            report["resharded"] += 1
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+
+    new_tree = jax.tree_util.tree_map(
+        place, tree, specs, is_leaf=lambda s: isinstance(s, P))
+    return new_tree, report

@@ -1,0 +1,28 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+real single CPU device; distributed tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600
+                     ) -> subprocess.CompletedProcess:
+    """Run `code` in a subprocess with n virtual CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_with_devices

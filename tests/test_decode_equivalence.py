@@ -1,0 +1,125 @@
+"""decode == prefill == full-forward equivalence, per architecture family.
+
+This is the serving-correctness contract: the cached single-token path and
+the parallel (blockwise/collect) prefill must agree with the plain forward
+bit-for-bit in bf16 (identical op order per layer).
+
+MoE note: capacity-based token dropping depends on the TOTAL token count
+(N = B·T), so a full-sequence forward may drop tokens that single-token
+decode would not — that is inherent to capacity MoE, not a bug. Equivalence
+tests therefore raise capacity_factor so nothing drops; drop behaviour is
+covered separately in test_moe_capacity_drops."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.models import lm, transformer as T
+
+
+def _no_drop(cfg):
+    """Raise MoE capacity so forward and decode route identically."""
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+
+FAMILIES = ["internlm2-1.8b",       # dense GQA
+            "h2o-danube-3-4b",      # SWA ring cache
+            "deepseek-7b",          # MHA (kv == heads)
+            "rwkv6-3b",             # rwkv state
+            "jamba-1.5-large-398b", # mamba + attn hybrid
+            "mixtral-8x7b",         # moe + swa
+            "whisper-base",         # enc-dec + cross attention
+            "internvl2-26b"]        # vlm frontend
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_token_by_token_decode_matches_forward(arch):
+    cfg = _no_drop(ARCHS[arch].reduced())
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    batch = lm.smoke_batch(cfg, 2, 10)
+    toks = batch["tokens"]
+
+    memory_kv = None
+    if cfg.is_encoder_decoder:
+        enc_out = T.encode(params, cfg, batch["encoder_embeds"])
+        memory_kv = T._project_kv_memory(cfg, params["cross_attn"], enc_out)
+        h_full = T.forward(params, cfg, toks,
+                           encoder_embeds=batch["encoder_embeds"])
+    elif cfg.frontend is not None:
+        pytest.skip("frontend tokens change positions; covered by prefill test")
+    else:
+        h_full = T.forward(params, cfg, toks)
+
+    caches = T.init_cache(cfg, 2, 16)
+    hs = []
+    for t in range(toks.shape[1]):
+        hid, caches = T.forward_with_state(
+            params, cfg, toks[:, t:t + 1], caches, jnp.asarray(t),
+            memory_kv=memory_kv)
+        hs.append(hid[:, 0])
+    h_dec = jnp.stack(hs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_full, np.float32),
+                               np.asarray(h_dec, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "h2o-danube-3-4b",
+                                  "rwkv6-3b", "jamba-1.5-large-398b",
+                                  "mixtral-8x7b"])
+def test_parallel_prefill_then_decode_greedy(arch):
+    """Greedy continuation from the parallel prefill must equal greedy from
+    the full forward at every generated position."""
+    cfg = _no_drop(ARCHS[arch].reduced())
+    params = T.init_model(jax.random.PRNGKey(1), cfg)
+    batch = lm.smoke_batch(cfg, 2, 12)
+    toks = batch["tokens"]
+
+    prefill = lm.make_prefill_step(cfg, max_len=24)
+    decode = lm.make_decode_step(cfg)
+    caches, cur = prefill(params, {"tokens": toks})
+    seq = toks
+    for i in range(4):
+        # reference next token from full forward
+        h = T.forward(params, cfg, seq)
+        ref_logits = T.logits_from_hidden(params, cfg, h[:, -1:, :])
+        ref_next = jnp.argmax(ref_logits[:, 0, :cfg.vocab_size], axis=-1)
+        assert bool((cur == ref_next).all()), f"step {i}"
+        seq = jnp.concatenate([seq, cur[:, None]], axis=1)
+        caches, cur = decode(params, caches, cur, jnp.asarray(12 + i))
+
+
+def test_sliding_window_ring_cache_eviction():
+    """The SWA ring cache holds exactly the last `window` positions, and the
+    decode mask ignores any stale slot."""
+    from repro.models.layers import decode_attention
+
+    cfg = ARCHS["h2o-danube-3-4b"].reduced()    # window 16 after reduce()
+    assert cfg.sliding_window == 16
+    params = T.init_model(jax.random.PRNGKey(2), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 20), 0, cfg.vocab_size)
+    caches = T.init_cache(cfg, 1, 32)
+    for t in range(20):
+        _, caches = T.forward_with_state(params, cfg, toks[:, t:t + 1],
+                                         caches, jnp.asarray(t))
+    pos = np.asarray(caches[0]["pos"])          # (U, B, S=16)
+    assert pos.shape[-1] == 16                  # ring sized to the window
+    assert set(pos.reshape(-1).tolist()) == set(range(4, 20))
+
+    # masking: a stale slot (pos outside the window) must not affect output
+    k = jax.random.PRNGKey(4)
+    q = jax.random.normal(k, (1, 1, 4, 8))
+    kc = jax.random.normal(jax.random.PRNGKey(5), (1, 16, 2, 8))
+    vc = jax.random.normal(jax.random.PRNGKey(6), (1, 16, 2, 8))
+    kpos = jnp.arange(4, 20)[None, :]           # slot 0 holds pos 4 ... etc
+    out1 = decode_attention(q, kc, vc, jnp.asarray(19), kpos, window=16)
+    stale = kpos.at[0, 0].set(3)                # now outside window of pos 19
+    kc2 = kc.at[:, 0].set(1e3)                  # poison the stale slot
+    out2 = decode_attention(q, kc2, vc, jnp.asarray(19), stale, window=16)
+    out1b = decode_attention(q, kc, vc, jnp.asarray(19), stale, window=16)
+    np.testing.assert_allclose(np.asarray(out2, np.float32),
+                               np.asarray(out1b, np.float32), rtol=1e-5)

@@ -1,0 +1,161 @@
+"""Coverage for the §Perf-optimized code paths: distributed MoE dispatch,
+chunked recurrent scans, and the LM sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+from repro.configs.registry import ARCHS
+
+
+# ----------------------------------------------------------- chunked scans
+@pytest.mark.parametrize("kind", ["rwkv6", "mamba"])
+def test_chunked_scan_matches_plain_with_grads(kind):
+    from repro.models import ssm as S
+
+    cfg = ModelConfig(name="t", family="ssm" if kind == "rwkv6" else "hybrid",
+                      n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                      d_ff=64, vocab_size=64,
+                      ssm=SSMConfig(kind=kind, head_dim=16, d_state=8))
+    init_p = S.init_rwkv6 if kind == "rwkv6" else S.init_mamba
+    scan = S.rwkv6_scan if kind == "rwkv6" else S.mamba_scan
+    p = init_p(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 96, cfg.d_model))
+
+    old = os.environ.get("REPRO_SSM_CHUNK")
+    try:
+        os.environ["REPRO_SSM_CHUNK"] = "0"
+        y0, _ = scan(p, x, cfg)
+        g0 = jax.grad(lambda p: jnp.sum(scan(p, x, cfg)[0] ** 2))(p)
+        os.environ["REPRO_SSM_CHUNK"] = "24"
+        y1, _ = scan(p, x, cfg)
+        g1 = jax.grad(lambda p: jnp.sum(scan(p, x, cfg)[0] ** 2))(p)
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_SSM_CHUNK", None)
+        else:
+            os.environ["REPRO_SSM_CHUNK"] = old
+    np.testing.assert_allclose(np.asarray(y0, np.float32),
+                               np.asarray(y1, np.float32), rtol=1e-4, atol=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(g0), jax.tree_util.tree_leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_chunked_scan_falls_back_on_odd_lengths():
+    from repro.models.ssm import chunked_time_scan
+
+    def step(c, xs):
+        (x,) = xs
+        return c + x, c
+
+    xs = (jnp.arange(10.0),)
+    os.environ["REPRO_SSM_CHUNK"] = "64"       # chunk > T -> plain scan
+    try:
+        c, ys = chunked_time_scan(step, jnp.zeros(()), xs, 10)
+    finally:
+        os.environ.pop("REPRO_SSM_CHUNK", None)
+    assert float(c) == 45.0
+
+
+# ------------------------------------------------------- distributed MoE
+MOE_CASE = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import init_moe, moe_block
+from repro.models.moe_dist import moe_block_local_dispatch, moe_block_ep_a2a
+from repro.models.common import Sharder
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 4), ('data', 'model'))
+sharder = Sharder(mesh, batch_axes=('data',), model_axes=('model',))
+cfg = ModelConfig(name='t', family='moe', n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=4, d_ff=64, vocab_size=64,
+                  moe=MoEConfig(num_experts={E}, top_k=2, capacity_factor=64.0))
+p = init_moe(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
+ref = moe_block(p, x, cfg)
+xd = jax.device_put(x, NamedSharding(mesh, P('data', None, None)))
+out = jax.jit(lambda p, x: {fn}(p, x, cfg, sharder))(p, xd)
+np.testing.assert_allclose(np.asarray(ref, np.float32),
+                           np.asarray(out, np.float32), rtol=2e-3, atol=2e-3)
+# gradient parity
+gd = jax.jit(jax.grad(lambda p, x: jnp.sum({fn}(p, x, cfg, sharder)**2)))(p, xd)
+gg = jax.grad(lambda p, x: jnp.sum(moe_block(p, x, cfg)**2))(p, x)
+for k in gg:
+    np.testing.assert_allclose(np.asarray(gd[k], np.float32),
+                               np.asarray(gg[k], np.float32),
+                               rtol=5e-3, atol=5e-3, err_msg=k)
+print("MATCH")
+"""
+
+
+@pytest.mark.parametrize("fn,E", [
+    ("moe_block_local_dispatch", 8),
+    ("moe_block_local_dispatch", 6),
+    ("moe_block_ep_a2a", 8),
+])
+def test_distributed_moe_matches_global(subproc, fn, E):
+    r = subproc(MOE_CASE.format(fn=fn, E=E))
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MATCH" in r.stdout
+
+
+# ------------------------------------------------------- sharding rules
+def test_param_specs_2d_sharding():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import sharding_rules as rules
+    from repro.models import transformer as T
+
+    cfg = ARCHS["internlm2-1.8b"]
+    params = jax.eval_shape(lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+    specs = rules.param_specs(cfg, params)
+    flat = {rules._path_str(p): s for p, s in
+            jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))[0]}
+    assert flat["embed"] == P("model", "data")
+    # attention wq: stacked (U, d, Hq*hd) -> (None, data, model)
+    wq = [v for k, v in flat.items() if k.endswith("wq")][0]
+    assert wq == P(None, "data", "model")
+    wo = [v for k, v in flat.items() if k.endswith("wo")][0]
+    assert wo == P(None, "model", "data")
+    # norms replicated
+    n1 = [v for k, v in flat.items() if k.endswith("norm1")][0]
+    assert n1 == P()
+
+
+def test_filter_specs_drops_nondivisible():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import sharding_rules as rules
+
+    mesh = make_host_mesh()                    # 1 device: everything drops
+    specs = {"w": P("data", "model")}
+    leaves = {"w": jax.ShapeDtypeStruct((7, 13), jnp.float32)}
+    out = rules.filter_specs(specs, leaves, mesh)
+    assert out["w"] == P(None, None)
+
+
+def test_moe_impl_env_selector():
+    """REPRO_MOE_IMPL=global forces the baseline path even with a mesh."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.common import Sharder
+    from repro.models.layers import init_moe, moe_block
+
+    cfg = ModelConfig(name="t", family="moe", n_layers=2, d_model=16,
+                      n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=64,
+                      moe=MoEConfig(num_experts=4, top_k=2))
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.ones((2, 3, 16))
+    mesh = make_host_mesh()
+    os.environ["REPRO_MOE_IMPL"] = "global"
+    try:
+        out = moe_block(p, x, cfg, Sharder(mesh))
+    finally:
+        os.environ.pop("REPRO_MOE_IMPL", None)
+    assert out.shape == x.shape

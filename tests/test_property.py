@@ -1,0 +1,152 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_dlrm
+from repro.core.collectives import (CollectiveOp, Interconnect, Topology,
+                                    collective_time)
+from repro.core.perf_model import breakdown, sweep_system
+from repro.core.planner import plan_dlrm
+from repro.data.recsys import _zipf_indices
+from repro.optim.compression import int8_compress, int8_decompress
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+# ------------------------------------------------------- roofline monotonicity
+@settings(**SETTINGS)
+@given(lat1=st.floats(0.5, 10.0), lat2=st.floats(0.5, 10.0),
+       bw=st.sampled_from([100.0, 400.0, 1000.0]),
+       config=st.sampled_from(["dlrm-rm2-small-unsharded",
+                               "dlrm-rm2-small-sharded",
+                               "dlrm-rm2-large-sharded"]),
+       mode=st.sampled_from(["inference", "training"]))
+def test_qps_monotone_in_latency(lat1, lat2, bw, config, mode):
+    cfg = get_dlrm(config)
+    lo, hi = sorted([lat1, lat2])
+    q_lo = breakdown(cfg, sweep_system(lo * 1e-6, bw * 1e9), mode).qps
+    q_hi = breakdown(cfg, sweep_system(hi * 1e-6, bw * 1e9), mode).qps
+    assert q_lo >= q_hi * (1 - 1e-9)
+
+
+@settings(**SETTINGS)
+@given(bw1=st.floats(100.0, 1000.0), bw2=st.floats(100.0, 1000.0),
+       lat=st.sampled_from([0.5, 2.0, 10.0]),
+       config=st.sampled_from(["dlrm-rm2-small-sharded",
+                               "dlrm-rm2-large-sharded"]),
+       mode=st.sampled_from(["inference", "training"]))
+def test_qps_monotone_in_bandwidth(bw1, bw2, lat, config, mode):
+    cfg = get_dlrm(config)
+    lo, hi = sorted([bw1, bw2])
+    q_lo = breakdown(cfg, sweep_system(lat * 1e-6, lo * 1e9), mode).qps
+    q_hi = breakdown(cfg, sweep_system(lat * 1e-6, hi * 1e9), mode).qps
+    assert q_hi >= q_lo * (1 - 1e-9)
+
+
+# -------------------------------------------------- collective algebra
+@settings(**SETTINGS)
+@given(v=st.floats(1e3, 1e9), n=st.integers(2, 512),
+       bw=st.floats(1e9, 1e12), lat=st.floats(1e-7, 1e-4))
+def test_allreduce_equals_rs_plus_ag(v, n, bw, lat):
+    link = Interconnect(bw, lat, Topology.QUADRATIC)
+    ar = collective_time(CollectiveOp.ALL_REDUCE, v, n, link)
+    rs = collective_time(CollectiveOp.REDUCE_SCATTER, v, n, link)
+    ag = collective_time(CollectiveOp.ALL_GATHER, v, n, link)
+    np.testing.assert_allclose(ar.wire_bytes, rs.wire_bytes + ag.wire_bytes,
+                               rtol=1e-9)
+
+
+@settings(**SETTINGS)
+@given(v=st.floats(1.0, 1e9), n=st.integers(2, 1024))
+def test_wire_bytes_below_payload_times_two(v, n):
+    link = Interconnect(1e11, 1e-6, Topology.QUADRATIC)
+    for op in (CollectiveOp.ALL_TO_ALL, CollectiveOp.REDUCE_SCATTER,
+               CollectiveOp.ALL_GATHER):
+        c = collective_time(op, v, n, link)
+        assert 0 <= c.wire_bytes < v
+    ar = collective_time(CollectiveOp.ALL_REDUCE, v, n, link)
+    assert ar.wire_bytes < 2 * v
+
+
+# ---------------------------------------------------------- planner coherence
+@settings(**SETTINGS)
+@given(lat=st.floats(0.5, 10.0), bw=st.floats(100.0, 1000.0),
+       config=st.sampled_from(list(["dlrm-rm2-small-unsharded",
+                                    "dlrm-rm2-large-unsharded"])))
+def test_planner_picks_argmax(lat, bw, config):
+    cfg = get_dlrm(config)
+    sys_ = sweep_system(lat * 1e-6, bw * 1e9)
+    plan = plan_dlrm(cfg, sys_)
+    assert plan.predicted_qps >= max(plan.qps_table_wise,
+                                     plan.qps_row_wise_unpooled,
+                                     plan.qps_row_wise_partial) * (1 - 1e-9)
+
+
+# ------------------------------------------------------------ int8 compression
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-3, 1e3),
+       n=st.integers(1, 2048))
+def test_int8_roundtrip_error_bound(seed, scale, n):
+    """Quantization error <= absmax/254 per block element."""
+    x = np.random.RandomState(seed).randn(n).astype(np.float32) * scale
+    q, s = int8_compress(jnp.asarray(x))
+    out = np.asarray(int8_decompress(q, s, (n,)))
+    bound = np.abs(x).max() / 127.0 * 0.5 + 1e-7
+    # per-block bound is tighter; global bound suffices as a safety net
+    assert np.abs(out - x).max() <= np.abs(x).max() / 127.0 + 1e-6
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 100))
+def test_int8_error_feedback_converges(seed):
+    """With error feedback, the RUNNING SUM of compressed values converges to
+    the running sum of true values (unbiasedness over steps)."""
+    rng = np.random.RandomState(seed)
+    true_sum = np.zeros(64, np.float32)
+    sent_sum = np.zeros(64, np.float32)
+    err = jnp.zeros(64)
+    for _ in range(20):
+        g = rng.randn(64).astype(np.float32)
+        true_sum += g
+        gc = jnp.asarray(g) + err
+        q, s = int8_compress(gc)
+        deq = int8_decompress(q, s, (64,))
+        err = gc - deq
+        sent_sum += np.asarray(deq)
+    # residual bounded by one quantization step, NOT accumulating over steps
+    assert np.abs(true_sum - sent_sum).max() <= np.abs(true_sum).max() / 10 + 0.5
+
+
+# ------------------------------------------------------------ data pipeline
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), alpha=st.floats(0.0, 1.5),
+       n_rows=st.sampled_from([128, 4096, 2**20]))
+def test_zipf_indices_in_range(seed, alpha, n_rows):
+    idx = _zipf_indices(jax.random.PRNGKey(seed), (64,), n_rows, alpha)
+    a = np.asarray(idx)
+    assert (a >= 0).all() and (a < n_rows).all()
+
+
+def test_zipf_skew_increases_with_alpha():
+    k = jax.random.PRNGKey(0)
+    flat = lambda a: np.asarray(_zipf_indices(k, (20000,), 1024, a))
+    uni, skew = flat(0.0), flat(1.2)
+    top_uni = np.bincount(uni, minlength=1024).max()
+    top_skew = np.bincount(skew, minlength=1024).max()
+    assert top_skew > 3 * top_uni
+
+
+# ------------------------------------------------------------ pooling algebra
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000), splits=st.integers(1, 4))
+def test_partial_pool_associativity(seed, splits):
+    """sum-pool(rows) == Σ_p sum-pool(rows owned by p) — the identity that
+    legitimizes the beyond-paper partial_pool exchange."""
+    rng = np.random.RandomState(seed)
+    rows = rng.randn(12, 8).astype(np.float32)
+    full = rows.sum(0)
+    parts = np.array_split(rows, splits, axis=0)
+    partial = sum(p.sum(0) for p in parts)
+    np.testing.assert_allclose(full, partial, rtol=1e-5, atol=1e-5)

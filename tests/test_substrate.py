@@ -1,0 +1,171 @@
+"""Substrate tests: checkpoint, data, runtime, optim, hlo_analysis."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.data import make_lm_batch, make_recsys_batch
+from repro.configs.registry import ARCHS, get_dlrm
+from repro.launch import hlo_analysis
+from repro.optim import adagrad, adamw, sgd
+from repro.runtime import StepTimer, StragglerPolicy
+from repro.runtime.straggler import Action
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"w": jnp.arange(12.0).reshape(3, 4), "b": [jnp.ones(3), {"x": jnp.zeros(2)}]}
+    save(str(tmp_path), 7, tree, {"note": "hi"})
+    out, step, meta = restore(str(tmp_path), tree)
+    assert step == 7 and meta["note"] == "hi"
+    for a, b in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity_no_partial_visible(tmp_path):
+    """A missing manifest (simulated crash) is never listed as latest."""
+    tree = {"a": jnp.ones(4)}
+    save(str(tmp_path), 1, tree)
+    # simulate a crashed write: directory without manifest
+    os.makedirs(tmp_path / "step_00000002")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_manager_async_and_retention(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.zeros(8)}
+    for s in (1, 2, 3, 4):
+        m.save(s, {"a": jnp.full(8, float(s))})
+    m.wait()
+    steps = sorted(int(p.split("_")[1]) for p in os.listdir(tmp_path)
+                   if p.startswith("step_"))
+    assert steps == [3, 4]
+    out, step, _ = m.restore(tree)
+    assert step == 4 and float(np.asarray(out["a"])[0]) == 4.0
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    save(str(tmp_path), 1, {"a": jnp.ones(2)})
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), {"a": jnp.ones(2), "b": jnp.ones(2)})
+
+
+# ---------------------------------------------------------------- data
+def test_recsys_batches_deterministic_and_distinct():
+    cfg = get_dlrm("dlrm-rm2-small-unsharded").reduced()
+    b1 = make_recsys_batch(cfg, 5, seed=1)
+    b2 = make_recsys_batch(cfg, 5, seed=1)
+    b3 = make_recsys_batch(cfg, 6, seed=1)
+    for k in b1:
+        np.testing.assert_array_equal(np.asarray(b1[k]), np.asarray(b2[k]))
+    assert not np.array_equal(np.asarray(b1["indices"]), np.asarray(b3["indices"]))
+
+
+def test_lm_batch_labels_are_next_tokens():
+    cfg = ARCHS["internlm2-1.8b"].reduced()
+    b = make_lm_batch(cfg, 0, seed=0, batch=2, seq=32)
+    assert b["tokens"].shape == (2, 31) and b["labels"].shape == (2, 31)
+    # labels[t] == tokens[t+1] by construction
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+# ---------------------------------------------------------------- straggler
+def test_step_timer_flags_outliers():
+    t = StepTimer()
+    for _ in range(20):
+        t.record(1.0)
+    assert t.is_straggler_step(2.0)
+    assert not t.is_straggler_step(1.01)
+
+
+def test_straggler_policy_escalates():
+    p = StragglerPolicy(log_after=1, reshuffle_after=2, evict_after=3)
+    acts = [p.report("h1", True) for _ in range(3)]
+    assert acts == [Action.LOG, Action.RESHUFFLE, Action.EVICT]
+    assert p.report("h2", False) == Action.NONE
+
+
+def test_straggler_strikes_decay():
+    p = StragglerPolicy(decay_every=4, evict_after=100)
+    for _ in range(2):
+        p.report("h1", True)
+    for _ in range(8):
+        p.report("h1", False)
+    assert p.strikes["h1"] < 2
+
+
+# ---------------------------------------------------------------- optim
+def _quad_loss(w):
+    return jnp.sum((w - 3.0) ** 2)
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), sgd(0.05, momentum=0.9),
+                                 adagrad(0.9), adamw(0.2, weight_decay=0.0)])
+def test_optimizers_minimize_quadratic(opt):
+    w = jnp.zeros(4)
+    state = opt.init(w)
+    for _ in range(150):
+        g = jax.grad(_quad_loss)(w)
+        upd, state = opt.update(g, state, w)
+        w = w + upd
+    assert float(_quad_loss(w)) < 1e-2, opt.name
+
+
+# ---------------------------------------------------------------- hlo analysis
+SYNTH_HLO = """
+HloModule synth, num_partitions=4
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%x), replica_groups=[1,4]<=[4], to_apply=%add
+  %d = f32[8,8]{1,0} dot(%ar, %ar), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %d)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %init = (s32[], f32[8,8]) tuple(%a, %a)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"},"other":1}
+  %ag = f32[32,8]{1,0} all-gather(%a), replica_groups=[1,4]<=[4], dimensions={0}
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_shape_bytes():
+    assert hlo_analysis.shape_bytes("f32[8,8]{1,0}") == 256
+    assert hlo_analysis.shape_bytes("(s32[], f32[4,4])") == 4 + 64
+    assert hlo_analysis.shape_bytes("bf16[2,3]") == 12
+
+
+def test_hlo_loop_expansion_and_collectives():
+    a = hlo_analysis.analyze(SYNTH_HLO)
+    # dot: 2*8*8*8 = 1024 flops, x5 trips
+    assert a["flops_per_chip"] == 5 * 1024
+    # all-reduce 2*256*(3/4)=384 x5 trips; all-gather result-operand = 1024-256
+    assert a["collective_by_kind"]["all-reduce"] == 5 * 384
+    assert a["collective_by_kind"]["all-gather"] == 768
+    assert a["unknown_trip_loops"] == 0
+
+
+def test_roofline_terms_pick_dominant():
+    t = hlo_analysis.roofline_terms(197e12, 100e9, 1e9)
+    assert t["bottleneck"] == "compute" and abs(t["t_compute_s"] - 1.0) < 1e-9
+    t = hlo_analysis.roofline_terms(1e9, 819e9, 1e9)
+    assert t["bottleneck"] == "memory"
+    t = hlo_analysis.roofline_terms(1e9, 1e9, 500e9)
+    assert t["bottleneck"] == "collective"
