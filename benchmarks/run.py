@@ -4,9 +4,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (fig6_membw, fig8_inference, fig9_latency,
-                        fig10_sharding, fig11_training, fig12_13_phases,
-                        kernel_bench, roofline, table16_17_upper_bounds)
+from benchmarks import (bench_tiered_embedding, fig6_membw, fig8_inference,
+                        fig9_latency, fig10_sharding, fig11_training,
+                        fig12_13_phases, kernel_bench, roofline,
+                        table16_17_upper_bounds)
 
 SECTIONS = [
     ("fig6", fig6_membw.main),
@@ -17,6 +18,7 @@ SECTIONS = [
     ("fig12_13", fig12_13_phases.main),
     ("table16_17", table16_17_upper_bounds.main),
     ("kernels", kernel_bench.main),
+    ("tiered_embedding", lambda: bench_tiered_embedding.main([])),
     ("roofline", roofline.main),
 ]
 

@@ -42,11 +42,14 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from dataclasses import replace as _replace
+
 from repro.configs.base import DLRMConfig
 from repro.core.collectives import (
     CollectiveOp, Interconnect, Topology, collective_time)
 from repro.core.memsys import (
-    MemorySystem, recspeed_hbm2e, recspeed_sweep_hbm2e, tpu_v5e_hbm, v100_hbm2)
+    MemorySystem, recspeed_hbm2e, recspeed_sweep_hbm2e, tpu_v5e_hbm,
+    v100_hbm2, xeon_ddr4_6ch)
 
 
 # ---------------------------------------------------------------------------
@@ -61,16 +64,19 @@ class SystemConfig:
     compute_flops: float              # dense FLOP/s per chip (fp16/bf16)
     a2a: Interconnect                 # all-to-all / all-gather characteristics
     allreduce: Interconnect           # all-reduce characteristics
-    mem: MemorySystem                 # per-chip attached memory
+    mem: MemorySystem                 # per-chip attached (bulk-tier) memory
     index_bytes: int = 4              # paper: 320 KB = B*T*L*4/n
     elem_bytes: int = 2               # fp16 everywhere (paper Sec. V-A)
+    # Optional fast memory tier (paper Sec. VII-A hybrid HBM+DDR4): lookups
+    # that hit the planner's hot placement are serviced here, the rest by
+    # `mem`. None = single-tier system (hit_ratio is then ignored).
+    fast_mem: Optional[MemorySystem] = None
 
     def with_cc(self, latency_s: float, bandwidth: float) -> "SystemConfig":
         """Sweep helper: same system, different CC latency/bandwidth."""
         a2a = Interconnect(bandwidth, latency_s, self.a2a.topology)
         ar = Interconnect(bandwidth, latency_s, self.allreduce.topology)
-        return SystemConfig(self.name, self.n_chips, self.compute_flops,
-                            a2a, ar, self.mem, self.index_bytes, self.elem_bytes)
+        return _replace(self, a2a=a2a, allreduce=ar)
 
 
 def recspeed_system() -> SystemConfig:
@@ -86,6 +92,16 @@ def dgx2_system() -> SystemConfig:
     a2a = Interconnect(150e9, 100e-6, Topology.SWITCHED)
     ar = Interconnect(150e9, 50e-6, Topology.SWITCHED)
     return SystemConfig("dgx-2", 16, 125e12, a2a, ar, v100_hbm2())
+
+
+def recspeed_hybrid_system() -> SystemConfig:
+    """Paper Sec. VII-A hybrid memory: per-chip HBM2E fast tier serving the
+    planner's hot placement, 256 GB DDR4 bulk tier serving cold rows. The
+    cache-hit-ratio term (`hit_ratio` on `breakdown`) splits lookup traffic
+    between the tiers."""
+    base = recspeed_system()
+    return _replace(base, name="recspeed-hybrid",
+                    mem=xeon_ddr4_6ch(256e9), fast_mem=base.mem)
 
 
 def sweep_system(latency_s: float, bandwidth: float, n_chips: int = 8) -> SystemConfig:
@@ -184,10 +200,27 @@ def _payloads(cfg: DLRMConfig, sys: SystemConfig) -> Dict[str, float]:
     }
 
 
+def _tiered_access_time(bytes_moved: float, access_bytes: int,
+                        sys: SystemConfig, hit_ratio: float,
+                        write: bool = False) -> float:
+    """Random-access service time with the cache-hit-ratio term: `hit_ratio`
+    of the traffic is serviced by the fast tier, the rest by the bulk tier.
+    Single-tier systems (fast_mem=None) ignore hit_ratio."""
+    rate = (MemorySystem.random_write_bytes_per_s if write
+            else MemorySystem.random_access_bytes_per_s)
+    t_bulk = bytes_moved / rate(sys.mem, access_bytes)
+    if sys.fast_mem is None or hit_ratio <= 0.0:
+        return t_bulk
+    h = min(hit_ratio, 1.0)
+    return (h * bytes_moved / rate(sys.fast_mem, access_bytes)
+            + (1.0 - h) * t_bulk)
+
+
 def inference_breakdown(
     cfg: DLRMConfig,
     sys: SystemConfig,
     row_wise_exchange: str = "unpooled",   # "unpooled" (paper) | "partial_pool"
+    hit_ratio: float = 0.0,                # planner placement fast-tier share
 ) -> StepBreakdown:
     p = _payloads(cfg, sys)
     n = sys.n_chips
@@ -195,8 +228,8 @@ def inference_breakdown(
 
     bd.t_idx_a2a = collective_time(
         CollectiveOp.ALL_TO_ALL, p["indices"], n, sys.a2a).total_s
-    bd.t_lookup = p["lookup_bytes"] / sys.mem.random_access_bytes_per_s(
-        cfg.embed_dim * sys.elem_bytes)
+    bd.t_lookup = _tiered_access_time(
+        p["lookup_bytes"], cfg.embed_dim * sys.elem_bytes, sys, hit_ratio)
 
     if cfg.sharding == "table_wise":
         bd.t_emb_exchange = collective_time(
@@ -220,10 +253,11 @@ def training_breakdown(
     sys: SystemConfig,
     row_wise_exchange: str = "unpooled",
     overlap_allreduce: bool = True,
+    hit_ratio: float = 0.0,
 ) -> StepBreakdown:
     p = _payloads(cfg, sys)
     n = sys.n_chips
-    bd = inference_breakdown(cfg, sys, row_wise_exchange)
+    bd = inference_breakdown(cfg, sys, row_wise_exchange, hit_ratio)
     bd.mode = "training"
 
     # backward dense compute ~ 2x forward FLOPs (dgrad + wgrad)
@@ -241,9 +275,11 @@ def training_breakdown(
         bd.t_grad_exchange = collective_time(
             CollectiveOp.ALL_GATHER, p["pooled_all"], n, sys.a2a).total_s
     # Originally-looked-up rows are buffered on-chip (paper Sec. V-B), so the
-    # update is a write-only stream of B*T*L/n rows.
-    bd.t_row_write = p["lookup_bytes"] / sys.mem.random_write_bytes_per_s(
-        cfg.embed_dim * sys.elem_bytes)
+    # update is a write-only stream of B*T*L/n rows (hot-row writes land in
+    # the fast tier under a placed plan — same split as the lookups).
+    bd.t_row_write = _tiered_access_time(
+        p["lookup_bytes"], cfg.embed_dim * sys.elem_bytes, sys, hit_ratio,
+        write=True)
 
     ar_phase = (max(bd.t_dense_allreduce, bd.t_bwd_compute) if overlap_allreduce
                 else bd.t_dense_allreduce + bd.t_bwd_compute)
@@ -252,11 +288,13 @@ def training_breakdown(
 
 
 def breakdown(cfg: DLRMConfig, sys: SystemConfig, mode: str,
-              row_wise_exchange: str = "unpooled") -> StepBreakdown:
+              row_wise_exchange: str = "unpooled",
+              hit_ratio: float = 0.0) -> StepBreakdown:
     if mode == "inference":
-        return inference_breakdown(cfg, sys, row_wise_exchange)
+        return inference_breakdown(cfg, sys, row_wise_exchange, hit_ratio)
     if mode == "training":
-        return training_breakdown(cfg, sys, row_wise_exchange)
+        return training_breakdown(cfg, sys, row_wise_exchange,
+                                  hit_ratio=hit_ratio)
     raise ValueError(mode)
 
 

@@ -52,6 +52,10 @@ class ShardingPlan:
     placements: Tuple[TablePlacement, ...] = ()
     fast_bytes_used: int = 0
     bulk_bytes_used: int = 0
+    # Fraction of embedding lookups serviced by the fast tier under this
+    # placement (tables placed "fast" count in full; consumed by the
+    # perf model's cache-hit term and by the tiered runtime).
+    hit_ratio: float = 0.0
 
     @property
     def predicted_qps(self) -> float:
@@ -111,26 +115,25 @@ def place_tables(
 
     placements: List[Optional[TablePlacement]] = [None] * cfg.num_tables
     fast_used = bulk_used = 0
-    owner_rr = 0
+    bulk_capacity_total = bulk_capacity_bytes * n_chips
     # fast tier budget is per-chip; a table_wise table occupies one chip's fast mem
     fast_left = [fast_capacity_bytes] * n_chips
     for t in order:
         t = int(t)
-        placed = False
         # try fast tier: least-loaded chip that fits
         chip = int(np.argmax(fast_left))
         if fast_left[chip] >= t_bytes[t]:
             fast_left[chip] -= t_bytes[t]
             fast_used += t_bytes[t]
             placements[t] = TablePlacement(t, "fast", "table_wise", chip)
-            placed = True
-        if not placed:
-            bulk_used += t_bytes[t]
-            placements[t] = TablePlacement(t, "bulk", "row_wise", None)
-        owner_rr += 1
-    assert bulk_used <= bulk_capacity_bytes * n_chips, (
-        f"model does not fit: bulk needs {bulk_used}, "
-        f"capacity {bulk_capacity_bytes * n_chips}")
+            continue
+        if bulk_used + t_bytes[t] > bulk_capacity_total:
+            raise ValueError(
+                f"model does not fit: table {t} ({t_bytes[t]} B) overflows the "
+                f"bulk tier ({bulk_used} B of {bulk_capacity_total} B already "
+                f"used across {n_chips} chips)")
+        bulk_used += t_bytes[t]
+        placements[t] = TablePlacement(t, "bulk", "row_wise", None)
     return [p for p in placements if p is not None], fast_used, bulk_used
 
 
@@ -142,5 +145,11 @@ def plan_with_placement(cfg: DLRMConfig, system: SystemConfig,
     placements, fast_used, bulk_used = place_tables(
         cfg, access_freq, fast_capacity_bytes, bulk_capacity_bytes,
         system.n_chips)
+    freq = np.asarray(access_freq, dtype=np.float64)
+    total = float(freq.sum())
+    fast_mass = float(sum(freq[p.table_id] for p in placements
+                          if p.tier == "fast"))
+    hit = fast_mass / total if total > 0 else 0.0
     return replace(base, placements=tuple(placements),
-                   fast_bytes_used=fast_used, bulk_bytes_used=bulk_used)
+                   fast_bytes_used=fast_used, bulk_bytes_used=bulk_used,
+                   hit_ratio=hit)

@@ -32,7 +32,10 @@ flattened processor group, the paper's "no parameters are replicated").
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +44,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import DLRMConfig
 from repro.core import dlrm as dlrm_lib
+from repro.core.planner import ShardingPlan, TablePlacement
 
 Axis = Union[str, Tuple[str, ...]]
 Params = Dict[str, Any]
@@ -53,6 +57,103 @@ def _axis_size(mesh: Mesh, axis: Axis) -> int:
     for a in axis:
         n *= mesh.shape[a]
     return n
+
+
+# ---------------------------------------------------------------------------
+# Plan execution: the planner's per-table tier decisions -> runnable groups
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PlanGroups:
+    """Executable partition of the tables under a ShardingPlan.
+
+    Fast-tier tables run table_wise (whole table near one processor's fast
+    memory, pooled-row exchange only); bulk-tier tables run row_wise across
+    the mesh — the paper's two extremes, MIXED per the planner's placement.
+    """
+
+    fast_ids: Tuple[int, ...]    # table_wise group (fast tier)
+    bulk_ids: Tuple[int, ...]    # row_wise group (bulk tier)
+
+    @property
+    def inv_perm(self) -> Tuple[int, ...]:
+        """Position of each original table in concat(fast, bulk) order."""
+        perm = self.fast_ids + self.bulk_ids
+        inv = [0] * len(perm)
+        for pos, t in enumerate(perm):
+            inv[t] = pos
+        return tuple(inv)
+
+
+def plan_table_groups(plan: ShardingPlan, n: int) -> PlanGroups:
+    """Partition table ids by placement tier, honoring the hardware
+    constraint that the fast group's table all-to-all divides the axis:
+    the trailing `len(fast) % n` fast tables (highest table ids — a
+    deterministic choice so every caller derives identical groups) are
+    demoted to the bulk tier."""
+    if not plan.placements:
+        raise ValueError("plan has no placements; use plan_with_placement")
+    fast = sorted(p.table_id for p in plan.placements if p.tier == "fast")
+    bulk = sorted(p.table_id for p in plan.placements if p.tier != "fast")
+    spill = len(fast) % n
+    if spill:
+        fast, demoted = fast[:-spill], fast[-spill:]
+        bulk = sorted(bulk + demoted)
+    return PlanGroups(tuple(fast), tuple(bulk))
+
+
+def reconcile_plan_with_mesh(plan: ShardingPlan, n: int,
+                             access_freq=None) -> ShardingPlan:
+    """Fold the mesh-divisibility demotion into the plan itself, so its
+    placements AND hit_ratio describe what the step factories will actually
+    execute. With `access_freq` (per-table) the `len(fast) % n` spill is
+    demoted COLDEST-first and the hit ratio recomputed exactly; without it
+    the demotion falls back to `plan_table_groups`' id-order rule and the
+    hit ratio is scaled by fast-table count. Running the step factories on
+    the reconciled plan is a no-spill round trip either way."""
+    from dataclasses import replace
+    fast = sorted(p.table_id for p in plan.placements if p.tier == "fast")
+    spill = len(fast) % n
+    if spill and access_freq is not None:
+        freq = np.asarray(access_freq, np.float64)
+        keep = sorted(sorted(fast, key=lambda t: freq[t])[spill:])
+        fast_set = set(keep)
+    else:
+        fast_set = set(plan_table_groups(plan, n).fast_ids)
+    placements = tuple(
+        p if (p.table_id in fast_set) == (p.tier == "fast")
+        else TablePlacement(p.table_id, "bulk", "row_wise", None)
+        for p in plan.placements)
+    n_fast_planned = len(fast)
+    if access_freq is not None:
+        freq = np.asarray(access_freq, np.float64)
+        total = float(freq.sum())
+        hit = (float(sum(freq[t] for t in fast_set)) / total
+               if total > 0 else 0.0)
+    elif n_fast_planned:
+        hit = plan.hit_ratio * len(fast_set) / n_fast_planned
+    else:
+        hit = plan.hit_ratio
+    return replace(plan, placements=placements, hit_ratio=hit)
+
+
+def split_dlrm_params_by_plan(params: Params, groups: PlanGroups) -> Params:
+    """Stacked-table params {"tables": (T, R, d)} -> plan-grouped params
+    {"tables_fast": (Tf, R, d), "tables_bulk": (Tb, R, d)}."""
+    tables = params["tables"]
+    return {
+        "bot_mlp": params["bot_mlp"], "top_mlp": params["top_mlp"],
+        "tables_fast": tables[np.asarray(groups.fast_ids, np.int32)],
+        "tables_bulk": tables[np.asarray(groups.bulk_ids, np.int32)],
+    }
+
+
+def merge_dlrm_params_by_plan(params: Params, groups: PlanGroups) -> Params:
+    """Inverse of `split_dlrm_params_by_plan` (checkpoint / equivalence)."""
+    both = jnp.concatenate([params["tables_fast"], params["tables_bulk"]], 0)
+    return {
+        "bot_mlp": params["bot_mlp"], "top_mlp": params["top_mlp"],
+        "tables": both[np.asarray(groups.inv_perm, np.int32)],
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -195,6 +296,69 @@ def row_wise_forward(tables_local: jax.Array, indices_local: jax.Array,
     return pooled, idx_all
 
 
+def planned_forward(tables_fast: jax.Array, tables_bulk: jax.Array,
+                    indices_local: jax.Array, axis: Axis, mesh_n: int,
+                    exchange: str, groups: PlanGroups,
+                    ) -> Tuple[jax.Array, Optional[jax.Array],
+                               Optional[jax.Array]]:
+    """Mixed-mode Alg. 1 executing the planner's placements: fast-tier
+    tables table_wise, bulk-tier tables row_wise, pooled outputs re-stitched
+    into the original table order.
+
+    tables_fast : (Tf/n, R, d) this processor's whole fast tables
+    tables_bulk : (Tb, R/n, d) a row range of every bulk table
+    indices_local: (B/n, T, L) all tables, original order
+    returns pooled (B/n, T, d), fast ctx (owner indices), bulk ctx (idx_all).
+    """
+    parts = []
+    ctx_fast = ctx_bulk = None
+    if groups.fast_ids:
+        idx_f = indices_local[:, np.asarray(groups.fast_ids, np.int32), :]
+        pooled_f, ctx_fast = table_wise_forward(tables_fast, idx_f, axis)
+        parts.append(pooled_f)
+    if groups.bulk_ids:
+        idx_b = indices_local[:, np.asarray(groups.bulk_ids, np.int32), :]
+        pooled_b, ctx_bulk = row_wise_forward(tables_bulk, idx_b, axis,
+                                              mesh_n, exchange)
+        parts.append(pooled_b)
+    pooled = jnp.concatenate(parts, axis=1)
+    pooled = pooled[:, np.asarray(groups.inv_perm, np.int32), :]
+    return pooled, ctx_fast, ctx_bulk
+
+
+def _table_wise_expand_grads(ctx: jax.Array, g_pooled: jax.Array, axis: Axis
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Alg. 2 no_sharding grad routing: pooled grads -> owners, expanded to
+    every looked-up row. Returns (flat_idx (T/n, N), flat_g (T/n, N, d))."""
+    g_owner = jax.lax.all_to_all(g_pooled, axis, 1, 0, tiled=True)
+    B, Tn, L = ctx.shape
+    g_rows = jnp.broadcast_to(g_owner[:, :, None, :],
+                              (B, Tn, L, g_owner.shape[-1]))
+    flat_idx = ctx.transpose(1, 0, 2).reshape(Tn, B * L)
+    flat_g = g_rows.transpose(1, 0, 2, 3).reshape(Tn, B * L, -1)
+    return flat_idx, flat_g
+
+
+def _row_wise_expand_grads(tables_local: jax.Array, ctx: jax.Array,
+                           g_pooled: jax.Array, axis: Axis
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Alg. 2 full_sharding grad routing: all-gather pooled grads, mask to
+    locally-owned rows. Returns (flat_idx (T, N), flat_g (T, N, d))."""
+    rows_local = tables_local.shape[1]
+    rank = jax.lax.axis_index(axis)
+    r_start = rank * rows_local
+    g_all = jax.lax.all_gather(g_pooled, axis, axis=0, tiled=True)
+    B, T, L = ctx.shape
+    local = ctx - r_start
+    mine = (local >= 0) & (local < rows_local)
+    safe = jnp.where(mine, local, 0)
+    g_rows = jnp.broadcast_to(g_all[:, :, None, :], (B, T, L, g_all.shape[-1]))
+    g_rows = g_rows * mine[..., None].astype(g_rows.dtype)
+    flat_idx = safe.transpose(1, 0, 2).reshape(T, B * L)
+    flat_g = g_rows.transpose(1, 0, 2, 3).reshape(T, B * L, -1)
+    return flat_idx, flat_g
+
+
 def row_wise_backward_update(
     tables_local: jax.Array, idx_all: jax.Array, g_pooled_local: jax.Array,
     axis: Axis,
@@ -269,21 +433,162 @@ def adagrad_row_update(lr: float, eps: float = 1e-8):
 # ---------------------------------------------------------------------------
 # Step factories
 # ---------------------------------------------------------------------------
-def param_specs(cfg: DLRMConfig, axis: Axis) -> Dict[str, Any]:
-    """PartitionSpecs for DLRM params under the given strategy."""
+def param_specs(cfg: DLRMConfig, axis: Axis,
+                groups: Optional[PlanGroups] = None) -> Dict[str, Any]:
+    """PartitionSpecs for DLRM params under the given strategy.
+
+    With `groups` (plan execution) the tables are split per tier:
+    fast tables table-sharded over the axis, bulk tables row-sharded.
+    An empty group's (0, R, d) array is replicated (nothing to shard)."""
     ax = axis
     mlp_spec = [{"w": P(), "b": P()} for _ in cfg.bot_mlp_dims]
     top_spec = [{"w": P(), "b": P()} for _ in cfg.top_mlp]
+    if groups is not None:
+        return {"bot_mlp": mlp_spec, "top_mlp": top_spec,
+                "tables_fast": P(ax) if groups.fast_ids else P(),
+                "tables_bulk": P(None, ax) if groups.bulk_ids else P()}
     tables = P(ax) if cfg.sharding == "table_wise" else P(None, ax)
     return {"bot_mlp": mlp_spec, "top_mlp": top_spec, "tables": tables}
 
 
 def shard_dlrm_params(params: Params, cfg: DLRMConfig, mesh: Mesh,
-                      axis: Axis) -> Params:
-    specs = param_specs(cfg, axis)
+                      axis: Axis, plan: Optional[ShardingPlan] = None
+                      ) -> Params:
+    """Device-place DLRM params. With a placed `plan`, stacked params are
+    first split into the plan's fast/bulk table groups."""
+    groups = None
+    if plan is not None and plan.placements:
+        groups = plan_table_groups(plan, _axis_size(mesh, axis))
+        if "tables" in params:
+            params = split_dlrm_params_by_plan(params, groups)
+    specs = param_specs(cfg, axis, groups)
     return jax.tree_util.tree_map(
         lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
         params, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def init_dlrm_opt_state(cfg: DLRMConfig, optimizer: str,
+                        plan: Optional[ShardingPlan] = None,
+                        n: Optional[int] = None) -> Optional[Params]:
+    """Optimizer-state pytree matching the step factories' expectations
+    (None for SGD; per-row fp32 AdaGrad accumulators, split per tier when a
+    placed plan drives the step). `n` (the embedding-axis size the step was
+    built with) is REQUIRED with a placed plan — group sizes depend on it."""
+    if optimizer != "adagrad":
+        return None
+    if plan is None or not plan.placements:
+        return {"table_acc": jnp.zeros(
+            (cfg.num_tables, cfg.rows_per_table), jnp.float32)}
+    if n is None:
+        raise ValueError("init_dlrm_opt_state needs the embedding-axis size "
+                         "`n` when a placed plan is given (the fast/bulk "
+                         "group split depends on it)")
+    groups = plan_table_groups(plan, n)
+    return {"table_acc_fast": jnp.zeros(
+                (len(groups.fast_ids), cfg.rows_per_table), jnp.float32),
+            "table_acc_bulk": jnp.zeros(
+                (len(groups.bulk_ids), cfg.rows_per_table), jnp.float32)}
+
+
+def _make_planned_train_step(
+    cfg: DLRMConfig, mesh: Mesh, axis: Axis, lr: float,
+    row_wise_exchange: str, optimizer: str, dp_axes: Tuple[str, ...],
+    plan: ShardingPlan,
+) -> Callable:
+    """Plan-executing train step: Algorithms 1+2 with the table set SPLIT by
+    the planner's tier decisions — fast tables table_wise, bulk row_wise.
+    Params use keys "tables_fast"/"tables_bulk" (see shard_dlrm_params)."""
+    n = _axis_size(mesh, axis)
+    groups = plan_table_groups(plan, n)
+    if groups.bulk_ids:
+        assert cfg.rows_per_table % n == 0, (cfg.rows_per_table, n)
+
+    ax_tuple = (axis,) if isinstance(axis, str) else tuple(axis)
+    full_axes = tuple(dp_axes) + ax_tuple
+    n_full = _axis_size(mesh, full_axes)
+
+    p_specs = param_specs(cfg, axis, groups)
+    data_spec = P(full_axes)
+    opt_specs = None
+    if optimizer == "adagrad":
+        opt_specs = {"table_acc_fast": P(axis) if groups.fast_ids else P(),
+                     "table_acc_bulk": (P(None, axis) if groups.bulk_ids
+                                        else P())}
+
+    fast_arr = np.asarray(groups.fast_ids, np.int32)
+    bulk_arr = np.asarray(groups.bulk_ids, np.int32)
+
+    def step(params, opt_state, dense, indices, labels):
+        dense_params = {"bot_mlp": params["bot_mlp"], "top_mlp": params["top_mlp"]}
+        t_fast, t_bulk = params["tables_fast"], params["tables_bulk"]
+
+        pooled, ctx_f, ctx_b = planned_forward(
+            t_fast, t_bulk, indices, axis, n, row_wise_exchange, groups)
+
+        def local_loss(dp, pl_):
+            logits = dlrm_lib.dlrm_forward_from_pooled(
+                {**dp, "tables": None}, dense, pl_)
+            return dlrm_lib.bce_loss(logits, labels) / n_full
+
+        loss = local_loss(dense_params, pooled)
+        grads, g_pooled = jax.grad(local_loss, argnums=(0, 1))(
+            dense_params, pooled)
+
+        grads = jax.lax.psum(grads, full_axes)
+        loss = jax.lax.psum(loss, full_axes)
+        new_dense = jax.tree_util.tree_map(lambda p, g: p - lr * g,
+                                           dense_params, grads)
+
+        g_f = g_pooled[:, fast_arr, :] if groups.fast_ids else None
+        g_b = g_pooled[:, bulk_arr, :] if groups.bulk_ids else None
+
+        new_fast, new_bulk = t_fast, t_bulk
+        if optimizer == "sgd":
+            upd = sgd_row_update(lr)
+            if groups.fast_ids:
+                new_fast = table_wise_backward_update(t_fast, ctx_f, g_f,
+                                                      axis, upd)
+            if groups.bulk_ids:
+                new_bulk = row_wise_backward_update(t_bulk, ctx_b, g_b,
+                                                    axis, upd)
+            new_opt = opt_state
+        else:
+            ada = adagrad_row_update(lr)
+            acc_f = opt_state["table_acc_fast"]
+            acc_b = opt_state["table_acc_bulk"]
+            if groups.fast_ids:
+                fi, fg = _table_wise_expand_grads(ctx_f, g_f, axis)
+                new_fast, acc_f = ada(t_fast, acc_f, fi, fg)
+            if groups.bulk_ids:
+                fi, fg = _row_wise_expand_grads(t_bulk, ctx_b, g_b, axis)
+                new_bulk, acc_b = ada(t_bulk, acc_b, fi, fg)
+            new_opt = {"table_acc_fast": acc_f, "table_acc_bulk": acc_b}
+
+        if dp_axes:
+            new_fast = t_fast + jax.lax.psum(new_fast - t_fast, dp_axes)
+            new_bulk = t_bulk + jax.lax.psum(new_bulk - t_bulk, dp_axes)
+            if optimizer != "sgd":
+                a0f = opt_state["table_acc_fast"]
+                a0b = opt_state["table_acc_bulk"]
+                new_opt = {
+                    "table_acc_fast":
+                        a0f + jax.lax.psum(new_opt["table_acc_fast"] - a0f,
+                                           dp_axes),
+                    "table_acc_bulk":
+                        a0b + jax.lax.psum(new_opt["table_acc_bulk"] - a0b,
+                                           dp_axes)}
+
+        new_params = {**new_dense, "tables_fast": new_fast,
+                      "tables_bulk": new_bulk}
+        return new_params, new_opt, loss
+
+    smapped = shard_map(
+        step, mesh=mesh,
+        in_specs=(p_specs, opt_specs, data_spec, data_spec, data_spec),
+        out_specs=(p_specs, opt_specs, P()),
+        check_rep=False,
+    )
+    return jax.jit(smapped, donate_argnums=(0, 1))
 
 
 def make_dlrm_train_step(
@@ -294,6 +599,7 @@ def make_dlrm_train_step(
     row_wise_exchange: str = "partial_pool",
     optimizer: str = "sgd",
     dp_axes: Tuple[str, ...] = (),
+    plan: Optional[ShardingPlan] = None,
 ) -> Callable:
     """Returns jitted `step(params, opt_state, dense, indices, labels) ->
     (params, opt_state, loss)` implementing Algorithms 1+2 end to end.
@@ -306,7 +612,14 @@ def make_dlrm_train_step(
 
     opt_state is `None` for SGD, or {"table_acc": (T, R) fp32} for AdaGrad
     (sharded like the tables' first two dims).
+
+    With a placed `plan`, the planner's per-table tier decisions are
+    EXECUTED instead of cfg.sharding: see `_make_planned_train_step`.
     """
+    if plan is not None and plan.placements:
+        return _make_planned_train_step(cfg, mesh, axis, lr,
+                                        row_wise_exchange, optimizer,
+                                        dp_axes, plan)
     n = _axis_size(mesh, axis)
     if cfg.sharding == "table_wise":
         assert cfg.num_tables % n == 0, (cfg.num_tables, n)
@@ -362,32 +675,11 @@ def make_dlrm_train_step(
             new_opt = opt_state
         else:
             ada = adagrad_row_update(lr)
-            acc = opt_state["table_acc"]
-            def upd2(tab, idx, g, _acc=acc):
-                raise NotImplementedError  # handled below
             if cfg.sharding == "table_wise":
-                g_owner = jax.lax.all_to_all(g_pooled, axis, 1, 0, tiled=True)
-                B, Tn, L = ctx.shape
-                g_rows = jnp.broadcast_to(g_owner[:, :, None, :],
-                                          (B, Tn, L, g_owner.shape[-1]))
-                fi = ctx.transpose(1, 0, 2).reshape(Tn, B * L)
-                fg = g_rows.transpose(1, 0, 2, 3).reshape(Tn, B * L, -1)
-                new_tables, new_acc = ada(tables, acc, fi, fg)
+                fi, fg = _table_wise_expand_grads(ctx, g_pooled, axis)
             else:
-                rows_local = tables.shape[1]
-                rank = jax.lax.axis_index(axis)
-                r_start = rank * rows_local
-                g_all = jax.lax.all_gather(g_pooled, axis, axis=0, tiled=True)
-                B, T, L = ctx.shape
-                local = ctx - r_start
-                mine = (local >= 0) & (local < rows_local)
-                safe = jnp.where(mine, local, 0)
-                g_rows = jnp.broadcast_to(g_all[:, :, None, :],
-                                          (B, T, L, g_all.shape[-1]))
-                g_rows = g_rows * mine[..., None].astype(g_rows.dtype)
-                fi = safe.transpose(1, 0, 2).reshape(T, B * L)
-                fg = g_rows.transpose(1, 0, 2, 3).reshape(T, B * L, -1)
-                new_tables, new_acc = ada(tables, acc, fi, fg)
+                fi, fg = _row_wise_expand_grads(tables, ctx, g_pooled, axis)
+            new_tables, new_acc = ada(tables, opt_state["table_acc"], fi, fg)
             new_opt = {"table_acc": new_acc}
 
         if dp_axes:
@@ -418,16 +710,26 @@ def make_dlrm_serve_step(
     axis: Axis = ("data", "model"),
     row_wise_exchange: str = "partial_pool",
     dp_axes: Tuple[str, ...] = (),
+    plan: Optional[ShardingPlan] = None,
 ) -> Callable:
     """Returns jitted `serve(params, dense, indices) -> probs (B,)` —
-    Alg. 1 + sigmoid, the paper's inference query (Sec. III-B)."""
+    Alg. 1 + sigmoid, the paper's inference query (Sec. III-B).
+
+    With a placed `plan`, each table's lookups are routed to its tier
+    (fast tables table_wise, bulk row_wise) instead of cfg.sharding."""
     n = _axis_size(mesh, axis)
     ax_tuple = (axis,) if isinstance(axis, str) else tuple(axis)
-    p_specs = param_specs(cfg, axis)
+    groups = (plan_table_groups(plan, n)
+              if plan is not None and plan.placements else None)
+    p_specs = param_specs(cfg, axis, groups)
     data_spec = P(tuple(dp_axes) + ax_tuple)
 
     def serve(params, dense, indices):
-        if cfg.sharding == "table_wise":
+        if groups is not None:
+            pooled, _, _ = planned_forward(
+                params["tables_fast"], params["tables_bulk"], indices,
+                axis, n, row_wise_exchange, groups)
+        elif cfg.sharding == "table_wise":
             pooled, _ = table_wise_forward(params["tables"], indices, axis)
         else:
             pooled, _ = row_wise_forward(params["tables"], indices, axis, n,

@@ -1,0 +1,288 @@
+"""Tiered freq-aware embedding runtime — EXECUTES the planner's placements.
+
+The planner (`core/planner.py`) decides which tables live in the fast
+memory tier and which in the bulk tier (the paper's static HBM-vs-DDR4
+allocation, Sec. VII-A). This module turns that analysis into a runnable
+store, following the freq-aware cached-bag design of
+hpcaitech/CacheEmbedding (index translation against a reordered hot set)
+adapted to JAX's immutable arrays:
+
+  fast (T, S+1, d) : per-table compact arrays holding each table's hottest
+                     rows (slot S is a zeros "miss" row). A table the plan
+                     places in the FAST tier gets all R rows here; a BULK
+                     table gets a freq-aware cache of `hot_per_table` rows.
+  bulk (T, R+1, d) : the canonical full tables (row R is a zeros "hit"
+                     row). Cold lookups are serviced here.
+  row_map (T, R)   : global row id -> fast slot, or -1 for cold rows — the
+                     index translation table, built from access statistics
+                     (`measure_row_freq` over the `data/recsys.py` stream,
+                     or live counts via `accumulate_row_freq`).
+
+Lookups translate the index stream once (`translate_indices`) and then run
+the Pallas two-tier cached bag (`kernels/cached_embedding_bag.py`): each
+lookup fetches one row from each tier, exactly one of which is the zero
+pad, so pooled output equals `embedding_bag_ref` bit-for-bit in fp32.
+
+Training keeps the two tiers consistent the CacheEmbedding way: hot-row
+updates land in the fast tier only (the bulk copy of a hot row is stale by
+design, exactly like an evicted-later CUDA cache line), and `lfu_refresh`
+flushes the fast rows back to bulk before re-electing the hot set from the
+refreshed frequency counts — the LFU-style refresh hook.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.core.planner import TablePlacement
+from repro.kernels import ops
+
+
+class TieredTables(NamedTuple):
+    """Pytree holding the two-tier embedding store (see module docstring)."""
+
+    fast: jax.Array      # (T, S+1, d) hot rows per table + zeros miss slot
+    bulk: jax.Array      # (T, R+1, d) canonical tables + zeros hit slot
+    row_map: jax.Array   # (T, R) int32: global row -> fast slot, -1 = cold
+    hot_rows: jax.Array  # (T, S) int32: global row backing each slot, -1 = unused
+
+    @property
+    def num_tables(self) -> int:
+        return self.fast.shape[0]
+
+    @property
+    def rows_per_table(self) -> int:
+        return self.bulk.shape[1] - 1
+
+    @property
+    def hot_slots(self) -> int:
+        return self.fast.shape[1] - 1
+
+
+# ---------------------------------------------------------------------------
+# Access statistics (the planner's and the cache's shared currency)
+# ---------------------------------------------------------------------------
+def measure_row_freq(cfg: DLRMConfig, alpha: float = 0.0, seed: int = 0,
+                     n_batches: int = 8,
+                     batch_size: Optional[int] = None) -> jax.Array:
+    """Per-row access counts (T, R) int32 measured over the synthetic stream.
+
+    Deterministic in (cfg, alpha, seed): the stream is step-indexed, so a
+    profile pass sees exactly the batches training/serving will see.
+    """
+    from repro.data.recsys import make_recsys_batch
+
+    counts = jnp.zeros((cfg.num_tables, cfg.rows_per_table), jnp.int32)
+    for step in range(n_batches):
+        idx = make_recsys_batch(cfg, step, seed, alpha, batch_size)["indices"]
+        counts = accumulate_row_freq(counts, idx)
+    return counts
+
+
+def accumulate_row_freq(counts: jax.Array, indices: jax.Array) -> jax.Array:
+    """Online LFU counter update: counts (T, R) += bincount of indices
+    (B, T, L). Jit-safe; use as the training-loop stats hook."""
+    T = counts.shape[0]
+    t_ix = jnp.arange(T, dtype=indices.dtype)[None, :, None]
+    return counts.at[t_ix, indices].add(1)
+
+
+# ---------------------------------------------------------------------------
+# Build / translate / lookup
+# ---------------------------------------------------------------------------
+def build_tiered_tables(
+    tables: jax.Array,
+    row_freq: jax.Array,
+    hot_per_table: int,
+    placements: Optional[Sequence[TablePlacement]] = None,
+) -> TieredTables:
+    """Construct the two-tier store from stacked tables (T, R, d).
+
+    `row_freq` (T, R) ranks rows within each table (LFU order). Tables whose
+    placement tier is "fast" are fully resident in the fast tier; all other
+    tables get a `hot_per_table`-row freq-aware cache. Host-side setup step
+    (runs once per plan / refresh, not per lookup).
+
+    Note the stacked layout sizes every table's fast slab to the LARGEST
+    slot count: mixing a fully-fast-placed table (slots = R) with row-cached
+    bulk tables allocates (T, R+1, d) of fast storage. Use whole-table
+    placements either for all tables or none when memory is tight; the
+    mixed case is primarily exercised by the distributed plan path
+    (`core/sharding.py`), which keeps per-tier tables in separate arrays.
+    """
+    tab = np.asarray(tables)
+    freq = np.asarray(row_freq, dtype=np.float64)
+    T, R, d = tab.shape
+    assert freq.shape == (T, R), (freq.shape, tab.shape)
+
+    slots = np.full(T, min(int(hot_per_table), R), dtype=np.int64)
+    if placements:
+        for p in placements:
+            if p.tier == "fast":
+                slots[p.table_id] = R
+    S = int(slots.max()) if T else 0
+
+    row_map = np.full((T, R), -1, dtype=np.int32)
+    hot_rows = np.full((T, S), -1, dtype=np.int32)
+    fast = np.zeros((T, S + 1, d), dtype=tab.dtype)
+    for t in range(T):
+        k = int(slots[t])
+        if k <= 0:
+            continue
+        # stable sort => deterministic tie-break by row id (uniform streams)
+        top = np.argsort(-freq[t], kind="stable")[:k].astype(np.int32)
+        hot_rows[t, :k] = top
+        row_map[t, top] = np.arange(k, dtype=np.int32)
+        fast[t, :k] = tab[t, top]
+
+    bulk = np.zeros((T, R + 1, d), dtype=tab.dtype)
+    bulk[:, :R] = tab
+    return TieredTables(jnp.asarray(fast), jnp.asarray(bulk),
+                        jnp.asarray(row_map), jnp.asarray(hot_rows))
+
+
+def _slots(tiered: TieredTables, indices: jax.Array) -> jax.Array:
+    """Gather each lookup's fast slot from the translation table:
+    (B, T, L) global row ids -> (B, T, L) slot ids (-1 = cold)."""
+    return jax.vmap(lambda m, i: m[i], in_axes=(0, 1), out_axes=1)(
+        tiered.row_map, indices)
+
+
+def translate_indices(tiered: TieredTables, indices: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Index translation (CacheEmbedding `prepare_ids`): global row ids
+    (B, T, L) -> (fast_idx, bulk_idx), each (B, T, L) int32. Hot lookups get
+    their fast slot + the bulk zeros row; cold lookups the reverse."""
+    S = tiered.hot_slots
+    R = tiered.rows_per_table
+    slot = _slots(tiered, indices)                        # (B, T, L)
+    hot = slot >= 0
+    fast_idx = jnp.where(hot, slot, S).astype(jnp.int32)
+    bulk_idx = jnp.where(hot, R, indices).astype(jnp.int32)
+    return fast_idx, bulk_idx
+
+
+def tiered_embedding_bag(tiered: TieredTables, indices: jax.Array) -> jax.Array:
+    """Tiered lookup + sum-pool: (B, T, L) global ids -> (B, T, d) fp32.
+
+    Equals `embedding_bag_ref(tables, indices)` for the tables the store was
+    built from (the core correctness property, tests/test_tiered_embedding).
+    """
+    fast_idx, bulk_idx = translate_indices(tiered, indices)
+    return ops.cached_embedding_bag(tiered.fast, tiered.bulk,
+                                    fast_idx, bulk_idx)
+
+
+def packed_tables(tiered: TieredTables) -> jax.Array:
+    """Single-array two-tier layout (T, (S+1)+(R+1), d): the compact fast
+    slab (hot rows — small enough to stay cache/fast-tier resident) directly
+    followed by the canonical bulk slab. With `translate_indices_packed`
+    this is serviced by the EXISTING scalar-prefetch gather
+    (`kernels/embedding_bag.py`): one row fetch per lookup, most of them
+    landing in the contiguous hot prefix."""
+    return jnp.concatenate([tiered.fast, tiered.bulk], axis=1)
+
+
+def translate_indices_packed(tiered: TieredTables, indices: jax.Array
+                             ) -> jax.Array:
+    """Global row ids (B, T, L) -> physical slots in `packed_tables` output:
+    hot rows map to their fast slot, cold rows to S+1+row in the bulk slab."""
+    S = tiered.hot_slots
+    slot = _slots(tiered, indices)
+    return jnp.where(slot >= 0, slot, S + 1 + indices).astype(jnp.int32)
+
+
+def tiered_embedding_bag_packed(packed: jax.Array, tiered: TieredTables,
+                                indices: jax.Array) -> jax.Array:
+    """Packed-layout tiered lookup: translate once, then a single gather +
+    sum-pool through the standard embedding-bag op. `packed` must be
+    `packed_tables(tiered)` (precomputed so the concat is off the hot path).
+    """
+    phys = translate_indices_packed(tiered, indices)
+    return ops.embedding_bag(packed, phys)
+
+
+def hit_mask(tiered: TieredTables, indices: jax.Array) -> jax.Array:
+    """Boolean (B, T, L): which lookups the fast tier services."""
+    return _slots(tiered, indices) >= 0
+
+
+def expected_hit_ratio(row_freq: jax.Array, tiered: TieredTables) -> float:
+    """Fraction of accesses the fast tier will serve under `row_freq` —
+    the perf model's cache-hit-ratio term (predicted vs measured QPS)."""
+    freq = np.asarray(row_freq, dtype=np.float64)
+    hot = np.asarray(tiered.row_map) >= 0
+    total = freq.sum()
+    return float((freq * hot).sum() / total) if total > 0 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Training integration: sparse updates + LFU refresh
+# ---------------------------------------------------------------------------
+def tiered_row_update(tiered: TieredTables, indices: jax.Array,
+                      g_rows: jax.Array, lr: float) -> TieredTables:
+    """SGD scatter-add routed per tier: hot rows update IN THE FAST TIER
+    (their bulk copy goes stale until the next refresh, like a dirty cache
+    line), cold rows update in bulk. indices (B, T, L) global ids, g_rows
+    (B, T, L, d) per-row grads."""
+    B, T, L = indices.shape
+    d = g_rows.shape[-1]
+    fast_idx, bulk_idx = translate_indices(tiered, indices)
+    fi = fast_idx.transpose(1, 0, 2).reshape(T, B * L)
+    bi = bulk_idx.transpose(1, 0, 2).reshape(T, B * L)
+    g = g_rows.transpose(1, 0, 2, 3).reshape(T, B * L, d)
+
+    def upd(tab, idx, gg):
+        return tab.at[idx].add((-lr * gg).astype(tab.dtype))
+    # cold lookups target the fast miss slot / hot ones the bulk hit slot;
+    # those pad rows absorb the off-tier halves — zero them back after.
+    fast = jax.vmap(upd)(tiered.fast, fi, g)
+    bulk = jax.vmap(upd)(tiered.bulk, bi, g)
+    fast = fast.at[:, -1].set(0.0)
+    bulk = bulk.at[:, -1].set(0.0)
+    return tiered._replace(fast=fast, bulk=bulk)
+
+
+def flush_to_bulk(tiered: TieredTables) -> jax.Array:
+    """Write live fast-tier rows back into the canonical tables; returns
+    dense (T, R, d). Unused slots (-1) target the bulk pad row, which is
+    dropped."""
+    S = tiered.hot_slots
+    R = tiered.rows_per_table
+    T = tiered.num_tables
+    target = jnp.where(tiered.hot_rows >= 0, tiered.hot_rows, R)  # (T, S)
+    t_ix = jnp.arange(T)[:, None]
+    flushed = tiered.bulk.at[t_ix, target].set(tiered.fast[:, :S])
+    return flushed[:, :R]
+
+
+def lfu_refresh(
+    tiered: TieredTables,
+    row_freq: jax.Array,
+    hot_per_table: Optional[int] = None,
+    placements: Optional[Sequence[TablePlacement]] = None,
+) -> TieredTables:
+    """LFU-style refresh hook for training: flush the fast tier back to
+    bulk, then re-elect the hot set from the (updated) frequency counts.
+    Call between training phases / on access-distribution drift.
+
+    Defaults reproduce the CURRENT store's shape: the per-table cache size
+    is the smallest live hot count across tables (the bulk tables' cache),
+    and fully-resident tables are re-derived as fast placements — so a
+    mixed-placement store refreshes to a mixed-placement store."""
+    dense = flush_to_bulk(tiered)
+    if hot_per_table is None or placements is None:
+        R = tiered.rows_per_table
+        counts = (np.asarray(tiered.row_map) >= 0).sum(axis=1)
+        full = counts == R
+        if hot_per_table is None:
+            hot_per_table = int(counts[~full].min()) if (~full).any() else R
+        if placements is None and full.any():
+            placements = [TablePlacement(int(t), "fast", "table_wise", None)
+                          for t in np.flatnonzero(full)]
+    return build_tiered_tables(dense, row_freq, hot_per_table, placements)

@@ -1,12 +1,15 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-  embedding_bag   — scalar-prefetch gather + sum-pool (DLRM's dominant op)
-  interactions    — FM pairwise-dot bmm (DLRM's dense MXU op)
-  flash_attention — blockwise GQA/SWA attention (LM train/prefill)
-  flash_decode    — single-token GQA attention over a KV cache (LM decode)
+  embedding_bag       — scalar-prefetch gather + sum-pool (DLRM's dominant op)
+  cached_embedding_bag— two-tier (fast/bulk) gather + sum-pool executing the
+                        planner's hot/cold placement (core/tiered_embedding.py)
+  interactions        — FM pairwise-dot bmm (DLRM's dense MXU op)
+  flash_attention     — blockwise GQA/SWA attention (LM train/prefill)
+  flash_decode        — single-token GQA attention over a KV cache (LM decode)
 
 Each has a matching pure-jnp oracle in ``ref.py`` and a jit'd public wrapper
 in ``ops.py``; kernels run compiled on TPU and in interpret mode elsewhere.
 """
 from repro.kernels.ops import (  # noqa: F401
-    embedding_bag, flash_attention, flash_decode, interactions)
+    cached_embedding_bag, embedding_bag, flash_attention, flash_decode,
+    interactions)

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: two-tier cached embedding-bag (the planner's fast path).
+
+Executes the hot/cold placement the planner computes (paper Sec. VII-A: a
+STATIC freq-aware allocation of embedding rows across a fast HBM-like tier
+and a bulk DDR4-like tier). The runtime layout (`core/tiered_embedding.py`):
+
+  fast (T, S+1, d): per-table compact hot-row arrays; slot S is a zeros row
+                    (the "miss" slot — cold lookups land here).
+  bulk (T, R+1, d): canonical full tables; row R is a zeros row (the "hit"
+                    slot — hot lookups land here).
+
+The index stream is pre-translated (CacheEmbedding's `prepare_ids` idea,
+hpcaitech/CacheEmbedding): for each lookup either ``fast_idx`` holds the hot
+slot and ``bulk_idx`` the pad row, or vice versa. The kernel then needs NO
+per-element branching: every grid step DMAs one row from each tier and
+accumulates their sum — exactly one of the two is the zero pad, so the pool
+is exact. Both index arrays ride the scalar-prefetch path (SMEM) so each
+step's BlockSpec ``index_map`` can steer the next row DMA, pipelining
+fast-tier and bulk-tier fetches back-to-back like the single-tier gather in
+``embedding_bag.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cached_bag_kernel(fast_idx_ref, bulk_idx_ref, fast_row_ref, bulk_row_ref,
+                       out_ref):
+    """One grid step: accumulate one fast-tier + one bulk-tier row (one of
+    the two is a zero pad row) into the (1, 1, d) output block."""
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += (fast_row_ref[...].astype(out_ref.dtype)
+                     + bulk_row_ref[...].astype(out_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cached_embedding_bag_pallas(fast: jax.Array, bulk: jax.Array,
+                                fast_idx: jax.Array, bulk_idx: jax.Array,
+                                *, interpret: bool = True) -> jax.Array:
+    """fast (T, S+1, d), bulk (T, R+1, d) any float dtype; fast_idx/bulk_idx
+    (B, T, L) int32 pre-translated slots -> pooled (B, T, d) fp32.
+
+    ``interpret=True`` executes the kernel body in Python on CPU (validation
+    mode); on TPU pass ``interpret=False``.
+    """
+    T, S1, d = fast.shape
+    T2, R1, d2 = bulk.shape
+    B, T3, L = fast_idx.shape
+    assert T == T2 == T3 and d == d2, (fast.shape, bulk.shape, fast_idx.shape)
+    assert fast_idx.shape == bulk_idx.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, T, L),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, t, l, fi, bi: (t, fi[b, t, l], 0)),
+            pl.BlockSpec((1, 1, d), lambda b, t, l, fi, bi: (t, bi[b, t, l], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, t, l, fi, bi: (b, t, 0)),
+    )
+    return pl.pallas_call(
+        _cached_bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, d), jnp.float32),
+        interpret=interpret,
+    )(fast_idx, bulk_idx, fast, bulk)

@@ -87,16 +87,33 @@ def _embedding_bag_rowblock_kernel(idx_ref, rows_ref, out_ref, *, lblk: int):
     out_ref[...] += rows_ref[...].sum(axis=1, keepdims=True).astype(out_ref.dtype)
 
 
+def blocked_stream_aligned(indices: jax.Array, lblk: int) -> jax.Array:
+    """Traced predicate: every L-block of ``lblk`` lookups covers exactly the
+    consecutive rows [k*lblk, (k+1)*lblk) for some k.
+
+    This is the precondition under which the blocked kernel's
+    ``idx[b, t, l*lblk] // lblk`` row-block selection is exact; any other
+    stream (unsorted, non-aligned base, gaps) silently pools the WRONG rows.
+    """
+    B, T, L = indices.shape
+    blocks = indices.reshape(B, T, L // lblk, lblk)
+    base = blocks[..., :1]                               # (B, T, L/lblk, 1)
+    expect = base + jnp.arange(lblk, dtype=indices.dtype)
+    return jnp.logical_and((base[..., 0] % lblk == 0).all(),
+                           (blocks == expect).all())
+
+
 @functools.partial(jax.jit, static_argnames=("lblk", "interpret"))
 def embedding_bag_pallas_blocked(tables: jax.Array, indices: jax.Array,
                                  *, lblk: int = 8, interpret: bool = True
                                  ) -> jax.Array:
     """Variant that fetches ``lblk`` CONSECUTIVE-SLOT rows per DMA.
 
-    Correct only when lookups within each L-block hit consecutive table rows
-    (sorted/batched index streams); used as the fast path by the planner when
-    the index stream is post-sorted. For arbitrary streams use
-    ``embedding_bag_pallas``.
+    The blocked row fetch is only exact when lookups within each L-block hit
+    consecutive lblk-aligned table rows (sorted/batched index streams); the
+    stream is checked at runtime and any misaligned batch falls back to the
+    per-row kernel (``embedding_bag_pallas``) instead of silently pooling
+    wrong rows.
     """
     T, R, d = tables.shape
     B, T2, L = indices.shape
@@ -111,9 +128,17 @@ def embedding_bag_pallas_blocked(tables: jax.Array, indices: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, 1, d), lambda b, t, l, idx: (b, t, 0)),
     )
-    return pl.pallas_call(
-        functools.partial(_embedding_bag_rowblock_kernel, lblk=lblk),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, T, d), jnp.float32),
-        interpret=interpret,
-    )(indices, tables)
+
+    def blocked(tab, idx):
+        return pl.pallas_call(
+            functools.partial(_embedding_bag_rowblock_kernel, lblk=lblk),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, T, d), jnp.float32),
+            interpret=interpret,
+        )(idx, tab)
+
+    def per_row(tab, idx):
+        return embedding_bag_pallas(tab, idx, interpret=interpret)
+
+    return jax.lax.cond(blocked_stream_aligned(indices, lblk),
+                        blocked, per_row, tables, indices)

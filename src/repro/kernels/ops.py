@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.cached_embedding_bag import cached_embedding_bag_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
@@ -34,6 +35,16 @@ def embedding_bag(tables: jax.Array, indices: jax.Array) -> jax.Array:
     if _use_ref():
         return ref.embedding_bag_ref(tables, indices)
     return embedding_bag_pallas(tables, indices, interpret=_interpret())
+
+
+def cached_embedding_bag(fast: jax.Array, bulk: jax.Array,
+                         fast_idx: jax.Array, bulk_idx: jax.Array) -> jax.Array:
+    """Two-tier cached bag: (T, S+1, d) × (T, R+1, d) × 2×(B, T, L) pre-
+    translated slots -> (B, T, d) pooled, fp32."""
+    if _use_ref():
+        return ref.cached_embedding_bag_ref(fast, bulk, fast_idx, bulk_idx)
+    return cached_embedding_bag_pallas(fast, bulk, fast_idx, bulk_idx,
+                                       interpret=_interpret())
 
 
 def interactions(bot_out: jax.Array, pooled: jax.Array,

@@ -19,6 +19,16 @@ def embedding_bag_ref(tables: jax.Array, indices: jax.Array) -> jax.Array:
     return jax.vmap(one_table, in_axes=(0, 1), out_axes=1)(tables, indices)
 
 
+def cached_embedding_bag_ref(fast: jax.Array, bulk: jax.Array,
+                             fast_idx: jax.Array, bulk_idx: jax.Array
+                             ) -> jax.Array:
+    """Two-tier cached bag: fast (T, S+1, d) hot rows + zero miss slot,
+    bulk (T, R+1, d) full tables + zero hit slot, pre-translated indices
+    (B, T, L) -> pooled (B, T, d) fp32. Exactly one of the two gathered rows
+    per lookup is a zero pad, so the sum of the two pools is the exact bag."""
+    return embedding_bag_ref(fast, fast_idx) + embedding_bag_ref(bulk, bulk_idx)
+
+
 def interactions_ref(bot_out: jax.Array, pooled: jax.Array) -> jax.Array:
     """FM pairwise dot products (paper Sec. III-D), strict lower triangle,
     concatenated after bot_out. bot_out (B, d), pooled (B, T, d)

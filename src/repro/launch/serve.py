@@ -7,10 +7,16 @@ distribution and reports the P50/P90/P99 percentiles against the SLA.
 
   PYTHONPATH=src python -m repro.launch.serve --config dlrm-rm2-small-unsharded \
       --smoke --queries 200 --sla-ms 50
+
+With ``--plan auto`` the launcher profiles the index stream, runs the
+planner (`plan_with_placement`), prints the chosen placement + the perf
+model's hit-ratio-aware QPS prediction, and EXECUTES the placements: the
+serve step routes each table's lookups to its tier.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 from typing import List, Optional
@@ -29,6 +35,45 @@ def percentile(xs: List[float], p: float) -> float:
     return float(np.percentile(np.asarray(xs), p))
 
 
+def build_auto_plan(cfg, n: int, alpha: float, seed: int,
+                    fast_mb: Optional[float], mode: str,
+                    profile_batches: int = 4):
+    """Profile the step-indexed stream, run the planner, report prediction.
+
+    Returns (plan, predicted_qps). Default fast capacity fits ~half the
+    tables across the mesh so smoke runs exercise a MIXED placement."""
+    from repro.core import perf_model, planner
+    from repro.core import tiered_embedding as te
+
+    counts = te.measure_row_freq(cfg, alpha, seed, n_batches=profile_batches)
+    table_freq = np.asarray(counts.sum(axis=1), dtype=np.float64)
+    tbytes = cfg.rows_per_table * cfg.embed_dim * 2
+    if fast_mb is not None:
+        fast_bytes = int(fast_mb * 2 ** 20)
+    else:
+        fast_bytes = -(-(cfg.num_tables // 2) // n) * tbytes
+    system = dataclasses.replace(perf_model.recspeed_system(), n_chips=n)
+    plan = planner.plan_with_placement(
+        cfg, system, table_freq, fast_bytes,
+        bulk_capacity_bytes=cfg.num_tables * tbytes, mode=mode)
+    # fold the mesh-divisibility demotion into the plan so the printed
+    # placement + hit ratio match what the step factories execute
+    plan = dsh.reconcile_plan_with_mesh(plan, n, table_freq)
+    hybrid = dataclasses.replace(perf_model.recspeed_hybrid_system(),
+                                 n_chips=n)
+    # predict for the sharding mode the plan actually chose (breakdown
+    # routes on cfg.sharding)
+    pred = perf_model.breakdown(dataclasses.replace(cfg, sharding=plan.mode),
+                                hybrid, mode, plan.exchange,
+                                hit_ratio=plan.hit_ratio)
+    n_fast = sum(1 for p in plan.placements if p.tier == "fast")
+    print(f"[plan] mode={plan.mode} exchange={plan.exchange} "
+          f"fast_tables={n_fast}/{cfg.num_tables} "
+          f"hit_ratio={plan.hit_ratio:.3f} "
+          f"predicted_qps={pred.qps:.0f} (hybrid HBM+DDR4 model)")
+    return plan, pred.qps
+
+
 def main(argv: Optional[list] = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default="dlrm-rm2-small-unsharded")
@@ -40,6 +85,14 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--exchange", default="partial_pool")
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan", choices=["none", "auto"], default="none",
+                    help="auto: profile + place tables, execute placements")
+    ap.add_argument("--alpha", type=float, default=0.0,
+                    help="zipf skew of the query index stream (0 = uniform, "
+                         "the paper's zero-locality case; try 1.05 with "
+                         "--plan auto)")
+    ap.add_argument("--fast-mb", type=float, default=None,
+                    help="per-chip fast-tier capacity (MiB) for --plan auto")
     args = ap.parse_args(argv)
 
     cfg = get_dlrm(args.config)
@@ -47,19 +100,27 @@ def main(argv: Optional[list] = None) -> int:
         cfg = cfg.reduced()
     mesh = make_host_mesh(model=args.model_axis)
 
+    plan = None
+    exchange = args.exchange
+    if args.plan == "auto":
+        plan, _ = build_auto_plan(cfg, int(mesh.devices.size), args.alpha,
+                                  args.seed, args.fast_mb, "inference")
+        exchange = plan.exchange
+
     serve = dsh.make_dlrm_serve_step(cfg, mesh, ("data", "model"),
-                                     args.exchange)
+                                     exchange, plan=plan)
     params = dlrm_lib.init_dlrm(jax.random.PRNGKey(args.seed), cfg)
-    params = dsh.shard_dlrm_params(params, cfg, mesh, ("data", "model"))
+    params = dsh.shard_dlrm_params(params, cfg, mesh, ("data", "model"),
+                                   plan=plan)
 
     # warm up (compile)
-    b0 = make_recsys_batch(cfg, 0, args.seed)
+    b0 = make_recsys_batch(cfg, 0, args.seed, args.alpha)
     serve(params, b0["dense"], b0["indices"]).block_until_ready()
 
     lat_ms: List[float] = []
     t_all0 = time.perf_counter()
     for q in range(args.queries):
-        batch = make_recsys_batch(cfg, q, args.seed)
+        batch = make_recsys_batch(cfg, q, args.seed, args.alpha)
         t0 = time.perf_counter()
         probs = serve(params, batch["dense"], batch["indices"])
         probs.block_until_ready()

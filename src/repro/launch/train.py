@@ -39,17 +39,24 @@ def train_dlrm(args) -> int:
         cfg = cfg.reduced()
     mesh = make_host_mesh(model=args.model_axis)
     n = int(mesh.devices.size)
+
+    plan = None
+    exchange = args.exchange
+    if args.plan == "auto":
+        from repro.launch.serve import build_auto_plan
+        plan, _ = build_auto_plan(cfg, n, args.alpha, args.seed,
+                                  args.fast_mb, "training")
+        exchange = plan.exchange
+
     # batch must divide the mesh; tables/rows likewise (reduced() guarantees)
     step_fn = dsh.make_dlrm_train_step(
         cfg, mesh, axis=("data", "model"), lr=args.lr,
-        row_wise_exchange=args.exchange, optimizer=args.optimizer)
+        row_wise_exchange=exchange, optimizer=args.optimizer, plan=plan)
 
     params = dlrm_lib.init_dlrm(jax.random.PRNGKey(args.seed), cfg)
-    params = dsh.shard_dlrm_params(params, cfg, mesh, ("data", "model"))
-    opt_state = None
-    if args.optimizer == "adagrad":
-        opt_state = {"table_acc": jnp.zeros(
-            (cfg.num_tables, cfg.rows_per_table), jnp.float32)}
+    params = dsh.shard_dlrm_params(params, cfg, mesh, ("data", "model"),
+                                   plan=plan)
+    opt_state = dsh.init_dlrm_opt_state(cfg, args.optimizer, plan, n)
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
@@ -126,6 +133,10 @@ def main(argv: Optional[list] = None) -> int:
     p.add_argument("--batch", type=int, default=8)
     p.add_argument("--seq", type=int, default=128)
     p.add_argument("--model-axis", type=int, default=1)
+    p.add_argument("--plan", choices=["none", "auto"], default="none",
+                   help="auto: profile + place tables, execute placements")
+    p.add_argument("--fast-mb", type=float, default=None,
+                   help="per-chip fast-tier capacity (MiB) for --plan auto")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=50)
     args = p.parse_args(argv)

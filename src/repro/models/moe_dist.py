@@ -38,6 +38,20 @@ def _capacity(n_tokens: int, k: int, e: int, factor: float) -> int:
     return max(8, int(math.ceil(factor * n_tokens * k / e / 8.0)) * 8)
 
 
+def _shard_map_manual(body, mesh, in_specs, out_specs, manual_axes):
+    """Manual-over-`manual_axes`, auto-over-the-rest shard_map, across jax
+    versions: jax>=0.5 exposes `jax.shard_map(axis_names=...)`; 0.4.x only
+    has the experimental API where the complement set is passed as `auto`."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(manual_axes), check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    auto = frozenset(mesh.axis_names) - set(manual_axes)
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False, auto=auto)
+
+
 def _pack_by_segment(seg_ids: jax.Array, n_segments: int, capacity: int
                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Sort-based capacity packing. seg_ids (N,) in [0, n_segments).
@@ -155,14 +169,13 @@ def moe_block_local_dispatch(p: Dict[str, jax.Array], x: jax.Array,
             scatter_dimension=1, tiled=True)
         return y
 
-    fn = jax.shard_map(
-        body, mesh=mesh,
+    fn = _shard_map_manual(
+        body, mesh,
         in_specs=(P(), P(None, None, "model"), P(None, None, "model"),
                   P(None, "model", None),
                   P(sharder.batch_axes, "model", None)),
         out_specs=P(sharder.batch_axes, "model", None),
-        axis_names=manual_axes,
-        check_vma=False)
+        manual_axes=manual_axes)
     return fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
 
 
@@ -253,12 +266,11 @@ def moe_block_ep_a2a(p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig,
         y = jnp.zeros((n, dl), xt.dtype).at[tok_s].add(contrib)
         return y.reshape(Bl, Tl, dl)
 
-    fn = jax.shard_map(
-        body, mesh=mesh,
+    fn = _shard_map_manual(
+        body, mesh,
         in_specs=(P(), P("model", None, None), P("model", None, None),
                   P("model", None, None),
                   P(sharder.batch_axes, "model", None)),
         out_specs=P(sharder.batch_axes, "model", None),
-        axis_names=manual_axes,
-        check_vma=False)
+        manual_axes=manual_axes)
     return fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)

@@ -5,7 +5,10 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.cached_embedding_bag import cached_embedding_bag_pallas
+from repro.kernels.embedding_bag import (blocked_stream_aligned,
+                                         embedding_bag_pallas,
+                                         embedding_bag_pallas_blocked)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.interactions import interactions_pallas
@@ -35,6 +38,61 @@ def test_embedding_bag_repeated_indices():
     idx = jnp.array([[[1, 1, 1]]])                       # row 1 three times
     out = embedding_bag_pallas(tables, idx)
     np.testing.assert_allclose(out[0, 0], 3 * tables[0, 1])
+
+
+# ------------------------------------------------- blocked embedding variant
+def _aligned_stream(key, B, T, L, R, lblk):
+    """Each L-block covers consecutive rows [k*lblk, (k+1)*lblk)."""
+    base = jax.random.randint(key, (B, T, L // lblk, 1), 0, R // lblk) * lblk
+    return (base + jnp.arange(lblk)).reshape(B, T, L).astype(jnp.int32)
+
+
+def test_embedding_bag_blocked_aligned_stream():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    tables = jax.random.normal(k1, (3, 64, 16))
+    idx = _aligned_stream(k2, 4, 3, 8, 64, 4)
+    assert bool(blocked_stream_aligned(idx, 4))
+    out = embedding_bag_pallas_blocked(tables, idx, lblk=4)
+    np.testing.assert_allclose(out, ref.embedding_bag_ref(tables, idx),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_blocked_misaligned_falls_back():
+    """Regression: the blocked kernel used to silently pool WRONG rows on
+    non-lblk-aligned / non-consecutive streams; it must now detect the
+    misalignment and fall back to the per-row kernel."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    tables = jax.random.normal(k1, (2, 64, 8))
+    # arbitrary (unsorted) stream — essentially never block-aligned
+    idx = jax.random.randint(k2, (4, 2, 8), 0, 64)
+    assert not bool(blocked_stream_aligned(idx, 4))
+    out = embedding_bag_pallas_blocked(tables, idx, lblk=4)
+    np.testing.assert_allclose(out, ref.embedding_bag_ref(tables, idx),
+                               rtol=1e-5, atol=1e-5)
+    # aligned base but shuffled within the block: also misaligned
+    idx2 = _aligned_stream(k2, 2, 2, 8, 64, 4)[..., ::-1]
+    assert not bool(blocked_stream_aligned(idx2, 4))
+    out2 = embedding_bag_pallas_blocked(tables, idx2, lblk=4)
+    np.testing.assert_allclose(out2, ref.embedding_bag_ref(tables, idx2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- cached (tiered) bag
+@pytest.mark.parametrize("B,T,L,R,S,d", [
+    (4, 3, 8, 64, 16, 32),
+    (2, 1, 5, 32, 4, 16),
+])
+def test_cached_embedding_bag_matches_ref(B, T, L, R, S, d):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(B + S), 3)
+    fast = jax.random.normal(k1, (T, S + 1, d)).at[:, S].set(0.0)
+    bulk = jax.random.normal(k2, (T, R + 1, d)).at[:, R].set(0.0)
+    hot = jax.random.bernoulli(k3, 0.6, (B, T, L))
+    fast_idx = jnp.where(hot, jax.random.randint(k3, (B, T, L), 0, S), S)
+    bulk_idx = jnp.where(hot, R, jax.random.randint(k3, (B, T, L), 0, R))
+    out = cached_embedding_bag_pallas(fast, bulk, fast_idx.astype(jnp.int32),
+                                      bulk_idx.astype(jnp.int32))
+    expect = ref.cached_embedding_bag_ref(fast, bulk, fast_idx, bulk_idx)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
 
 
 # -------------------------------------------------------------- interactions
