@@ -4,10 +4,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_tiered_embedding, fig6_membw, fig8_inference,
-                        fig9_latency, fig10_sharding, fig11_training,
-                        fig12_13_phases, kernel_bench, roofline,
-                        table16_17_upper_bounds)
+from benchmarks import (bench_engine_serve, bench_tiered_embedding,
+                        fig6_membw, fig8_inference, fig9_latency,
+                        fig10_sharding, fig11_training, fig12_13_phases,
+                        kernel_bench, roofline, table16_17_upper_bounds)
 
 SECTIONS = [
     ("fig6", fig6_membw.main),
@@ -19,15 +19,18 @@ SECTIONS = [
     ("table16_17", table16_17_upper_bounds.main),
     ("kernels", kernel_bench.main),
     ("tiered_embedding", lambda: bench_tiered_embedding.main([])),
+    ("engine_serve", lambda: bench_engine_serve.main(["--queries", "80"])),
     ("roofline", roofline.main),
 ]
 
 
-def main() -> int:
+def main(argv=None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
-                   help="run a single section: " + ",".join(n for n, _ in SECTIONS))
-    args = p.parse_args()
+                   choices=[n for n, _ in SECTIONS], metavar="SECTION",
+                   help="run a single section; one of: "
+                        + ", ".join(n for n, _ in SECTIONS))
+    args = p.parse_args(argv)
     for name, fn in SECTIONS:
         if args.only and name != args.only:
             continue

@@ -1,7 +1,7 @@
 """End-to-end driver: train a ~100M-parameter DLRM for a few hundred steps
-with the full production substrate — sharded step (Algorithms 1+2 via
-shard_map), async checkpointing with resume, straggler accounting, and the
-deterministic step-indexed data pipeline.
+with the full production substrate through the engine — plan-aware sharded
+step (Algorithms 1+2 via shard_map), async checkpointing with resume,
+straggler accounting, and the deterministic step-indexed data pipeline.
 
 ~100M params: 12 tables x 131072 rows x 64d = 100.7M embedding params
 (+ ~0.6M dense). Runs in a few minutes on CPU.
@@ -9,20 +9,11 @@ deterministic step-indexed data pipeline.
 Run: PYTHONPATH=src python examples/dlrm_train_100m.py [--steps 200]
 """
 import argparse
-import dataclasses
 import tempfile
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.checkpoint import CheckpointManager
 from repro.configs.base import DLRMConfig
-from repro.core import dlrm as dlrm_lib
-from repro.core import sharding as dsh
-from repro.data import make_recsys_batch
-from repro.launch.mesh import make_host_mesh
-from repro.runtime import TrainLoop
+from repro.engine import Engine
 
 
 def main():
@@ -43,34 +34,18 @@ def main():
                     (cfg.top_mlp_in,) + cfg.top_mlp[:-1], cfg.top_mlp)))
     print(f"== {cfg.name}: {n_params/1e6:.1f}M params, batch {cfg.batch_size}")
 
-    mesh = make_host_mesh()
-    step = dsh.make_dlrm_train_step(cfg, mesh, ("data", "model"), lr=0.2,
-                                    optimizer="adagrad")
-    params = dlrm_lib.init_dlrm(jax.random.PRNGKey(0), cfg)
-    params = dsh.shard_dlrm_params(params, cfg, mesh, ("data", "model"))
-    opt = {"table_acc": jnp.zeros((cfg.num_tables, cfg.rows_per_table),
-                                  jnp.float32)}
-
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="dlrm100m_")
-    ckpt = CheckpointManager(ckpt_dir, keep=2)
+    engine = Engine(cfg, optimizer="adagrad", lr=0.2, alpha=0.8)
+    session = engine.train_session(ckpt_dir=ckpt_dir, ckpt_every=50,
+                                   ckpt_keep=2)
+    if session.resume_step:
+        print(f"== resumed from checkpoint at step {session.resume_step}")
 
-    def loop_step(state, batch):
-        p, o = state
-        p, o, loss = step(p, o, batch["dense"], batch["indices"],
-                          batch["labels"])
-        return (p, o), {"loss": loss}
-
-    loop = TrainLoop(step_fn=loop_step,
-                     batch_fn=lambda s: make_recsys_batch(cfg, s, alpha=0.8),
-                     ckpt=ckpt, ckpt_every=50)
-    state, start = loop.resume((params, opt))
-    if start:
-        print(f"== resumed from checkpoint at step {start}")
     t0 = time.time()
-    state = loop.run(state, args.steps, start)
+    report = session.run(args.steps)
     dt = time.time() - t0
 
-    losses = [h["loss"] for h in loop.history]
+    losses = [h["loss"] for h in report.history]
     qps = args.steps * cfg.batch_size / dt
     w = max(1, min(10, len(losses) // 4))
     head = sum(losses[:w]) / w
@@ -78,8 +53,7 @@ def main():
     print(f"== {args.steps} steps in {dt:.1f}s  ({qps:,.0f} samples/s)")
     print(f"== loss (mean of {w}) {head:.4f} -> {tail:.4f} "
           f"(decreased: {tail < head})")
-    print(f"== checkpoints in {ckpt_dir} (latest step "
-          f"{ckpt.latest_step()}) — rerun with --ckpt-dir to resume")
+    print(f"== checkpoints in {ckpt_dir} — rerun with --ckpt-dir to resume")
     assert tail < head, "training must reduce loss"
 
 

@@ -1,19 +1,17 @@
 """Quickstart: the paper's workload end to end in ~a minute on CPU.
 
-1. Build DLRM-RM2 (reduced) and train it on the synthetic click-log.
-2. Serve a query batch and read out click probabilities.
+1. Build DLRM-RM2 (reduced) and train it through the engine's session API.
+2. Serve queries THROUGH the dynamic micro-batcher with the trained weights.
 3. Ask the RecSpeed planner what the PAPER'S analysis says about how to
    distribute the FULL model on RecSpeed-class vs DGX-2-class hardware.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-
 from repro.configs.registry import get_dlrm
-from repro.core import dlrm as dlrm_lib
 from repro.core.perf_model import dgx2_system, recspeed_system, tpu_v5e_system
 from repro.core.planner import plan_dlrm
 from repro.data import make_recsys_batch
+from repro.engine import Engine
 
 
 def main():
@@ -21,21 +19,22 @@ def main():
     print(f"== DLRM {cfg.name}: {cfg.num_tables} tables x {cfg.rows_per_table}"
           f" rows x d={cfg.embed_dim}")
 
-    # --- train ---------------------------------------------------------
-    params = dlrm_lib.init_dlrm(jax.random.PRNGKey(0), cfg)
-    step = jax.jit(dlrm_lib.reference_train_step,
-                   static_argnames=("cfg", "lr"))
-    for s in range(25):
-        b = make_recsys_batch(cfg, s)
-        params, loss = step(params, b["dense"], b["indices"], b["labels"],
-                            cfg, 0.05)
-        if s % 8 == 0:
-            print(f"  step {s:3d}  bce={float(loss):.4f}")
+    # --- one engine: config -> plan -> build -> run ----------------------
+    engine = Engine(cfg, lr=0.05)
 
-    # --- serve ----------------------------------------------------------
-    q = make_recsys_batch(cfg, 999)
-    probs = dlrm_lib.predict(params, q["dense"], q["indices"], cfg)
-    print(f"== served query of {probs.shape[0]}: "
+    # --- train -----------------------------------------------------------
+    train = engine.train_session()
+    for _ in range(3):
+        rep = train.run(8)
+        print(f"  steps {rep.start_step:3d}-{rep.start_step + rep.steps_run - 1}"
+              f"  bce={rep.last_loss:.4f}")
+
+    # --- serve (trained weights, dynamic micro-batching) -----------------
+    serve = engine.serve_session(max_batch_queries=2, max_wait_ms=5.0,
+                                 params=train.params)
+    futs = [serve.submit(make_recsys_batch(cfg, 999 + i)) for i in range(2)]
+    probs = futs[0].probs
+    print(f"== served query of {probs.shape[0]} (micro-batch of {len(futs)}): "
           f"P(click) head = {[round(float(p), 3) for p in probs[:4]]}")
 
     # --- plan (the paper's contribution as a feature) --------------------

@@ -1,0 +1,17 @@
+"""repro.engine — one session API from config -> plan -> build -> run.
+
+`Engine` owns the profile->plan->reconcile->step-factory->shard pipeline;
+`ServeSession` adds the dynamic-batching open-loop request path;
+`TrainSession`/`LMTrainSession` wrap the checkpointed train loop.
+"""
+from repro.engine.batching import MicroBatcher, QueryFuture, poisson_arrivals
+from repro.engine.engine import Engine
+from repro.engine.planning import PlanReport, build_auto_plan
+from repro.engine.serving import ServeSession, SLAReport
+from repro.engine.training import LMTrainSession, TrainReport, TrainSession
+
+__all__ = [
+    "Engine", "ServeSession", "TrainSession", "LMTrainSession",
+    "SLAReport", "TrainReport", "PlanReport", "MicroBatcher", "QueryFuture",
+    "poisson_arrivals", "build_auto_plan",
+]

@@ -1,0 +1,159 @@
+"""Engine: one declarative session API from config -> plan -> build -> run.
+
+The paper's thesis is that recommender throughput is decided by how the
+model is PLACED and DRIVEN — memory tiers, exchange mode, batching. The
+pipeline that realizes a placement (profile stream -> plan -> reconcile
+with mesh -> step factory -> param init/shard) used to be hand-wired in
+every entry point; `Engine` is now the only place it is assembled:
+
+    from repro.engine import Engine
+
+    eng = Engine(get_dlrm("dlrm-rm2-small-unsharded").reduced(),
+                 plan="auto", alpha=1.05)
+    serve = eng.serve_session(max_batch_queries=8, max_wait_ms=2.0)
+    report = serve.run_open_loop(n_queries=200, qps=400.0, sla_ms=50.0)
+
+    train = eng.train_session(ckpt_dir="/tmp/ck")
+    train.run(100)
+
+`plan=` accepts "none" (execute cfg.sharding as-is), "auto" (profile the
+step-indexed stream and run the placement planner, per serving/training
+mode), or a concrete `ShardingPlan` (reconciled against the mesh).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Union
+
+from jax.sharding import Mesh
+
+from repro.configs.base import DLRMConfig
+from repro.core.planner import ShardingPlan
+from repro.engine.planning import PlanReport, build_auto_plan
+from repro.engine.serving import ServeSession
+from repro.engine.training import LMTrainSession, TrainSession
+from repro.launch.mesh import make_host_mesh
+
+PlanArg = Union[None, str, ShardingPlan]
+
+
+class Engine:
+    """Declarative session factory over one model config + mesh.
+
+    Parameters
+    ----------
+    cfg        : DLRMConfig (serve + train) or an LM ModelConfig (train).
+    mesh       : jax Mesh; defaults to a host mesh with `model_axis`
+                 model-parallel columns over the local device set.
+    plan       : "none" | "auto" | ShardingPlan (DLRM only; see module doc).
+    exchange   : row-wise exchange mode when the plan doesn't dictate one.
+    optimizer  : sparse optimizer for DLRM training ("sgd" | "adagrad").
+    lr         : learning rate for training sessions.
+    alpha      : Zipf skew of the synthetic stream (profiling AND data).
+    seed       : parameter init + data stream seed.
+    fast_mb    : per-chip fast-tier capacity (MiB) for plan="auto";
+                 default fits ~half the tables so smoke runs go MIXED.
+    verbose    : print the plan summary when a plan is built.
+    """
+
+    def __init__(self, cfg, *, mesh: Optional[Mesh] = None,
+                 model_axis: int = 1, axis=("data", "model"),
+                 plan: PlanArg = "none", exchange: str = "partial_pool",
+                 optimizer: str = "sgd", lr: float = 0.01,
+                 alpha: float = 0.0, seed: int = 0,
+                 fast_mb: Optional[float] = None,
+                 profile_batches: int = 4, verbose: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh if mesh is not None else make_host_mesh(model=model_axis)
+        self.axis = axis
+        self.exchange = exchange
+        self.optimizer = optimizer
+        self.lr = lr
+        self.alpha = alpha
+        self.seed = seed
+        self.fast_mb = fast_mb
+        self.profile_batches = profile_batches
+        self.verbose = verbose
+        self.is_dlrm = isinstance(cfg, DLRMConfig)
+        if isinstance(plan, str) and plan not in ("none", "auto"):
+            raise ValueError(f"plan must be 'none', 'auto', or a "
+                             f"ShardingPlan; got {plan!r}")
+        if not self.is_dlrm and plan not in (None, "none"):
+            raise ValueError("plan placement is DLRM-only; LM configs take "
+                             "plan='none'")
+        self._plan_arg: PlanArg = plan
+        self._reports: Dict[str, PlanReport] = {}
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.devices.size)
+
+    # -- planning stage ----------------------------------------------------
+    def build_plan(self, mode: str = "inference") -> Optional[ShardingPlan]:
+        """Resolve the engine's `plan=` argument for a serving ("inference")
+        or training mode. Auto plans are profiled once per mode and cached;
+        concrete plans are reconciled against the mesh."""
+        if self._plan_arg in (None, "none"):
+            return None
+        if isinstance(self._plan_arg, ShardingPlan):
+            from repro.core import sharding as dsh
+            return dsh.reconcile_plan_with_mesh(self._plan_arg,
+                                                self.n_devices)
+        if mode not in self._reports:
+            report = build_auto_plan(
+                self.cfg, self.n_devices, alpha=self.alpha, seed=self.seed,
+                fast_mb=self.fast_mb, mode=mode,
+                profile_batches=self.profile_batches)
+            self._reports[mode] = report
+            if self.verbose:
+                print(report.summary())
+        return self._reports[mode].plan
+
+    def plan_report(self, mode: str = "inference") -> Optional[PlanReport]:
+        """The cached profile/prediction report for an auto plan (None when
+        plan="none" or the mode hasn't been built yet)."""
+        return self._reports.get(mode)
+
+    def _plan_and_exchange(self, mode: str):
+        plan = self.build_plan(mode)
+        return plan, (plan.exchange if plan is not None else self.exchange)
+
+    # -- sessions ----------------------------------------------------------
+    def serve_session(self, *, max_batch_queries: int = 8,
+                      max_wait_ms: float = 2.0,
+                      query_size: Optional[int] = None,
+                      params=None, warmup: bool = False) -> ServeSession:
+        """Build the full serving pipeline: plan -> serve step -> sharded
+        params -> dynamic micro-batcher. `params` serve trained weights —
+        stacked ({"tables": ...}), or plan-split (e.g. a `TrainSession`'s
+        `.params` from THIS engine; the split must match this session's
+        plan groups). Default is fresh init from the engine seed.
+        `warmup=True` pre-compiles the capacity batch shape so the first
+        real-time `submit` flush doesn't pay the XLA compile."""
+        if not self.is_dlrm:
+            raise ValueError("serve_session is DLRM-only")
+        plan, exchange = self._plan_and_exchange("inference")
+        return ServeSession(
+            self.cfg, self.mesh, self.axis, plan=plan, exchange=exchange,
+            max_batch_queries=max_batch_queries, max_wait_ms=max_wait_ms,
+            query_size=query_size, params=params, seed=self.seed,
+            alpha=self.alpha, warmup=warmup)
+
+    def train_session(self, *, ckpt_dir: Optional[str] = None,
+                      ckpt_every: int = 50, ckpt_keep: int = 3,
+                      batch: int = 8, seq: int = 128,
+                      schedule_steps: int = 100):
+        """Build the full training pipeline (plan-aware step + opt state +
+        TrainLoop with checkpoint-resume, retaining `ckpt_keep` snapshots).
+        DLRM configs get `TrainSession`; LM configs get `LMTrainSession`
+        (batch/seq/schedule_steps apply)."""
+        if self.is_dlrm:
+            plan, exchange = self._plan_and_exchange("training")
+            return TrainSession(
+                self.cfg, self.mesh, self.axis, plan=plan, exchange=exchange,
+                optimizer=self.optimizer, lr=self.lr, seed=self.seed,
+                alpha=self.alpha, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                ckpt_keep=ckpt_keep)
+        return LMTrainSession(
+            self.cfg, self.mesh, lr=self.lr, seed=self.seed, batch=batch,
+            seq=seq, schedule_steps=schedule_steps, ckpt_dir=ckpt_dir,
+            ckpt_every=ckpt_every, ckpt_keep=ckpt_keep)

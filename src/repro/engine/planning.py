@@ -1,0 +1,74 @@
+"""Engine planning stage: profile stream -> placement plan -> mesh reconcile.
+
+This is the one place the profile->plan->reconcile pipeline lives. It used
+to be hand-wired in `launch/serve.py` (and cross-imported by
+`launch/train.py`); every entry point now reaches it through
+`repro.engine.Engine`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import DLRMConfig
+from repro.core.planner import ShardingPlan
+
+
+@dataclass(frozen=True)
+class PlanReport:
+    """A reconciled plan plus the perf model's prediction for it."""
+
+    plan: ShardingPlan
+    mode: str                 # "inference" | "training"
+    predicted_qps: float
+
+    def summary(self) -> str:
+        plan = self.plan
+        n_fast = sum(1 for p in plan.placements if p.tier == "fast")
+        n_tables = len(plan.placements)
+        return (f"[plan] mode={plan.mode} exchange={plan.exchange} "
+                f"fast_tables={n_fast}/{n_tables} "
+                f"hit_ratio={plan.hit_ratio:.3f} "
+                f"predicted_qps={self.predicted_qps:.0f} "
+                f"(hybrid HBM+DDR4 model)")
+
+
+def build_auto_plan(cfg: DLRMConfig, n: int, *, alpha: float = 0.0,
+                    seed: int = 0, fast_mb: Optional[float] = None,
+                    mode: str = "inference",
+                    profile_batches: int = 4) -> PlanReport:
+    """Profile the step-indexed stream, run the planner, reconcile with the
+    mesh size, and report the hit-ratio-aware QPS prediction.
+
+    Default fast capacity fits ~half the tables across the mesh so smoke
+    runs exercise a MIXED placement.
+    """
+    from repro.core import perf_model, planner
+    from repro.core import sharding as dsh
+    from repro.core import tiered_embedding as te
+
+    counts = te.measure_row_freq(cfg, alpha, seed, n_batches=profile_batches)
+    table_freq = np.asarray(counts.sum(axis=1), dtype=np.float64)
+    tbytes = cfg.rows_per_table * cfg.embed_dim * 2
+    if fast_mb is not None:
+        fast_bytes = int(fast_mb * 2 ** 20)
+    else:
+        fast_bytes = -(-(cfg.num_tables // 2) // n) * tbytes
+    system = dataclasses.replace(perf_model.recspeed_system(), n_chips=n)
+    plan = planner.plan_with_placement(
+        cfg, system, table_freq, fast_bytes,
+        bulk_capacity_bytes=cfg.num_tables * tbytes, mode=mode)
+    # fold the mesh-divisibility demotion into the plan so the reported
+    # placement + hit ratio match what the step factories execute
+    plan = dsh.reconcile_plan_with_mesh(plan, n, table_freq)
+    hybrid = dataclasses.replace(perf_model.recspeed_hybrid_system(),
+                                 n_chips=n)
+    # predict for the sharding mode the plan actually chose (breakdown
+    # routes on cfg.sharding)
+    pred = perf_model.breakdown(dataclasses.replace(cfg, sharding=plan.mode),
+                                hybrid, mode, plan.exchange,
+                                hit_ratio=plan.hit_ratio)
+    return PlanReport(plan=plan, mode=mode, predicted_qps=pred.qps)

@@ -1,0 +1,328 @@
+"""ServeSession: the engine's request path for batched DLRM inference.
+
+Wraps the plan-executing serve step (`core/sharding.make_dlrm_serve_step`)
+behind a dynamic micro-batcher: callers `submit()` fixed-size queries;
+micro-batches flush when full or when the oldest query hits its deadline.
+Two drivers measure the latency distribution D_Q against the paper's SLA
+model (Eq. 1, PPF(D_Q, P) <= C_SLA):
+
+  * `run_serial(n)`   — closed-loop, one query at a time (the seed
+                        launcher's behavior): isolates per-query service
+                        time, no queueing.
+  * `run_open_loop(n, qps)` — Poisson arrivals at a target QPS on a
+                        virtual clock; service times are REAL device
+                        executions, queueing/batching delays are simulated
+                        event-by-event. Deterministic and sleep-free, so it
+                        is usable from tests and CI while still reflecting
+                        the throughput/tail-latency frontier.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.core import dlrm as dlrm_lib
+from repro.core import sharding as dsh
+from repro.core.planner import ShardingPlan
+from repro.data import make_recsys_batch
+from repro.engine.batching import (MicroBatcher, QueryFuture, now_s,
+                                   poisson_arrivals)
+
+Query = Dict[str, jax.Array]
+
+
+@dataclass(frozen=True)
+class SLAReport:
+    """Latency distribution + SLA verdict for one serving run."""
+
+    n_queries: int
+    mode: str                  # "serial" | "open_loop"
+    offered_qps: Optional[float]
+    achieved_qps: float
+    p50_ms: float
+    p90_ms: float
+    p99_ms: float
+    percentile: float
+    ppf_ms: float              # PPF(D_Q, percentile)
+    sla_ms: float              # C_SLA
+    ok: bool
+    mean_batch_queries: float  # avg queries per flushed micro-batch
+
+    def summary(self) -> str:
+        offered = ("" if self.offered_qps is None
+                   else f" offered={self.offered_qps:.1f}qps")
+        return (
+            f"[serve] {self.mode}: {self.n_queries} queries,{offered} "
+            f"QPS={self.achieved_qps:.1f} mean_batch="
+            f"{self.mean_batch_queries:.2f} p50={self.p50_ms:.2f}ms "
+            f"p90={self.p90_ms:.2f}ms p99={self.p99_ms:.2f}ms\n"
+            f"[serve] SLA check PPF(D_Q, {self.percentile:.0f}) = "
+            f"{self.ppf_ms:.2f}ms {'<=' if self.ok else '>'} "
+            f"C_SLA={self.sla_ms}ms -> {'PASS' if self.ok else 'FAIL'}")
+
+
+def _report(lat_ms: Sequence[float], batch_sizes: Sequence[int], mode: str,
+            offered_qps: Optional[float], achieved_qps: float,
+            sla_ms: float, percentile: float) -> SLAReport:
+    lat = np.asarray(lat_ms, np.float64)
+    p50, p90, p99 = (float(np.percentile(lat, p)) for p in (50, 90, 99))
+    ppf = float(np.percentile(lat, percentile))
+    return SLAReport(
+        n_queries=len(lat), mode=mode, offered_qps=offered_qps,
+        achieved_qps=achieved_qps, p50_ms=p50, p90_ms=p90, p99_ms=p99,
+        percentile=percentile, ppf_ms=ppf, sla_ms=sla_ms, ok=ppf <= sla_ms,
+        mean_batch_queries=float(np.mean(batch_sizes)) if batch_sizes else 0.0)
+
+
+class ServeSession:
+    """One served model instance: sharded params + compiled step + batcher.
+
+    Built by `Engine.serve_session()`; do not construct the pipeline by
+    hand. Queries are fixed-size (`query_size` samples each — the paper's
+    "query of size B", Sec. III-B); the micro-batcher packs up to
+    `max_batch_queries` of them into one device execution.
+    """
+
+    def __init__(self, cfg: DLRMConfig, mesh, axis, *,
+                 plan: Optional[ShardingPlan] = None,
+                 exchange: str = "partial_pool",
+                 max_batch_queries: int = 8,
+                 max_wait_ms: float = 2.0,
+                 query_size: Optional[int] = None,
+                 params=None, seed: int = 0, alpha: float = 0.0,
+                 warmup: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.plan = plan
+        self.seed = seed
+        self.alpha = alpha
+        self.query_size = int(query_size or cfg.batch_size)
+        self.max_batch_queries = int(max_batch_queries)
+        if self.max_batch_queries < 1:
+            raise ValueError("max_batch_queries must be >= 1")
+        n = int(mesh.devices.size)
+        if (self.max_batch_queries * self.query_size) % n:
+            raise ValueError(
+                f"capacity batch {self.max_batch_queries}x{self.query_size} "
+                f"samples must divide the {n}-device mesh")
+        self._n = n
+        self._step = dsh.make_dlrm_serve_step(cfg, mesh, axis, exchange,
+                                              plan=plan)
+        if params is None:
+            params = dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg)
+        elif "tables" not in params:
+            # plan-split params (e.g. TrainSession.params under plan=auto):
+            # only accepted when the split matches THIS session's plan
+            # groups, otherwise tables would land in the wrong tier.
+            groups = (dsh.plan_table_groups(plan, n)
+                      if plan is not None and plan.placements else None)
+            if groups is None:
+                raise ValueError(
+                    "params have no 'tables' (plan-split) but this session "
+                    "has no placed plan; pass stacked params")
+            got = (params["tables_fast"].shape[0],
+                   params["tables_bulk"].shape[0])
+            want = (len(groups.fast_ids), len(groups.bulk_ids))
+            if got != want:
+                raise ValueError(
+                    f"plan-split params (fast,bulk)={got} do not match this "
+                    f"session's plan groups {want}; re-stack them with "
+                    f"merge_dlrm_params_by_plan under their own plan first")
+        self.params = dsh.shard_dlrm_params(params, cfg, mesh, axis,
+                                            plan=plan)
+        self.batcher = MicroBatcher(self.max_batch_queries, max_wait_ms / 1e3)
+        self._qid = 0
+        self._compiled: set = set()
+        # The measurement drivers compile their shapes untimed on first use;
+        # eager warmup only matters for the real-time submit path, where the
+        # first flush would otherwise pay the capacity-shape compile.
+        if warmup:
+            self._ensure_compiled(self.max_batch_queries)
+
+    # -- shapes ------------------------------------------------------------
+    def _padded_count(self, n_queries: int) -> int:
+        """Smallest query count >= n_queries whose sample total divides the
+        mesh (exists because the capacity batch does)."""
+        if n_queries > self.max_batch_queries:
+            raise ValueError(
+                f"{n_queries} queries exceed the micro-batch capacity "
+                f"({self.max_batch_queries})")
+        k = n_queries
+        while (k * self.query_size) % self._n:
+            k += 1
+        return k
+
+    def _ensure_compiled(self, n_queries: int) -> None:
+        k = self._padded_count(n_queries)
+        if k in self._compiled:
+            return
+        b = self.query_size * k
+        dense = jnp.zeros((b, self.cfg.num_dense), jnp.float32)
+        idx = jnp.zeros((b, self.cfg.num_tables, self.cfg.lookups_per_table),
+                        jnp.int32)
+        self._step(self.params, dense, idx).block_until_ready()
+        self._compiled.add(k)
+
+    # -- execution ---------------------------------------------------------
+    def serve_direct(self, dense: jax.Array, indices: jax.Array) -> np.ndarray:
+        """Run the compiled serve step on one exact batch (no batching/pad)."""
+        return np.asarray(self._step(self.params, dense, indices))
+
+    def _execute(self, queries: List[Query]) -> Tuple[np.ndarray, float]:
+        """Concatenate + pad queries, run the step, split results back.
+
+        Returns (probs (n_queries, query_size), service_seconds). Padding
+        replicates query 0 so every compiled shape is a mesh-divisible
+        query count; padded outputs are discarded.
+        """
+        k = self._padded_count(len(queries))
+        self._ensure_compiled(k)
+        parts = [q for q in queries]
+        while len(parts) < k:
+            parts.append(queries[0])
+        dense = jnp.concatenate([p["dense"] for p in parts], axis=0)
+        idx = jnp.concatenate([p["indices"] for p in parts], axis=0)
+        t0 = time.perf_counter()
+        probs = self._step(self.params, dense, idx)
+        probs.block_until_ready()
+        service = time.perf_counter() - t0
+        out = np.asarray(probs).reshape(k, self.query_size)
+        return out[:len(queries)], service
+
+    # -- request path ------------------------------------------------------
+    def submit(self, query: Query, now: Optional[float] = None) -> QueryFuture:
+        """Enqueue one query; flushes the micro-batch if it became full or
+        the oldest query's deadline has already passed. `now` (seconds) is
+        injectable for deterministic tests; defaults to the wall clock."""
+        q = self.query_size
+        if query["dense"].shape[0] != q or query["indices"].shape[0] != q:
+            raise ValueError(
+                f"query must have {q} samples, got "
+                f"{query['dense'].shape[0]}/{query['indices'].shape[0]}")
+        t = now_s() if now is None else now
+        fut = QueryFuture(self._qid, t, {"dense": query["dense"],
+                                         "indices": query["indices"]})
+        self._qid += 1
+        full = self.batcher.add(fut)
+        if full or self.batcher.due(t):
+            self.flush(now=t if now is not None else None)
+        return fut
+
+    def poll(self, now: Optional[float] = None) -> bool:
+        """Flush if the oldest queued query has exceeded its deadline.
+        Returns True if a flush happened."""
+        t = now_s() if now is None else now
+        if self.batcher.due(t):
+            self.flush(now=now)
+            return True
+        return False
+
+    def flush(self, now: Optional[float] = None) -> List[QueryFuture]:
+        """Force the queued micro-batch through the device."""
+        futs = self.batcher.drain()
+        if not futs:
+            return []
+        probs, _ = self._execute([f.query for f in futs])
+        t = now_s() if now is None else now
+        for f, p in zip(futs, probs):
+            f.complete(p, t)
+        return futs
+
+    @property
+    def pending(self) -> int:
+        return len(self.batcher.queue)
+
+    # -- measurement drivers ----------------------------------------------
+    def measure_service_time(self, n_queries: int = 1, repeats: int = 5,
+                             seed: Optional[int] = None,
+                             alpha: Optional[float] = None) -> float:
+        """Median wall-clock seconds to serve one `n_queries`-query batch
+        (`n_queries` must be <= the session's micro-batch capacity)."""
+        qs = [self._make_query(s, seed, alpha) for s in range(n_queries)]
+        self._ensure_compiled(n_queries)
+        times = []
+        for _ in range(repeats):
+            _, service = self._execute(qs)
+            times.append(service)
+        return float(np.median(times))
+
+    def _make_query(self, step: int, seed: Optional[int] = None,
+                    alpha: Optional[float] = None) -> Query:
+        """Synthetic query from the session's stream (seed/alpha default to
+        the engine's, so measured traffic matches what the plan profiled)."""
+        b = make_recsys_batch(self.cfg, step,
+                              self.seed if seed is None else seed,
+                              self.alpha if alpha is None else alpha,
+                              batch_size=self.query_size)
+        return {"dense": b["dense"], "indices": b["indices"]}
+
+    def run_serial(self, n_queries: int, *, sla_ms: float = 50.0,
+                   percentile: float = 99.0, seed: Optional[int] = None,
+                   alpha: Optional[float] = None) -> SLAReport:
+        """Closed-loop: one query per micro-batch, back to back."""
+        self._ensure_compiled(1)
+        lat_ms: List[float] = []
+        for q in range(n_queries):
+            _, service = self._execute([self._make_query(q, seed, alpha)])
+            lat_ms.append(service * 1e3)
+        busy_s = sum(lat_ms) / 1e3
+        return _report(lat_ms, [1] * n_queries, "serial", None,
+                       n_queries / max(busy_s, 1e-12), sla_ms, percentile)
+
+    def run_open_loop(self, n_queries: int, qps: float, *,
+                      sla_ms: float = 50.0, percentile: float = 99.0,
+                      seed: Optional[int] = None,
+                      alpha: Optional[float] = None,
+                      max_wait_ms: Optional[float] = None) -> SLAReport:
+        """Open-loop load: Poisson arrivals at `qps`, dynamic batching.
+
+        Event-driven virtual clock over the SAME `MicroBatcher` policy the
+        real-time submit path uses: arrival times are generated up front;
+        each flush's SERVICE time is a real device execution (measured);
+        queueing (server busy) and batching (deadline) delays compose with
+        it exactly as they would on a single-executor server. Per-query
+        latency = completion - arrival; the SLA verdict is Eq. 1 on that
+        distribution.
+        """
+        arrivals = poisson_arrivals(n_queries, qps,
+                                    self.seed if seed is None else seed)
+        batcher = MicroBatcher(
+            self.max_batch_queries,
+            self.batcher.max_wait_s if max_wait_ms is None
+            else max_wait_ms / 1e3)
+        lat_ms: List[float] = []
+        batch_sizes: List[int] = []
+        free = 0.0            # server busy until this time
+        last_done = 0.0
+        i = 0
+        while i < n_queries or batcher.queue:
+            next_arr = arrivals[i] if i < n_queries else float("inf")
+            # deadline wins ties, matching MicroBatcher.due (now >= deadline)
+            if next_arr < batcher.deadline():
+                fut = QueryFuture(i, arrivals[i],
+                                  self._make_query(i, seed, alpha))
+                i += 1
+                if not batcher.add(fut):
+                    continue
+                trigger = fut.arrival          # the batch just filled
+            else:
+                trigger = batcher.deadline()   # oldest query timed out
+            futs = batcher.drain()
+            probs, service = self._execute([f.query for f in futs])
+            start = max(trigger, free)
+            done = start + service
+            free = done
+            last_done = done
+            for f, p in zip(futs, probs):
+                f.complete(p, done)
+                lat_ms.append(f.latency_ms)
+            batch_sizes.append(len(futs))
+        achieved = n_queries / max(last_done, 1e-12)
+        return _report(lat_ms, batch_sizes, "open_loop", qps, achieved,
+                       sla_ms, percentile)

@@ -1,0 +1,147 @@
+"""TrainSession: the engine's training path (DLRM and LM workloads).
+
+Wraps `runtime.TrainLoop` (resume-from-latest, async checkpointing,
+straggler accounting) around the plan-executing DLRM step factory — with
+the plan-aware optimizer-state init — or the LM train step. Built by
+`Engine.train_session()`; no caller assembles step/params/opt-state/loop
+by hand anymore.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import DLRMConfig
+from repro.core import dlrm as dlrm_lib
+from repro.core import sharding as dsh
+from repro.core.planner import ShardingPlan
+from repro.data import make_lm_batch, make_recsys_batch
+from repro.runtime import TrainLoop
+
+
+@dataclass(frozen=True)
+class TrainReport:
+    """Result of one `TrainSession.run` call."""
+
+    workload: str              # "dlrm" | "lm"
+    config: str
+    start_step: int
+    steps_run: int
+    first_loss: float
+    last_loss: float
+    history: List[Dict[str, float]]
+
+    def summary(self) -> str:
+        return (f"[train] {self.workload} {self.config}: "
+                f"steps={self.steps_run} (from {self.start_step}) "
+                f"first_loss={self.first_loss:.4f} "
+                f"last_loss={self.last_loss:.4f}")
+
+
+class _SessionBase:
+    """Shared resume/run plumbing over a `TrainLoop`."""
+
+    workload = "?"
+
+    def __init__(self, cfg, loop: TrainLoop, init_state: Any):
+        self.cfg = cfg
+        self._loop = loop
+        self._state, self.resume_step = loop.resume(init_state)
+        self._next_step = self.resume_step
+
+    @property
+    def state(self) -> Any:
+        return self._state
+
+    def run(self, n_steps: int) -> TrainReport:
+        start = self._next_step
+        before = len(self._loop.history)
+        self._state = self._loop.run(self._state, n_steps, start)
+        self._next_step = start + n_steps
+        hist = self._loop.history[before:]
+        losses = [h["loss"] for h in hist]
+        return TrainReport(
+            workload=self.workload, config=self.cfg.name, start_step=start,
+            steps_run=len(hist), first_loss=losses[0], last_loss=losses[-1],
+            history=hist)
+
+
+class TrainSession(_SessionBase):
+    """DLRM training: plan-executing distributed step + TrainLoop."""
+
+    workload = "dlrm"
+
+    def __init__(self, cfg: DLRMConfig, mesh, axis, *,
+                 plan: Optional[ShardingPlan] = None,
+                 exchange: str = "partial_pool", optimizer: str = "sgd",
+                 lr: float = 0.01, seed: int = 0, alpha: float = 0.0,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+                 ckpt_keep: int = 3):
+        n = int(mesh.devices.size)
+        step_fn = dsh.make_dlrm_train_step(
+            cfg, mesh, axis=axis, lr=lr, row_wise_exchange=exchange,
+            optimizer=optimizer, plan=plan)
+        params = dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg)
+        params = dsh.shard_dlrm_params(params, cfg, mesh, axis, plan=plan)
+        opt_state = dsh.init_dlrm_opt_state(cfg, optimizer, plan, n)
+
+        def loop_step(state, batch):
+            p, o = state
+            p, o, loss = step_fn(p, o, batch["dense"], batch["indices"],
+                                 batch["labels"])
+            return (p, o), {"loss": loss}
+
+        loop = TrainLoop(
+            step_fn=loop_step,
+            batch_fn=lambda s: make_recsys_batch(cfg, s, seed, alpha),
+            ckpt=(CheckpointManager(ckpt_dir, keep=ckpt_keep)
+                  if ckpt_dir else None),
+            ckpt_every=ckpt_every)
+        super().__init__(cfg, loop, (params, opt_state))
+
+    @property
+    def params(self) -> Dict[str, Any]:
+        return self._state[0]
+
+    @property
+    def opt_state(self) -> Any:
+        return self._state[1]
+
+
+class LMTrainSession(_SessionBase):
+    """LM training: `models.lm.make_train_step` + TrainLoop."""
+
+    workload = "lm"
+
+    def __init__(self, cfg, mesh, *, lr: float = 3e-4, seed: int = 0,
+                 batch: int = 8, seq: int = 128,
+                 schedule_steps: int = 100,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+                 ckpt_keep: int = 3):
+        from repro.models import transformer as T
+        from repro.models import lm
+        from repro.models.common import Sharder
+        from repro.optim import adamw, cosine_schedule
+
+        sharder = Sharder(mesh) if int(mesh.devices.size) > 1 else Sharder(None)
+        opt = adamw(lr, lr_schedule=cosine_schedule(10, schedule_steps))
+        step = jax.jit(lm.make_train_step(cfg, opt, sharder),
+                       donate_argnums=(0,))
+        params = T.init_model(jax.random.PRNGKey(seed), cfg)
+        state = {"params": params, "opt": opt.init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        loop = TrainLoop(
+            step_fn=step,
+            batch_fn=lambda s: make_lm_batch(cfg, s, seed, batch, seq),
+            ckpt=(CheckpointManager(ckpt_dir, keep=ckpt_keep)
+                  if ckpt_dir else None),
+            ckpt_every=ckpt_every)
+        super().__init__(cfg, loop, state)
+
+    @property
+    def params(self) -> Any:
+        return self._state["params"]

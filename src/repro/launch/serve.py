@@ -1,77 +1,30 @@
-"""Serving launcher: batched DLRM inference under the paper's SLA model.
+"""Serving launcher — a thin argparse adapter over `repro.engine.Engine`.
 
-Implements the deployment scenario of paper Sec. III-B / Fig. 3: queries of
-size B arrive, are batched, ranked by the RecSys, and the system must keep
-PPF(D_Q, P) <= C_SLA (Eq. 1). The server measures the per-query latency
-distribution and reports the P50/P90/P99 percentiles against the SLA.
+The pipeline (profile -> plan -> reconcile -> serve step -> shard params ->
+micro-batcher) lives in `repro.engine`; this module only maps flags onto
+`Engine(...)` / `ServeSession`. Implements the deployment scenario of paper
+Sec. III-B / Fig. 3: queries of size B are ranked under the SLA constraint
+PPF(D_Q, P) <= C_SLA (Eq. 1).
 
-  PYTHONPATH=src python -m repro.launch.serve --config dlrm-rm2-small-unsharded \
-      --smoke --queries 200 --sla-ms 50
+  # closed-loop (one query at a time, the per-query service floor)
+  PYTHONPATH=src python -m repro.launch.serve --smoke --queries 200
 
-With ``--plan auto`` the launcher profiles the index stream, runs the
-planner (`plan_with_placement`), prints the chosen placement + the perf
-model's hit-ratio-aware QPS prediction, and EXECUTES the placements: the
-serve step routes each table's lookups to its tier.
+  # open-loop: Poisson arrivals at 300 QPS, dynamic micro-batching
+  PYTHONPATH=src python -m repro.launch.serve --smoke --queries 200 \
+      --qps 300 --max-batch-queries 8 --max-wait-ms 2
+
+With ``--plan auto`` the engine profiles the index stream, runs the
+placement planner, prints the chosen placement + predicted QPS, and
+EXECUTES the placements inside the serve step.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
-import time
-from typing import List, Optional
-
-import jax
-import numpy as np
+from typing import Optional
 
 from repro.configs.registry import get_dlrm
-from repro.core import dlrm as dlrm_lib
-from repro.core import sharding as dsh
-from repro.data import make_recsys_batch
-from repro.launch.mesh import make_host_mesh
-
-
-def percentile(xs: List[float], p: float) -> float:
-    return float(np.percentile(np.asarray(xs), p))
-
-
-def build_auto_plan(cfg, n: int, alpha: float, seed: int,
-                    fast_mb: Optional[float], mode: str,
-                    profile_batches: int = 4):
-    """Profile the step-indexed stream, run the planner, report prediction.
-
-    Returns (plan, predicted_qps). Default fast capacity fits ~half the
-    tables across the mesh so smoke runs exercise a MIXED placement."""
-    from repro.core import perf_model, planner
-    from repro.core import tiered_embedding as te
-
-    counts = te.measure_row_freq(cfg, alpha, seed, n_batches=profile_batches)
-    table_freq = np.asarray(counts.sum(axis=1), dtype=np.float64)
-    tbytes = cfg.rows_per_table * cfg.embed_dim * 2
-    if fast_mb is not None:
-        fast_bytes = int(fast_mb * 2 ** 20)
-    else:
-        fast_bytes = -(-(cfg.num_tables // 2) // n) * tbytes
-    system = dataclasses.replace(perf_model.recspeed_system(), n_chips=n)
-    plan = planner.plan_with_placement(
-        cfg, system, table_freq, fast_bytes,
-        bulk_capacity_bytes=cfg.num_tables * tbytes, mode=mode)
-    # fold the mesh-divisibility demotion into the plan so the printed
-    # placement + hit ratio match what the step factories execute
-    plan = dsh.reconcile_plan_with_mesh(plan, n, table_freq)
-    hybrid = dataclasses.replace(perf_model.recspeed_hybrid_system(),
-                                 n_chips=n)
-    # predict for the sharding mode the plan actually chose (breakdown
-    # routes on cfg.sharding)
-    pred = perf_model.breakdown(dataclasses.replace(cfg, sharding=plan.mode),
-                                hybrid, mode, plan.exchange,
-                                hit_ratio=plan.hit_ratio)
-    n_fast = sum(1 for p in plan.placements if p.tier == "fast")
-    print(f"[plan] mode={plan.mode} exchange={plan.exchange} "
-          f"fast_tables={n_fast}/{cfg.num_tables} "
-          f"hit_ratio={plan.hit_ratio:.3f} "
-          f"predicted_qps={pred.qps:.0f} (hybrid HBM+DDR4 model)")
-    return plan, pred.qps
+from repro.engine import Engine
 
 
 def main(argv: Optional[list] = None) -> int:
@@ -79,6 +32,13 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--config", default="dlrm-rm2-small-unsharded")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--queries", type=int, default=100)
+    ap.add_argument("--qps", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate; 0 = closed-loop "
+                         "(back-to-back queries, no batching delay)")
+    ap.add_argument("--max-batch-queries", type=int, default=4,
+                    help="dynamic micro-batch capacity (queries)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="micro-batch deadline: oldest query flushes by this")
     ap.add_argument("--sla-ms", type=float, default=50.0,
                     help="C_SLA (paper Eq. 1), milliseconds")
     ap.add_argument("--sla-percentile", type=float, default=99.0)
@@ -98,45 +58,23 @@ def main(argv: Optional[list] = None) -> int:
     cfg = get_dlrm(args.config)
     if args.smoke:
         cfg = cfg.reduced()
-    mesh = make_host_mesh(model=args.model_axis)
 
-    plan = None
-    exchange = args.exchange
-    if args.plan == "auto":
-        plan, _ = build_auto_plan(cfg, int(mesh.devices.size), args.alpha,
-                                  args.seed, args.fast_mb, "inference")
-        exchange = plan.exchange
-
-    serve = dsh.make_dlrm_serve_step(cfg, mesh, ("data", "model"),
-                                     exchange, plan=plan)
-    params = dlrm_lib.init_dlrm(jax.random.PRNGKey(args.seed), cfg)
-    params = dsh.shard_dlrm_params(params, cfg, mesh, ("data", "model"),
-                                   plan=plan)
-
-    # warm up (compile)
-    b0 = make_recsys_batch(cfg, 0, args.seed, args.alpha)
-    serve(params, b0["dense"], b0["indices"]).block_until_ready()
-
-    lat_ms: List[float] = []
-    t_all0 = time.perf_counter()
-    for q in range(args.queries):
-        batch = make_recsys_batch(cfg, q, args.seed, args.alpha)
-        t0 = time.perf_counter()
-        probs = serve(params, batch["dense"], batch["indices"])
-        probs.block_until_ready()
-        lat_ms.append((time.perf_counter() - t0) * 1e3)
-    wall = time.perf_counter() - t_all0
-
-    p50, p90, p99 = (percentile(lat_ms, p) for p in (50, 90, 99))
-    ppf = percentile(lat_ms, args.sla_percentile)
-    ok = ppf <= args.sla_ms
-    qps = args.queries / wall
-    print(f"[serve] {cfg.name}: {args.queries} queries, "
-          f"QPS={qps:.1f} p50={p50:.2f}ms p90={p90:.2f}ms p99={p99:.2f}ms")
-    print(f"[serve] SLA check PPF(D_Q, {args.sla_percentile:.0f}) = "
-          f"{ppf:.2f}ms {'<=' if ok else '>'} C_SLA={args.sla_ms}ms -> "
-          f"{'PASS' if ok else 'FAIL'}")
-    return 0 if ok else 1
+    engine = Engine(cfg, model_axis=args.model_axis, plan=args.plan,
+                    exchange=args.exchange, alpha=args.alpha,
+                    seed=args.seed, fast_mb=args.fast_mb, verbose=True)
+    session = engine.serve_session(max_batch_queries=args.max_batch_queries,
+                                   max_wait_ms=args.max_wait_ms)
+    if args.qps > 0:
+        report = session.run_open_loop(
+            args.queries, args.qps, sla_ms=args.sla_ms,
+            percentile=args.sla_percentile)
+    else:
+        report = session.run_serial(
+            args.queries, sla_ms=args.sla_ms,
+            percentile=args.sla_percentile)
+    print(f"[serve] {cfg.name}:")
+    print(report.summary())
+    return 0 if report.ok else 1
 
 
 if __name__ == "__main__":

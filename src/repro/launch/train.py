@@ -1,8 +1,10 @@
-"""Training launcher (DLRM or any assigned LM arch).
+"""Training launcher — a thin argparse adapter over `repro.engine.Engine`.
 
-Runs REAL steps on the local device set (CPU smoke / TPU pod), with
-checkpoint-resume, straggler accounting, and step-indexed data. For the
-compile-only multi-pod validation use `repro.launch.dryrun`.
+The pipeline (plan -> step factory -> param/opt-state init -> sharding ->
+checkpointed TrainLoop) lives in `repro.engine`; this module only maps
+flags onto `Engine(...)` / `TrainSession`. Runs REAL steps on the local
+device set (CPU smoke / TPU pod). For the compile-only multi-pod
+validation use `repro.launch.dryrun`.
 
   PYTHONPATH=src python -m repro.launch.train --workload dlrm \
       --config dlrm-rm2-small-unsharded --steps 200 --ckpt-dir /tmp/ck
@@ -12,107 +14,11 @@ compile-only multi-pod validation use `repro.launch.dryrun`.
 from __future__ import annotations
 
 import argparse
-import logging
-import os
 import sys
-import time
-from functools import partial
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
-log = logging.getLogger("repro.train")
-
-
-def train_dlrm(args) -> int:
-    from repro.configs.registry import get_dlrm
-    from repro.core import dlrm as dlrm_lib
-    from repro.core import sharding as dsh
-    from repro.checkpoint import CheckpointManager
-    from repro.data import make_recsys_batch
-    from repro.launch.mesh import make_host_mesh
-    from repro.runtime import TrainLoop
-
-    cfg = get_dlrm(args.config)
-    if args.smoke:
-        cfg = cfg.reduced()
-    mesh = make_host_mesh(model=args.model_axis)
-    n = int(mesh.devices.size)
-
-    plan = None
-    exchange = args.exchange
-    if args.plan == "auto":
-        from repro.launch.serve import build_auto_plan
-        plan, _ = build_auto_plan(cfg, n, args.alpha, args.seed,
-                                  args.fast_mb, "training")
-        exchange = plan.exchange
-
-    # batch must divide the mesh; tables/rows likewise (reduced() guarantees)
-    step_fn = dsh.make_dlrm_train_step(
-        cfg, mesh, axis=("data", "model"), lr=args.lr,
-        row_wise_exchange=exchange, optimizer=args.optimizer, plan=plan)
-
-    params = dlrm_lib.init_dlrm(jax.random.PRNGKey(args.seed), cfg)
-    params = dsh.shard_dlrm_params(params, cfg, mesh, ("data", "model"),
-                                   plan=plan)
-    opt_state = dsh.init_dlrm_opt_state(cfg, args.optimizer, plan, n)
-
-    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-
-    def loop_step(state, batch):
-        params, opt_state = state
-        params, opt_state, loss = step_fn(
-            params, opt_state, batch["dense"], batch["indices"], batch["labels"])
-        return (params, opt_state), {"loss": loss}
-
-    loop = TrainLoop(
-        step_fn=loop_step,
-        batch_fn=lambda s: make_recsys_batch(cfg, s, args.seed, args.alpha),
-        ckpt=ckpt, ckpt_every=args.ckpt_every)
-    state, start = loop.resume((params, opt_state))
-    state = loop.run(state, args.steps, start)
-    losses = [h["loss"] for h in loop.history]
-    print(f"[train] dlrm {cfg.name}: steps={len(loop.history)} "
-          f"first_loss={losses[0]:.4f} last_loss={losses[-1]:.4f}")
-    return 0
-
-
-def train_lm(args) -> int:
-    from repro.configs.registry import get_arch
-    from repro.checkpoint import CheckpointManager
-    from repro.data import make_lm_batch
-    from repro.launch.mesh import make_host_mesh
-    from repro.models import transformer as T
-    from repro.models import lm
-    from repro.models.common import Sharder
-    from repro.optim import adamw, cosine_schedule
-    from repro.runtime import TrainLoop
-
-    cfg = get_arch(args.arch)
-    if args.smoke:
-        cfg = cfg.reduced()
-    mesh = make_host_mesh(model=args.model_axis)
-    sharder = Sharder(mesh) if int(mesh.devices.size) > 1 else Sharder(None)
-
-    opt = adamw(args.lr, lr_schedule=cosine_schedule(10, args.steps))
-    step = jax.jit(lm.make_train_step(cfg, opt, sharder), donate_argnums=(0,))
-
-    params = T.init_model(jax.random.PRNGKey(args.seed), cfg)
-    state = {"params": params, "opt": opt.init(params),
-             "step": jnp.zeros((), jnp.int32)}
-    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-
-    loop = TrainLoop(
-        step_fn=step,
-        batch_fn=lambda s: make_lm_batch(cfg, s, args.seed, args.batch, args.seq),
-        ckpt=ckpt, ckpt_every=args.ckpt_every)
-    state, start = loop.resume(state)
-    state = loop.run(state, args.steps, start)
-    losses = [h["loss"] for h in loop.history]
-    print(f"[train] lm {cfg.name}: steps={len(loop.history)} "
-          f"first_loss={losses[0]:.4f} last_loss={losses[-1]:.4f}")
-    return 0
+from repro.configs.registry import get_arch, get_dlrm
+from repro.engine import Engine
 
 
 def main(argv: Optional[list] = None) -> int:
@@ -140,9 +46,29 @@ def main(argv: Optional[list] = None) -> int:
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=50)
     args = p.parse_args(argv)
+
     if args.workload == "dlrm":
-        return train_dlrm(args)
-    return train_lm(args)
+        cfg = get_dlrm(args.config)
+    else:
+        cfg = get_arch(args.arch)
+        if args.plan != "none":
+            print("[train] --plan is DLRM-only; ignoring it for the lm "
+                  "workload")
+            args.plan = "none"
+    if args.smoke:
+        cfg = cfg.reduced()
+
+    engine = Engine(cfg, model_axis=args.model_axis, plan=args.plan,
+                    exchange=args.exchange, optimizer=args.optimizer,
+                    lr=args.lr, alpha=args.alpha, seed=args.seed,
+                    fast_mb=args.fast_mb, verbose=True)
+    session = engine.train_session(ckpt_dir=args.ckpt_dir,
+                                   ckpt_every=args.ckpt_every,
+                                   batch=args.batch, seq=args.seq,
+                                   schedule_steps=args.steps)
+    report = session.run(args.steps)
+    print(report.summary())
+    return 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,202 @@
+"""Engine session API: the config->plan->build->run pipeline behind one
+door. CPU-mesh smoke coverage:
+
+  * ServeSession.submit through the micro-batcher == the direct serve step
+    (plan=none AND plan=auto — batching must not change results);
+  * deadline flush fires on a short queue (injected clock, no sleeping);
+  * open-loop driver produces a full latency distribution;
+  * TrainSession decreases loss, and checkpoint-resume round-trips to the
+    exact state of an uninterrupted run;
+  * plan="auto" builds the same reconciled placements/groups as composing
+    the pipeline stages by hand;
+  * benchmarks/run.py --only rejects unknown sections.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_dlrm
+from repro.data import make_recsys_batch
+from repro.engine import Engine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cfg():
+    cfg = get_dlrm("dlrm-rm2-small-unsharded").reduced()
+    return dataclasses.replace(cfg, batch_size=8)
+
+
+def _query(cfg, step, alpha=0.0):
+    b = make_recsys_batch(cfg, step, 0, alpha)
+    return {"dense": b["dense"], "indices": b["indices"]}
+
+
+@pytest.mark.parametrize("plan", ["none", "auto"])
+def test_submit_matches_direct_serve(plan):
+    cfg = _cfg()
+    eng = Engine(cfg, plan=plan, alpha=1.05)
+    sess = eng.serve_session(max_batch_queries=4, max_wait_ms=1e6)
+    queries = [_query(cfg, s, alpha=1.05) for s in range(4)]
+    futs = [sess.submit(q, now=0.0) for q in queries]
+    assert all(f.done for f in futs), "4th submit must flush a full batch"
+    for q, fut in zip(queries, futs):
+        direct = sess.serve_direct(q["dense"], q["indices"])
+        np.testing.assert_allclose(fut.probs, direct, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"plan={plan}")
+
+
+def test_partial_batch_flush_matches_direct():
+    """A deadline/forced flush pads the batch; results must still match."""
+    cfg = _cfg()
+    sess = Engine(cfg).serve_session(max_batch_queries=4, max_wait_ms=1e6)
+    q = _query(cfg, 7)
+    fut = sess.submit(q, now=0.0)
+    assert not fut.done and sess.pending == 1
+    sess.flush(now=1.0)
+    assert fut.done
+    np.testing.assert_allclose(fut.probs,
+                               sess.serve_direct(q["dense"], q["indices"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_over_capacity_batch_rejected():
+    cfg = _cfg()
+    sess = Engine(cfg).serve_session(max_batch_queries=2)
+    with pytest.raises(ValueError, match="exceed the micro-batch capacity"):
+        sess.measure_service_time(n_queries=3)
+
+
+def test_deadline_flush_fires_on_short_queue():
+    cfg = _cfg()
+    sess = Engine(cfg).serve_session(max_batch_queries=8, max_wait_ms=50.0)
+    futs = [sess.submit(_query(cfg, s), now=0.0) for s in range(2)]
+    assert not any(f.done for f in futs)
+    assert not sess.poll(now=0.010)          # before the deadline: no flush
+    assert not any(f.done for f in futs)
+    assert sess.poll(now=0.051)              # past 50ms: deadline flush
+    assert all(f.done for f in futs)
+    assert sess.pending == 0
+    # a submit that ARRIVES past the oldest query's deadline also flushes
+    f1 = sess.submit(_query(cfg, 5), now=1.0)
+    f2 = sess.submit(_query(cfg, 6), now=1.2)
+    assert f1.done and f2.done
+
+
+def test_open_loop_reports_full_distribution():
+    cfg = _cfg()
+    sess = Engine(cfg).serve_session(max_batch_queries=4, max_wait_ms=2.0)
+    rep = sess.run_open_loop(20, qps=500.0, sla_ms=1e6)
+    assert rep.n_queries == 20
+    assert rep.achieved_qps > 0
+    assert rep.p50_ms <= rep.p90_ms <= rep.p99_ms
+    assert rep.ok and rep.mode == "open_loop"
+    # batching must actually have occurred at this rate/capacity
+    assert rep.mean_batch_queries > 1.0
+
+
+def test_train_session_loss_decreases(tmp_path):
+    cfg = _cfg()
+    eng = Engine(cfg, lr=0.05)
+    sess = eng.train_session(ckpt_dir=str(tmp_path), ckpt_every=10)
+    rep = sess.run(20)
+    assert rep.steps_run == 20
+    losses = [h["loss"] for h in rep.history]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+
+
+@pytest.mark.parametrize("plan,optimizer", [("none", "sgd"),
+                                            ("auto", "adagrad")])
+def test_train_resume_roundtrip(tmp_path, plan, optimizer):
+    """ckpt at step 4, resume, run 4 more == uninterrupted 8-step run."""
+    cfg = _cfg()
+    kw = dict(plan=plan, optimizer=optimizer, lr=0.05, alpha=1.05)
+    s1 = Engine(cfg, **kw).train_session(ckpt_dir=str(tmp_path), ckpt_every=4)
+    s1.run(4)  # TrainLoop.run waits on the async checkpoint writer
+
+    s2 = Engine(cfg, **kw).train_session(ckpt_dir=str(tmp_path), ckpt_every=4)
+    assert s2.resume_step == 4
+    rep2 = s2.run(4)
+    assert rep2.start_step == 4
+
+    straight = Engine(cfg, **kw).train_session()
+    straight.run(8)
+    resumed_leaves = [np.asarray(x) for x in
+                      jax.tree_util.tree_leaves(s2.params)]
+    straight_leaves = [np.asarray(x) for x in
+                       jax.tree_util.tree_leaves(straight.params)]
+    for a, b in zip(resumed_leaves, straight_leaves):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_trained_params_handoff_to_serve():
+    """TrainSession.params (plan-split under plan=auto) feed serve_session
+    of the same engine; split params without a plan are rejected."""
+    cfg = _cfg()
+    eng = Engine(cfg, plan="auto", alpha=1.05, lr=0.05)
+    train = eng.train_session()
+    train.run(3)
+    sess = eng.serve_session(max_batch_queries=2, params=train.params)
+    q = _query(cfg, 0, alpha=1.05)
+    fut = sess.submit(q, now=0.0)
+    sess.flush(now=0.0)
+    np.testing.assert_allclose(fut.probs,
+                               sess.serve_direct(q["dense"], q["indices"]),
+                               rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError, match="no placed plan"):
+        Engine(cfg).serve_session(params=train.params)
+
+
+def test_auto_plan_matches_hand_built_pipeline():
+    """Engine's planning stage == composing the stages by hand (the move
+    of build_auto_plan out of launch/serve.py changed no decisions)."""
+    from repro.core import perf_model, planner, sharding as dsh
+    from repro.core import tiered_embedding as te
+
+    cfg = _cfg()
+    eng = Engine(cfg, plan="auto", alpha=1.05)
+    plan = eng.build_plan("inference")
+    assert plan is not None and plan.placements
+    rep = eng.plan_report("inference")
+    assert rep is not None and rep.predicted_qps > 0
+
+    n = eng.n_devices
+    counts = te.measure_row_freq(cfg, 1.05, 0, n_batches=4)
+    table_freq = np.asarray(counts.sum(axis=1), dtype=np.float64)
+    tbytes = cfg.rows_per_table * cfg.embed_dim * 2
+    fast_bytes = -(-(cfg.num_tables // 2) // n) * tbytes
+    system = dataclasses.replace(perf_model.recspeed_system(), n_chips=n)
+    manual = planner.plan_with_placement(
+        cfg, system, table_freq, fast_bytes,
+        bulk_capacity_bytes=cfg.num_tables * tbytes, mode="inference")
+    manual = dsh.reconcile_plan_with_mesh(manual, n, table_freq)
+
+    assert plan.placements == manual.placements
+    assert plan.hit_ratio == pytest.approx(manual.hit_ratio)
+    assert (dsh.plan_table_groups(plan, n)
+            == dsh.plan_table_groups(manual, n))
+
+
+def test_launchers_have_no_cross_import():
+    """train.py must not import from serve.py (the seed's cross-import)."""
+    import repro.launch.serve as serve_mod
+    with open(os.path.join(REPO, "src", "repro", "launch", "train.py")) as f:
+        src = f.read()
+    assert "from repro.launch.serve" not in src
+    assert "import serve" not in src
+    assert not hasattr(serve_mod, "build_auto_plan")
+
+
+def test_bench_run_only_rejects_typo():
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "nosuchsection"],
+        capture_output=True, text=True, cwd=REPO, timeout=300,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert proc.returncode == 2, proc.stderr
+    assert "invalid choice" in proc.stderr
+    assert "tiered_embedding" in proc.stderr   # valid names are listed
