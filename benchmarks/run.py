@@ -4,10 +4,11 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_engine_serve, bench_tiered_embedding,
-                        fig6_membw, fig8_inference, fig9_latency,
-                        fig10_sharding, fig11_training, fig12_13_phases,
-                        kernel_bench, roofline, table16_17_upper_bounds)
+from benchmarks import (bench_engine_serve, bench_pipeline,
+                        bench_tiered_embedding, fig6_membw, fig8_inference,
+                        fig9_latency, fig10_sharding, fig11_training,
+                        fig12_13_phases, kernel_bench, roofline,
+                        table16_17_upper_bounds)
 
 SECTIONS = [
     ("fig6", fig6_membw.main),
@@ -20,6 +21,7 @@ SECTIONS = [
     ("kernels", kernel_bench.main),
     ("tiered_embedding", lambda: bench_tiered_embedding.main([])),
     ("engine_serve", lambda: bench_engine_serve.main(["--queries", "80"])),
+    ("pipeline", lambda: bench_pipeline.main(["--tiny"])),
     ("roofline", roofline.main),
 ]
 
@@ -31,13 +33,21 @@ def main(argv=None) -> int:
                    help="run a single section; one of: "
                         + ", ".join(n for n, _ in SECTIONS))
     args = p.parse_args(argv)
+    failed = []
     for name, fn in SECTIONS:
         if args.only and name != args.only:
             continue
         t0 = time.time()
         print(f"{'='*72}\n== {name}\n{'='*72}")
-        fn()
-        print(f"== {name} done in {time.time()-t0:.1f}s\n")
+        rc = fn()
+        # sections signal a failed headline claim with a nonzero return
+        if rc:
+            failed.append(name)
+        print(f"== {name} done in {time.time()-t0:.1f}s"
+              f"{' [FAILED]' if rc else ''}\n")
+    if failed:
+        print(f"sections with failed claims: {', '.join(failed)}")
+        return 1
     return 0
 
 

@@ -1,7 +1,8 @@
-"""Mini LM end-to-end on an assigned architecture: train a reduced
-internlm2/rwkv6 on the synthetic bigram stream until the loss beats the
-uniform-entropy floor, then generate greedily via parallel prefill +
-cached decode — the same code paths the 256-chip dry-run lowers.
+"""Mini LM end-to-end on an assigned architecture, driven by the Engine
+API: train a reduced internlm2/rwkv6 on the synthetic bigram stream until
+the loss beats the uniform-entropy floor, then generate greedily via
+parallel prefill + cached decode — the same code paths the 256-chip
+dry-run lowers.
 
 Run: PYTHONPATH=src python examples/lm_mini.py [--arch rwkv6-3b]
 """
@@ -14,8 +15,8 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_arch
 from repro.data import make_lm_batch
-from repro.models import lm, transformer as T
-from repro.optim import adamw, cosine_schedule
+from repro.engine import Engine
+from repro.models import lm
 
 
 def main():
@@ -26,31 +27,32 @@ def main():
 
     cfg = get_arch(args.arch).reduced()
     print(f"== {cfg.name}: {cfg.n_layers}L d={cfg.d_model} vocab={cfg.vocab_size}")
-    params = T.init_model(jax.random.PRNGKey(0), cfg)
-    opt = adamw(3e-3, lr_schedule=cosine_schedule(10, args.steps))
-    step = jax.jit(lm.make_train_step(cfg, opt))
-    state = {"params": params, "opt": opt.init(params),
-             "step": jnp.zeros((), jnp.int32)}
+
+    # Engine assembles the training pipeline (step + opt + TrainLoop);
+    # LM configs take plan="none" (placement planning is DLRM-only).
+    engine = Engine(cfg, lr=3e-3)
+    session = engine.train_session(batch=8, seq=65, chain_prob=0.9,
+                                   schedule_steps=args.steps)
 
     floor = math.log(cfg.vocab_size)
     t0 = time.time()
-    for s in range(args.steps):
-        batch = make_lm_batch(cfg, s, batch=8, seq=65, chain_prob=0.9)
-        state, metrics = step(state, batch)
+    report = session.run(args.steps)
+    for s, h in enumerate(report.history):
         if s % 10 == 0 or s == args.steps - 1:
-            print(f"  step {s:3d}  ce={float(metrics['loss']):.3f} "
+            print(f"  step {s:3d}  ce={h['loss']:.3f} "
                   f"(uniform floor {floor:.3f})")
-    print(f"== trained {args.steps} steps in {time.time()-t0:.1f}s; "
-          f"beat floor: {float(metrics['loss']) < floor}")
+    print(f"== trained {report.steps_run} steps in {time.time()-t0:.1f}s; "
+          f"beat floor: {report.last_loss < floor}")
 
-    # generation: parallel prefill + cached decode
+    # generation: parallel prefill + cached decode on the session's params
+    params = session.params
     prompt = make_lm_batch(cfg, 12345, batch=1, seq=17)["tokens"][:, :8]
     prefill = jax.jit(lm.make_prefill_step(cfg, max_len=32))
     decode = jax.jit(lm.make_decode_step(cfg))
-    caches, tok = prefill(state["params"], {"tokens": prompt})
+    caches, tok = prefill(params, {"tokens": prompt})
     out = [int(tok[0])]
     for i in range(8):
-        caches, tok = decode(state["params"], caches, tok, jnp.asarray(8 + i))
+        caches, tok = decode(params, caches, tok, jnp.asarray(8 + i))
         out.append(int(tok[0]))
     print(f"== prompt {prompt[0].tolist()} -> generated {out}")
 

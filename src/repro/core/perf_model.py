@@ -299,6 +299,160 @@ def breakdown(cfg: DLRMConfig, sys: SystemConfig, mode: str,
 
 
 # ---------------------------------------------------------------------------
+# Executed-schedule model: micro-batch pipelining (repro.parallel.build_step)
+# ---------------------------------------------------------------------------
+def _collective_s(op: CollectiveOp, payload: float, n: int,
+                  link: Interconnect) -> float:
+    return collective_time(op, payload, n, link).total_s
+
+
+def pipelined_breakdown(
+    cfg: DLRMConfig,
+    sys: SystemConfig,
+    mode: str = "inference",
+    pipeline_depth: int = 1,
+    row_wise_exchange: str = "unpooled",
+    hit_ratio: float = 0.0,
+    compress_grads: bool = False,
+) -> StepBreakdown:
+    """Step time of the EXECUTED schedule (`repro.parallel.build_step`),
+    not the paper's maximal-overlap upper bound (`breakdown`).
+
+    depth=1 models the serial schedule the pre-refactor step factories ran:
+    index a2a -> lookup -> embedding exchange -> dense compute, strictly in
+    order. depth=k splits the batch into k micro-batches and runs the
+    two-stage software pipeline build_step emits — stage E (index a2a +
+    lookup + embedding exchange) of micro-batch i+1 overlapping stage C
+    (dense compute) of micro-batch i; training adds the per-micro-batch
+    grad routing as a third overlapped stage, then the dense all-reduce
+    (int8-compressed when `compress_grads`) and row writes serially.
+
+    Per-micro-batch collective payloads shrink k-fold but the LATENCY term
+    is paid k times — the optimal depth trades overlap winnings against
+    latency replay (see `optimal_pipeline_depth`).
+
+    Field semantics differ from `breakdown` to keep the derived views
+    (`phase_fractions`, `allreduce_frac`) consistent: `t_fwd` is the whole
+    overlapped pipeline region — for training that INCLUDES backward
+    compute and per-micro-batch grad routing, so `t_bwd_compute` and
+    `t_grad_exchange` are reported as 0 on the breakdown (their
+    per-micro-batch values live in notes) and the training phases are
+    {pipeline region, dense all-reduce, row writes}.
+
+    notes: pipeline_depth, per-micro-batch stage times, and
+    `pipeline_overlap` — the seconds hidden vs. the depth=1 serial schedule
+    at the same depth-independent work.
+    """
+    k = max(1, int(pipeline_depth))
+    p = _payloads(cfg, sys)
+    n = sys.n_chips
+    e_bytes = cfg.embed_dim * sys.elem_bytes
+    bd = StepBreakdown(sys.name, cfg.name, mode)
+
+    # per-micro-batch stage pieces (payload / k; latency NOT divided)
+    t_idx = _collective_s(CollectiveOp.ALL_TO_ALL, p["indices"] / k, n, sys.a2a)
+    t_lookup = _tiered_access_time(p["lookup_bytes"] / k, e_bytes, sys,
+                                   hit_ratio)
+    if cfg.sharding == "table_wise":
+        t_exch = _collective_s(CollectiveOp.ALL_TO_ALL, p["pooled"] / k, n,
+                               sys.a2a)
+    elif row_wise_exchange == "unpooled":
+        t_exch = _collective_s(CollectiveOp.ALL_TO_ALL, p["unpooled"] / k, n,
+                               sys.a2a)
+    else:
+        t_exch = _collective_s(CollectiveOp.REDUCE_SCATTER,
+                               p["partial_pool"] / k, n, sys.a2a)
+    t_fwd_flops = (cfg.flops_per_sample() * cfg.batch_size / n
+                   / sys.compute_flops) / k
+
+    stage_e = t_idx + t_lookup + t_exch            # exchange stage per mb
+    if mode == "inference":
+        stage_c = t_fwd_flops                      # dense fwd per mb
+        t_pipe = stage_e + stage_c + (k - 1) * max(stage_e, stage_c)
+        serial = k * (stage_e + stage_c)
+        bd.t_idx_a2a, bd.t_lookup, bd.t_emb_exchange = (
+            k * t_idx, k * t_lookup, k * t_exch)
+        bd.t_dense_fwd = k * t_fwd_flops
+        bd.t_fwd = t_pipe
+        bd.t_step = t_pipe
+    elif mode == "training":
+        stage_c = 3.0 * t_fwd_flops                # dense fwd+bwd per mb
+        # grad routing per micro-batch (third pipeline stage)
+        if cfg.sharding == "table_wise":
+            t_gexch = _collective_s(CollectiveOp.ALL_TO_ALL, p["pooled"] / k,
+                                    n, sys.a2a)
+        else:
+            t_gexch = _collective_s(CollectiveOp.ALL_GATHER,
+                                    p["pooled_all"] / k, n, sys.a2a)
+        t_pipe = (stage_e + stage_c + t_gexch
+                  + (k - 1) * max(stage_e, stage_c, t_gexch))
+        serial = k * (stage_e + stage_c + t_gexch)
+        grad_payload = p["dense_grad"]
+        if compress_grads:
+            # int8 payload + fp32 absmax scale per 256-elem block (4x wire
+            # reduction on the fp32 gradient all-reduce)
+            grad_payload = grad_payload * (1.0 + 4.0 / 256.0) / 4.0
+        t_ar = _collective_s(CollectiveOp.ALL_REDUCE, grad_payload, n,
+                             sys.allreduce)
+        t_write = _tiered_access_time(p["lookup_bytes"], e_bytes, sys,
+                                      hit_ratio, write=True)
+        bd.t_idx_a2a, bd.t_lookup, bd.t_emb_exchange = (
+            k * t_idx, k * t_lookup, k * t_exch)
+        bd.t_dense_fwd = k * t_fwd_flops
+        # bwd compute + grad routing are INSIDE the pipelined t_fwd region;
+        # zero here so phase_fractions/allreduce_frac don't double-count
+        # (per-micro-batch values are in notes).
+        bd.t_bwd_compute = 0.0
+        bd.t_grad_exchange = 0.0
+        bd.t_dense_allreduce = t_ar
+        bd.t_row_write = t_write
+        bd.t_fwd = t_pipe
+        bd.t_step = t_pipe + t_ar + t_write
+        bd.notes["t_grad_exchange_mb"] = t_gexch
+        bd.notes["t_bwd_compute_mb"] = 2.0 * t_fwd_flops
+    else:
+        raise ValueError(mode)
+
+    bd.notes.update({
+        "pipeline_depth": float(k),
+        "t_stage_exchange_mb": stage_e,
+        "t_stage_compute_mb": stage_c,
+        "pipeline_overlap": serial - t_pipe,
+    })
+    return bd
+
+
+PIPELINE_DEPTHS: Tuple[int, ...] = (1, 2, 4, 8)
+
+
+def optimal_pipeline_depth(
+    cfg: DLRMConfig,
+    sys: SystemConfig,
+    mode: str = "inference",
+    depths: Iterable[int] = PIPELINE_DEPTHS,
+    row_wise_exchange: str = "unpooled",
+    hit_ratio: float = 0.0,
+    compress_grads: bool = False,
+) -> Tuple[int, Dict[int, float]]:
+    """Sweep `pipelined_breakdown` over micro-batch depths; returns
+    (best_depth, {depth: t_step_s}). The planner threads the winner into
+    `PlanReport.pipeline_depth` so the engine executes it."""
+    sweep: Dict[int, float] = {}
+    for k in depths:
+        if cfg.batch_size % (k * sys.n_chips):
+            continue   # per-device batch must split into k micro-batches
+        sweep[k] = pipelined_breakdown(
+            cfg, sys, mode, k, row_wise_exchange, hit_ratio,
+            compress_grads).t_step
+    if not sweep:
+        sweep[1] = pipelined_breakdown(
+            cfg, sys, mode, 1, row_wise_exchange, hit_ratio,
+            compress_grads).t_step
+    best = min(sweep, key=sweep.get)
+    return best, sweep
+
+
+# ---------------------------------------------------------------------------
 # Sweeps (paper Figs. 8-13)
 # ---------------------------------------------------------------------------
 LATENCY_GRID_US: Tuple[float, ...] = (0.5, 1.0, 2.0, 4.0, 6.0, 8.0, 10.0)

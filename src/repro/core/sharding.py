@@ -1,594 +1,50 @@
-"""Distributed DLRM — paper Sec. IV-A/B and Algorithms 1 & 2 via shard_map.
+"""Distributed DLRM — compatibility shim over `repro.parallel`.
 
-Sharding strategies (paper Sec. IV-A):
+The sharding monolith that used to live here was decomposed into the
+`repro.parallel` stage layer:
 
-  table_wise ("unsharded" in the paper): each processor owns T/n whole
-    tables. Forward: all-to-all of indices (batch-major -> table-major),
-    local lookup + pool, all-to-all of POOLED rows back (table-major ->
-    batch-major). Small, latency-bound messages.
+  repro.parallel.primitives — the shard_map-interior collectives
+                              (Alg. 1/2: table_wise_*, row_wise_*)
+  repro.parallel.plan       — PlanGroups / reconcile / param split+merge
+  repro.parallel.updates    — sgd_row_update / adagrad_row_update
+  repro.parallel.exchange   — EmbeddingExchange (TableWise / RowWise /
+                              PlannedTiered) strategy interface
+  repro.parallel.build      — build_step: the ONE composition of exchange,
+                              dense compute, grad all-reduce (optionally
+                              int8 error-feedback compressed) and sparse
+                              update stages, with micro-batch pipelining
 
-  row_wise ("full sharding"): every table's rows are range-sharded over all
-    processors. Two exchange modes:
-      * "partial_pool" (default; beyond-paper optimization): each processor
-        sum-pools the rows it owns per (sample, table) — legal because sum
-        pooling is associative — then a single psum_scatter over the batch
-        finishes the pool AND scatters sample-shards. Wire bytes
-        B*T*e*(n-1)/n, an L/n-fold reduction over the paper's unpooled
-        exchange.
-      * "unpooled" (paper-faithful semantics): the unpooled (B,T,L,d) row
-        tensor is reduce-scattered over the batch and pooled at the home
-        processor — the paper's "exchange of unpooled embeddings".
-
-Backward (Alg. 2): gradients w.r.t. pooled outputs are routed back to row
-owners (all-to-all for table_wise; all-gather for row_wise — exactly the
-paper's two cases), expanded to every looked-up row (`expand_sparse_grads`)
-and scatter-added. Dense grads are all-reduced (psum). The dense (T,R,d)
-embedding gradient is NEVER materialized.
-
-All functions are written to run inside `shard_map` with an axis (or tuple
-of axes — e.g. ("pod","data","model") on the production mesh, treated as one
-flattened processor group, the paper's "no parameters are replicated").
+This module keeps every historical import path working and provides the
+two legacy factory names as thin wrappers over `build_step`. New code
+should import from `repro.parallel` directly.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+from typing import Callable, Optional, Tuple, Union
 
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
 from repro.configs.base import DLRMConfig
-from repro.core import dlrm as dlrm_lib
-from repro.core.planner import ShardingPlan, TablePlacement
+from repro.core.planner import ShardingPlan
+# Re-exports: the historical `repro.core.sharding` namespace.
+from repro.parallel import (                                      # noqa: F401
+    EmbeddingExchange, PlanGroups, PlannedTieredExchange, RowWiseExchange,
+    TableWiseExchange, adagrad_row_update, build_step, init_dlrm_opt_state,
+    init_error_feedback, make_exchange, merge_dlrm_params_by_plan,
+    param_specs, plan_table_groups, planned_forward,
+    reconcile_plan_with_mesh, row_wise_backward_update, row_wise_expand_grads,
+    row_wise_forward, sgd_row_update, shard_dlrm_params,
+    split_dlrm_params_by_plan, table_wise_backward_update,
+    table_wise_expand_grads, table_wise_forward)
+from repro.parallel.primitives import axis_size as _axis_size  # noqa: F401
+from repro.parallel.primitives import (_divisor_chunk,         # noqa: F401
+                                       _masked_partial_pool, _masked_rows)
+
+# Historical private aliases (pre-refactor helper names).
+_table_wise_expand_grads = table_wise_expand_grads
+_row_wise_expand_grads = row_wise_expand_grads
 
 Axis = Union[str, Tuple[str, ...]]
-Params = Dict[str, Any]
-
-
-def _axis_size(mesh: Mesh, axis: Axis) -> int:
-    if isinstance(axis, str):
-        return mesh.shape[axis]
-    n = 1
-    for a in axis:
-        n *= mesh.shape[a]
-    return n
-
-
-# ---------------------------------------------------------------------------
-# Plan execution: the planner's per-table tier decisions -> runnable groups
-# ---------------------------------------------------------------------------
-@dataclass(frozen=True)
-class PlanGroups:
-    """Executable partition of the tables under a ShardingPlan.
-
-    Fast-tier tables run table_wise (whole table near one processor's fast
-    memory, pooled-row exchange only); bulk-tier tables run row_wise across
-    the mesh — the paper's two extremes, MIXED per the planner's placement.
-    """
-
-    fast_ids: Tuple[int, ...]    # table_wise group (fast tier)
-    bulk_ids: Tuple[int, ...]    # row_wise group (bulk tier)
-
-    @property
-    def inv_perm(self) -> Tuple[int, ...]:
-        """Position of each original table in concat(fast, bulk) order."""
-        perm = self.fast_ids + self.bulk_ids
-        inv = [0] * len(perm)
-        for pos, t in enumerate(perm):
-            inv[t] = pos
-        return tuple(inv)
-
-
-def plan_table_groups(plan: ShardingPlan, n: int) -> PlanGroups:
-    """Partition table ids by placement tier, honoring the hardware
-    constraint that the fast group's table all-to-all divides the axis:
-    the trailing `len(fast) % n` fast tables (highest table ids — a
-    deterministic choice so every caller derives identical groups) are
-    demoted to the bulk tier."""
-    if not plan.placements:
-        raise ValueError("plan has no placements; use plan_with_placement")
-    fast = sorted(p.table_id for p in plan.placements if p.tier == "fast")
-    bulk = sorted(p.table_id for p in plan.placements if p.tier != "fast")
-    spill = len(fast) % n
-    if spill:
-        fast, demoted = fast[:-spill], fast[-spill:]
-        bulk = sorted(bulk + demoted)
-    return PlanGroups(tuple(fast), tuple(bulk))
-
-
-def reconcile_plan_with_mesh(plan: ShardingPlan, n: int,
-                             access_freq=None) -> ShardingPlan:
-    """Fold the mesh-divisibility demotion into the plan itself, so its
-    placements AND hit_ratio describe what the step factories will actually
-    execute. With `access_freq` (per-table) the `len(fast) % n` spill is
-    demoted COLDEST-first and the hit ratio recomputed exactly; without it
-    the demotion falls back to `plan_table_groups`' id-order rule and the
-    hit ratio is scaled by fast-table count. Running the step factories on
-    the reconciled plan is a no-spill round trip either way."""
-    from dataclasses import replace
-    fast = sorted(p.table_id for p in plan.placements if p.tier == "fast")
-    spill = len(fast) % n
-    if spill and access_freq is not None:
-        freq = np.asarray(access_freq, np.float64)
-        keep = sorted(sorted(fast, key=lambda t: freq[t])[spill:])
-        fast_set = set(keep)
-    else:
-        fast_set = set(plan_table_groups(plan, n).fast_ids)
-    placements = tuple(
-        p if (p.table_id in fast_set) == (p.tier == "fast")
-        else TablePlacement(p.table_id, "bulk", "row_wise", None)
-        for p in plan.placements)
-    n_fast_planned = len(fast)
-    if access_freq is not None:
-        freq = np.asarray(access_freq, np.float64)
-        total = float(freq.sum())
-        hit = (float(sum(freq[t] for t in fast_set)) / total
-               if total > 0 else 0.0)
-    elif n_fast_planned:
-        hit = plan.hit_ratio * len(fast_set) / n_fast_planned
-    else:
-        hit = plan.hit_ratio
-    return replace(plan, placements=placements, hit_ratio=hit)
-
-
-def split_dlrm_params_by_plan(params: Params, groups: PlanGroups) -> Params:
-    """Stacked-table params {"tables": (T, R, d)} -> plan-grouped params
-    {"tables_fast": (Tf, R, d), "tables_bulk": (Tb, R, d)}."""
-    tables = params["tables"]
-    return {
-        "bot_mlp": params["bot_mlp"], "top_mlp": params["top_mlp"],
-        "tables_fast": tables[np.asarray(groups.fast_ids, np.int32)],
-        "tables_bulk": tables[np.asarray(groups.bulk_ids, np.int32)],
-    }
-
-
-def merge_dlrm_params_by_plan(params: Params, groups: PlanGroups) -> Params:
-    """Inverse of `split_dlrm_params_by_plan` (checkpoint / equivalence)."""
-    both = jnp.concatenate([params["tables_fast"], params["tables_bulk"]], 0)
-    return {
-        "bot_mlp": params["bot_mlp"], "top_mlp": params["top_mlp"],
-        "tables": both[np.asarray(groups.inv_perm, np.int32)],
-    }
-
-
-# ---------------------------------------------------------------------------
-# Embedding-bag collectives (run INSIDE shard_map)
-# ---------------------------------------------------------------------------
-def table_wise_forward(tables_local: jax.Array, indices_local: jax.Array,
-                       axis: Axis) -> Tuple[jax.Array, jax.Array]:
-    """Alg. 1, no_sharding branch.
-
-    tables_local : (T/n, R, d) — this processor's whole tables
-    indices_local: (B/n, T, L) — this processor's batch slice, all tables
-    returns      : pooled (B/n, T, d), owner_indices (B, T/n, L) — the
-                   indices this processor looked up (needed again in bwd).
-    """
-    # indices all-to-all: batch-major -> table-major
-    owner_idx = jax.lax.all_to_all(indices_local, axis, split_axis=1,
-                                   concat_axis=0, tiled=True)   # (B, T/n, L)
-    pooled_owner = dlrm_lib.embedding_bag(tables_local, owner_idx)  # (B, T/n, d)
-    # pooled-embedding all-to-all: table-major -> batch-major
-    pooled = jax.lax.all_to_all(pooled_owner, axis, split_axis=0,
-                                concat_axis=1, tiled=True)      # (B/n, T, d)
-    return pooled, owner_idx
-
-
-def table_wise_backward_update(
-    tables_local: jax.Array, owner_idx: jax.Array, g_pooled_local: jax.Array,
-    axis: Axis, update_fn: Callable[[jax.Array, jax.Array, jax.Array], jax.Array],
-) -> jax.Array:
-    """Alg. 2, no_sharding branch: route pooled grads to owners, expand, update.
-
-    g_pooled_local: (B/n, T, d) grads w.r.t. this processor's pooled outputs.
-    update_fn(tables_local, flat_idx (T/n, N), flat_g (T/n, N, d)) applies the
-    sparse row update (SGD / AdaGrad — optimizer-specific).
-    """
-    # all-to-all: batch-major grads -> table owners (LGE_i in Alg. 2)
-    g_owner = jax.lax.all_to_all(g_pooled_local, axis, split_axis=1,
-                                 concat_axis=0, tiled=True)     # (B, T/n, d)
-    B, Tn, L = owner_idx.shape
-    # expand_sparse_grads: pooled grad is copied to each looked-up row
-    g_rows = jnp.broadcast_to(g_owner[:, :, None, :], (B, Tn, L, g_owner.shape[-1]))
-    flat_idx = owner_idx.transpose(1, 0, 2).reshape(Tn, B * L)
-    flat_g = g_rows.transpose(1, 0, 2, 3).reshape(Tn, B * L, -1)
-    return update_fn(tables_local, flat_idx, flat_g)
-
-
-def _divisor_chunk(n: int, target: int) -> int:
-    """Largest divisor of n that is <= target (>= 1)."""
-    c = max(1, min(n, target))
-    while n % c:
-        c -= 1
-    return c
-
-
-def _masked_rows(tables_local: jax.Array, idx: jax.Array,
-                 r_start: jax.Array) -> jax.Array:
-    """Gather locally-owned rows (zeros elsewhere). idx (B', T, L) global ids
-    -> (B', T, L, d)."""
-    rows_local = tables_local.shape[1]
-    local = idx - r_start
-    mine = (local >= 0) & (local < rows_local)
-    safe = jnp.where(mine, local, 0)
-
-    def gather_table(tab, i, m):           # (R/n,d), (B',L), (B',L)
-        rows = jnp.take(tab, i, axis=0)                      # (B', L, d)
-        return rows * m[..., None].astype(rows.dtype)
-    return jax.vmap(gather_table, in_axes=(0, 1, 1), out_axes=1)(
-        tables_local, safe, mine)                            # (B', T, L, d)
-
-
-def _masked_partial_pool(tables_local: jax.Array, idx: jax.Array,
-                         r_start: jax.Array) -> jax.Array:
-    """Partial sum-pool of locally-owned rows. idx (B', T, L) global ids ->
-    (B', T, d) partial pools (zeros for rows owned elsewhere)."""
-    return _masked_rows(tables_local, idx, r_start).sum(axis=2)
-
-
-def row_wise_forward(tables_local: jax.Array, indices_local: jax.Array,
-                     axis: Axis, mesh_n: int,
-                     exchange: str = "partial_pool",
-                     lookup_chunk: int = 4096,
-                     ) -> Tuple[jax.Array, jax.Array]:
-    """Alg. 1, full_sharding branch.
-
-    tables_local : (T, R/n, d) — a row range of EVERY table
-    indices_local: (B/n, T, L) — GLOBAL row ids
-    returns      : pooled (B/n, T, d), gathered global indices (B, T, L)
-
-    At pod scale the gathered batch B is large, so the masked lookup runs in
-    batch CHUNKS of `lookup_chunk` samples — the (chunk, T, L, d) unpooled
-    row block is the only L-sized tensor ever live (the partial pools
-    accumulate per chunk), keeping VMEM/HBM pressure flat in B.
-    """
-    rows_local = tables_local.shape[1]
-    rank = jax.lax.axis_index(axis)
-    r_start = rank * rows_local
-
-    # Index exchange: every owner needs the full batch's indices.
-    idx_all = jax.lax.all_gather(indices_local, axis, axis=0, tiled=True)  # (B,T,L)
-    B, T, L = idx_all.shape
-    d = tables_local.shape[-1]
-
-    if exchange == "unpooled":
-        # Paper-faithful: ship UNPOOLED rows; pool at the home processor.
-        # Chunked over each rank's output slots so only a (n·C', T, L, d)
-        # row block is ever live — wire bytes are unchanged (B·T·L·e/n per
-        # chip either way, the paper's full-sharding stress case).
-        Bn = B // mesh_n
-        Cp = _divisor_chunk(Bn, max(1, lookup_chunk // mesh_n))
-        if Bn == Cp:
-            rows = _masked_rows(tables_local, idx_all, r_start)   # (B,T,L,d)
-            unpooled = jax.lax.psum_scatter(rows, axis, scatter_dimension=0,
-                                            tiled=True)           # (B/n,T,L,d)
-            return unpooled.sum(axis=2), idx_all
-        idx_r = idx_all.reshape(mesh_n, Bn, T, L)
-
-        def chunk_body(_, k):
-            idx_c = jax.lax.dynamic_slice_in_dim(
-                idx_r, k * Cp, Cp, axis=1).reshape(mesh_n * Cp, T, L)
-            rows = _masked_rows(tables_local, idx_c, r_start)     # (nC',T,L,d)
-            unpooled_c = jax.lax.psum_scatter(
-                rows, axis, scatter_dimension=0, tiled=True)      # (C',T,L,d)
-            return None, unpooled_c.sum(axis=2)                   # pool over L
-
-        _, pooled_chunks = jax.lax.scan(chunk_body, None,
-                                        jnp.arange(Bn // Cp))
-        return pooled_chunks.reshape(Bn, T, d), idx_all
-
-    # partial_pool (beyond-paper): pool owned rows locally, reduce-scatter.
-    if B <= lookup_chunk:
-        partial = _masked_partial_pool(tables_local, idx_all, r_start)
-    else:
-        chunk = _divisor_chunk(B, lookup_chunk)
-        chunks = idx_all.reshape(B // chunk, chunk, T, L)
-        partial = jax.lax.map(
-            lambda ic: _masked_partial_pool(tables_local, ic, r_start),
-            chunks).reshape(B, T, d)
-
-    pooled = jax.lax.psum_scatter(partial, axis, scatter_dimension=0,
-                                  tiled=True)                     # (B/n, T, d)
-    return pooled, idx_all
-
-
-def planned_forward(tables_fast: jax.Array, tables_bulk: jax.Array,
-                    indices_local: jax.Array, axis: Axis, mesh_n: int,
-                    exchange: str, groups: PlanGroups,
-                    ) -> Tuple[jax.Array, Optional[jax.Array],
-                               Optional[jax.Array]]:
-    """Mixed-mode Alg. 1 executing the planner's placements: fast-tier
-    tables table_wise, bulk-tier tables row_wise, pooled outputs re-stitched
-    into the original table order.
-
-    tables_fast : (Tf/n, R, d) this processor's whole fast tables
-    tables_bulk : (Tb, R/n, d) a row range of every bulk table
-    indices_local: (B/n, T, L) all tables, original order
-    returns pooled (B/n, T, d), fast ctx (owner indices), bulk ctx (idx_all).
-    """
-    parts = []
-    ctx_fast = ctx_bulk = None
-    if groups.fast_ids:
-        idx_f = indices_local[:, np.asarray(groups.fast_ids, np.int32), :]
-        pooled_f, ctx_fast = table_wise_forward(tables_fast, idx_f, axis)
-        parts.append(pooled_f)
-    if groups.bulk_ids:
-        idx_b = indices_local[:, np.asarray(groups.bulk_ids, np.int32), :]
-        pooled_b, ctx_bulk = row_wise_forward(tables_bulk, idx_b, axis,
-                                              mesh_n, exchange)
-        parts.append(pooled_b)
-    pooled = jnp.concatenate(parts, axis=1)
-    pooled = pooled[:, np.asarray(groups.inv_perm, np.int32), :]
-    return pooled, ctx_fast, ctx_bulk
-
-
-def _table_wise_expand_grads(ctx: jax.Array, g_pooled: jax.Array, axis: Axis
-                             ) -> Tuple[jax.Array, jax.Array]:
-    """Alg. 2 no_sharding grad routing: pooled grads -> owners, expanded to
-    every looked-up row. Returns (flat_idx (T/n, N), flat_g (T/n, N, d))."""
-    g_owner = jax.lax.all_to_all(g_pooled, axis, 1, 0, tiled=True)
-    B, Tn, L = ctx.shape
-    g_rows = jnp.broadcast_to(g_owner[:, :, None, :],
-                              (B, Tn, L, g_owner.shape[-1]))
-    flat_idx = ctx.transpose(1, 0, 2).reshape(Tn, B * L)
-    flat_g = g_rows.transpose(1, 0, 2, 3).reshape(Tn, B * L, -1)
-    return flat_idx, flat_g
-
-
-def _row_wise_expand_grads(tables_local: jax.Array, ctx: jax.Array,
-                           g_pooled: jax.Array, axis: Axis
-                           ) -> Tuple[jax.Array, jax.Array]:
-    """Alg. 2 full_sharding grad routing: all-gather pooled grads, mask to
-    locally-owned rows. Returns (flat_idx (T, N), flat_g (T, N, d))."""
-    rows_local = tables_local.shape[1]
-    rank = jax.lax.axis_index(axis)
-    r_start = rank * rows_local
-    g_all = jax.lax.all_gather(g_pooled, axis, axis=0, tiled=True)
-    B, T, L = ctx.shape
-    local = ctx - r_start
-    mine = (local >= 0) & (local < rows_local)
-    safe = jnp.where(mine, local, 0)
-    g_rows = jnp.broadcast_to(g_all[:, :, None, :], (B, T, L, g_all.shape[-1]))
-    g_rows = g_rows * mine[..., None].astype(g_rows.dtype)
-    flat_idx = safe.transpose(1, 0, 2).reshape(T, B * L)
-    flat_g = g_rows.transpose(1, 0, 2, 3).reshape(T, B * L, -1)
-    return flat_idx, flat_g
-
-
-def row_wise_backward_update(
-    tables_local: jax.Array, idx_all: jax.Array, g_pooled_local: jax.Array,
-    axis: Axis,
-    update_fn: Callable[[jax.Array, jax.Array, jax.Array], jax.Array],
-    lookup_chunk: int = 4096,
-) -> jax.Array:
-    """Alg. 2, full_sharding branch: all-gather pooled grads, expand to the
-    locally-owned rows, scatter-add. Chunked over the batch like the forward
-    (the expanded (chunk, T, L, d) grad block is the only L-sized tensor)."""
-    rows_local = tables_local.shape[1]
-    rank = jax.lax.axis_index(axis)
-    r_start = rank * rows_local
-
-    g_all = jax.lax.all_gather(g_pooled_local, axis, axis=0, tiled=True)  # (B,T,d)
-    B, T, L = idx_all.shape
-
-    def one_chunk(tables, idx_c, g_c):
-        # Layout discipline (§Perf iter 6): transpose/cast the SMALL pooled
-        # grad (Bc, T, d) BEFORE the L-fold expansion, so the only L-sized
-        # tensor is the bf16 scatter operand itself — not an f32 copy chain.
-        Bc = idx_c.shape[0]
-        d = g_c.shape[-1]
-        local = idx_c - r_start
-        mine = (local >= 0) & (local < rows_local)
-        safe = jnp.where(mine, local, 0)
-        g_t = g_c.transpose(1, 0, 2).astype(tables.dtype)     # (T, Bc, d)
-        g_rows = jnp.broadcast_to(g_t[:, :, None, :], (T, Bc, L, d))
-        mine_t = mine.transpose(1, 0, 2)                       # (T, Bc, L)
-        g_rows = g_rows * mine_t[..., None].astype(g_rows.dtype)
-        flat_idx = safe.transpose(1, 0, 2).reshape(T, Bc * L)
-        flat_g = g_rows.reshape(T, Bc * L, d)
-        return update_fn(tables, flat_idx, flat_g)
-
-    if B <= lookup_chunk:
-        return one_chunk(tables_local, idx_all, g_all)
-    chunk = _divisor_chunk(B, lookup_chunk)
-    nc = B // chunk
-    idx_c = idx_all.reshape(nc, chunk, T, L)
-    g_c = g_all.reshape(nc, chunk, T, -1)
-
-    def body(tables, inp):
-        ic, gc = inp
-        return one_chunk(tables, ic, gc), None
-    tables, _ = jax.lax.scan(body, tables_local, (idx_c, g_c))
-    return tables
-
-
-# ---------------------------------------------------------------------------
-# Sparse optimizer row updates
-# ---------------------------------------------------------------------------
-def sgd_row_update(lr: float):
-    def update(tables, flat_idx, flat_g):
-        def upd(tab, idx, g):
-            return tab.at[idx].add((-lr * g).astype(tab.dtype))
-        return jax.vmap(upd)(tables, flat_idx, flat_g)
-    return update
-
-
-def adagrad_row_update(lr: float, eps: float = 1e-8):
-    """Row-wise AdaGrad (the DLRM repo's sparse optimizer). State: per-row
-    accumulator (T, R). Returns fn(tables, acc, idx, g) -> (tables, acc)."""
-    def update(tables, acc, flat_idx, flat_g):
-        g_sq = jnp.mean(jnp.square(flat_g), axis=-1)           # (T, N) row-wise
-        def upd(tab, a, idx, g, gs):
-            a = a.at[idx].add(gs)
-            scale = jax.lax.rsqrt(a[idx] + eps)                # (N,)
-            return tab.at[idx].add((-lr * scale[:, None] * g).astype(tab.dtype)), a
-        return jax.vmap(upd)(tables, acc, flat_idx, flat_g, g_sq)
-    return update
-
-
-# ---------------------------------------------------------------------------
-# Step factories
-# ---------------------------------------------------------------------------
-def param_specs(cfg: DLRMConfig, axis: Axis,
-                groups: Optional[PlanGroups] = None) -> Dict[str, Any]:
-    """PartitionSpecs for DLRM params under the given strategy.
-
-    With `groups` (plan execution) the tables are split per tier:
-    fast tables table-sharded over the axis, bulk tables row-sharded.
-    An empty group's (0, R, d) array is replicated (nothing to shard)."""
-    ax = axis
-    mlp_spec = [{"w": P(), "b": P()} for _ in cfg.bot_mlp_dims]
-    top_spec = [{"w": P(), "b": P()} for _ in cfg.top_mlp]
-    if groups is not None:
-        return {"bot_mlp": mlp_spec, "top_mlp": top_spec,
-                "tables_fast": P(ax) if groups.fast_ids else P(),
-                "tables_bulk": P(None, ax) if groups.bulk_ids else P()}
-    tables = P(ax) if cfg.sharding == "table_wise" else P(None, ax)
-    return {"bot_mlp": mlp_spec, "top_mlp": top_spec, "tables": tables}
-
-
-def shard_dlrm_params(params: Params, cfg: DLRMConfig, mesh: Mesh,
-                      axis: Axis, plan: Optional[ShardingPlan] = None
-                      ) -> Params:
-    """Device-place DLRM params. With a placed `plan`, stacked params are
-    first split into the plan's fast/bulk table groups."""
-    groups = None
-    if plan is not None and plan.placements:
-        groups = plan_table_groups(plan, _axis_size(mesh, axis))
-        if "tables" in params:
-            params = split_dlrm_params_by_plan(params, groups)
-    specs = param_specs(cfg, axis, groups)
-    return jax.tree_util.tree_map(
-        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
-        params, specs, is_leaf=lambda x: isinstance(x, P))
-
-
-def init_dlrm_opt_state(cfg: DLRMConfig, optimizer: str,
-                        plan: Optional[ShardingPlan] = None,
-                        n: Optional[int] = None) -> Optional[Params]:
-    """Optimizer-state pytree matching the step factories' expectations
-    (None for SGD; per-row fp32 AdaGrad accumulators, split per tier when a
-    placed plan drives the step). `n` (the embedding-axis size the step was
-    built with) is REQUIRED with a placed plan — group sizes depend on it."""
-    if optimizer != "adagrad":
-        return None
-    if plan is None or not plan.placements:
-        return {"table_acc": jnp.zeros(
-            (cfg.num_tables, cfg.rows_per_table), jnp.float32)}
-    if n is None:
-        raise ValueError("init_dlrm_opt_state needs the embedding-axis size "
-                         "`n` when a placed plan is given (the fast/bulk "
-                         "group split depends on it)")
-    groups = plan_table_groups(plan, n)
-    return {"table_acc_fast": jnp.zeros(
-                (len(groups.fast_ids), cfg.rows_per_table), jnp.float32),
-            "table_acc_bulk": jnp.zeros(
-                (len(groups.bulk_ids), cfg.rows_per_table), jnp.float32)}
-
-
-def _make_planned_train_step(
-    cfg: DLRMConfig, mesh: Mesh, axis: Axis, lr: float,
-    row_wise_exchange: str, optimizer: str, dp_axes: Tuple[str, ...],
-    plan: ShardingPlan,
-) -> Callable:
-    """Plan-executing train step: Algorithms 1+2 with the table set SPLIT by
-    the planner's tier decisions — fast tables table_wise, bulk row_wise.
-    Params use keys "tables_fast"/"tables_bulk" (see shard_dlrm_params)."""
-    n = _axis_size(mesh, axis)
-    groups = plan_table_groups(plan, n)
-    if groups.bulk_ids:
-        assert cfg.rows_per_table % n == 0, (cfg.rows_per_table, n)
-
-    ax_tuple = (axis,) if isinstance(axis, str) else tuple(axis)
-    full_axes = tuple(dp_axes) + ax_tuple
-    n_full = _axis_size(mesh, full_axes)
-
-    p_specs = param_specs(cfg, axis, groups)
-    data_spec = P(full_axes)
-    opt_specs = None
-    if optimizer == "adagrad":
-        opt_specs = {"table_acc_fast": P(axis) if groups.fast_ids else P(),
-                     "table_acc_bulk": (P(None, axis) if groups.bulk_ids
-                                        else P())}
-
-    fast_arr = np.asarray(groups.fast_ids, np.int32)
-    bulk_arr = np.asarray(groups.bulk_ids, np.int32)
-
-    def step(params, opt_state, dense, indices, labels):
-        dense_params = {"bot_mlp": params["bot_mlp"], "top_mlp": params["top_mlp"]}
-        t_fast, t_bulk = params["tables_fast"], params["tables_bulk"]
-
-        pooled, ctx_f, ctx_b = planned_forward(
-            t_fast, t_bulk, indices, axis, n, row_wise_exchange, groups)
-
-        def local_loss(dp, pl_):
-            logits = dlrm_lib.dlrm_forward_from_pooled(
-                {**dp, "tables": None}, dense, pl_)
-            return dlrm_lib.bce_loss(logits, labels) / n_full
-
-        loss = local_loss(dense_params, pooled)
-        grads, g_pooled = jax.grad(local_loss, argnums=(0, 1))(
-            dense_params, pooled)
-
-        grads = jax.lax.psum(grads, full_axes)
-        loss = jax.lax.psum(loss, full_axes)
-        new_dense = jax.tree_util.tree_map(lambda p, g: p - lr * g,
-                                           dense_params, grads)
-
-        g_f = g_pooled[:, fast_arr, :] if groups.fast_ids else None
-        g_b = g_pooled[:, bulk_arr, :] if groups.bulk_ids else None
-
-        new_fast, new_bulk = t_fast, t_bulk
-        if optimizer == "sgd":
-            upd = sgd_row_update(lr)
-            if groups.fast_ids:
-                new_fast = table_wise_backward_update(t_fast, ctx_f, g_f,
-                                                      axis, upd)
-            if groups.bulk_ids:
-                new_bulk = row_wise_backward_update(t_bulk, ctx_b, g_b,
-                                                    axis, upd)
-            new_opt = opt_state
-        else:
-            ada = adagrad_row_update(lr)
-            acc_f = opt_state["table_acc_fast"]
-            acc_b = opt_state["table_acc_bulk"]
-            if groups.fast_ids:
-                fi, fg = _table_wise_expand_grads(ctx_f, g_f, axis)
-                new_fast, acc_f = ada(t_fast, acc_f, fi, fg)
-            if groups.bulk_ids:
-                fi, fg = _row_wise_expand_grads(t_bulk, ctx_b, g_b, axis)
-                new_bulk, acc_b = ada(t_bulk, acc_b, fi, fg)
-            new_opt = {"table_acc_fast": acc_f, "table_acc_bulk": acc_b}
-
-        if dp_axes:
-            new_fast = t_fast + jax.lax.psum(new_fast - t_fast, dp_axes)
-            new_bulk = t_bulk + jax.lax.psum(new_bulk - t_bulk, dp_axes)
-            if optimizer != "sgd":
-                a0f = opt_state["table_acc_fast"]
-                a0b = opt_state["table_acc_bulk"]
-                new_opt = {
-                    "table_acc_fast":
-                        a0f + jax.lax.psum(new_opt["table_acc_fast"] - a0f,
-                                           dp_axes),
-                    "table_acc_bulk":
-                        a0b + jax.lax.psum(new_opt["table_acc_bulk"] - a0b,
-                                           dp_axes)}
-
-        new_params = {**new_dense, "tables_fast": new_fast,
-                      "tables_bulk": new_bulk}
-        return new_params, new_opt, loss
-
-    smapped = shard_map(
-        step, mesh=mesh,
-        in_specs=(p_specs, opt_specs, data_spec, data_spec, data_spec),
-        out_specs=(p_specs, opt_specs, P()),
-        check_rep=False,
-    )
-    return jax.jit(smapped, donate_argnums=(0, 1))
 
 
 def make_dlrm_train_step(
@@ -600,108 +56,19 @@ def make_dlrm_train_step(
     optimizer: str = "sgd",
     dp_axes: Tuple[str, ...] = (),
     plan: Optional[ShardingPlan] = None,
+    pipeline_depth: int = 1,
+    compress_grads: bool = False,
 ) -> Callable:
-    """Returns jitted `step(params, opt_state, dense, indices, labels) ->
+    """Legacy name for `repro.parallel.build_step(mode="train")`.
+
+    Returns jitted `step(params, opt_state, dense, indices, labels) ->
     (params, opt_state, loss)` implementing Algorithms 1+2 end to end.
-
-    `axis` is the EMBEDDING (table/row) distribution axis; `dp_axes` are
-    extra pure data-parallel axes across which the tables are REPLICATED
-    (the planner's fast/hot tier at pod scale). The batch shards over
-    `dp_axes + axis`; dense grads all-reduce over all of them; table updates
-    are additionally psum'd over `dp_axes` to keep replicas identical.
-
-    opt_state is `None` for SGD, or {"table_acc": (T, R) fp32} for AdaGrad
-    (sharded like the tables' first two dims).
-
     With a placed `plan`, the planner's per-table tier decisions are
-    EXECUTED instead of cfg.sharding: see `_make_planned_train_step`.
-    """
-    if plan is not None and plan.placements:
-        return _make_planned_train_step(cfg, mesh, axis, lr,
-                                        row_wise_exchange, optimizer,
-                                        dp_axes, plan)
-    n = _axis_size(mesh, axis)
-    if cfg.sharding == "table_wise":
-        assert cfg.num_tables % n == 0, (cfg.num_tables, n)
-    else:
-        assert cfg.rows_per_table % n == 0, (cfg.rows_per_table, n)
-
-    ax_tuple = (axis,) if isinstance(axis, str) else tuple(axis)
-    full_axes = tuple(dp_axes) + ax_tuple
-    n_full = _axis_size(mesh, full_axes)
-
-    p_specs = param_specs(cfg, axis)
-    data_spec = P(full_axes)
-    acc_spec = (P(axis) if cfg.sharding == "table_wise" else P(None, axis))
-    opt_specs = None if optimizer == "sgd" else {"table_acc": acc_spec}
-
-    def step(params, opt_state, dense, indices, labels):
-        dense_params = {"bot_mlp": params["bot_mlp"], "top_mlp": params["top_mlp"]}
-        tables = params["tables"]
-
-        # ---- forward embedding path (Alg. 1) ----
-        if cfg.sharding == "table_wise":
-            pooled, ctx = table_wise_forward(tables, indices, axis)
-        else:
-            pooled, ctx = row_wise_forward(tables, indices, axis, n,
-                                           row_wise_exchange)
-
-        # ---- dense forward/backward ----
-        def local_loss(dp, pl):
-            logits = dlrm_lib.dlrm_forward_from_pooled(
-                {**dp, "tables": None}, dense, pl)
-            # mean over the GLOBAL batch: local sum / global size
-            return dlrm_lib.bce_loss(logits, labels) / n_full
-
-        loss = local_loss(dense_params, pooled)
-        grads, g_pooled = jax.grad(local_loss, argnums=(0, 1))(
-            dense_params, pooled)
-
-        # dense all-reduce (Alg. 2) — the ALLREDUCE phase
-        grads = jax.lax.psum(grads, full_axes)
-        loss = jax.lax.psum(loss, full_axes)
-        new_dense = jax.tree_util.tree_map(lambda p, g: p - lr * g,
-                                           dense_params, grads)
-
-        # ---- sparse update (Alg. 2) — the SPARSE UPDT phase ----
-        if optimizer == "sgd":
-            upd = sgd_row_update(lr)
-            if cfg.sharding == "table_wise":
-                new_tables = table_wise_backward_update(
-                    tables, ctx, g_pooled, axis, upd)
-            else:
-                new_tables = row_wise_backward_update(
-                    tables, ctx, g_pooled, axis, upd)
-            new_opt = opt_state
-        else:
-            ada = adagrad_row_update(lr)
-            if cfg.sharding == "table_wise":
-                fi, fg = _table_wise_expand_grads(ctx, g_pooled, axis)
-            else:
-                fi, fg = _row_wise_expand_grads(tables, ctx, g_pooled, axis)
-            new_tables, new_acc = ada(tables, opt_state["table_acc"], fi, fg)
-            new_opt = {"table_acc": new_acc}
-
-        if dp_axes:
-            # replicated (fast-tier) tables: sum the sparse deltas across the
-            # pure-DP replicas so every replica applies the full-batch update.
-            new_tables = tables + jax.lax.psum(new_tables - tables, dp_axes)
-            if optimizer != "sgd":
-                acc0 = opt_state["table_acc"]
-                new_opt = {"table_acc":
-                           acc0 + jax.lax.psum(new_opt["table_acc"] - acc0,
-                                               dp_axes)}
-
-        new_params = {**new_dense, "tables": new_tables}
-        return new_params, new_opt, loss
-
-    smapped = shard_map(
-        step, mesh=mesh,
-        in_specs=(p_specs, opt_specs, data_spec, data_spec, data_spec),
-        out_specs=(p_specs, opt_specs, P()),
-        check_rep=False,
-    )
-    return jax.jit(smapped, donate_argnums=(0, 1))
+    EXECUTED instead of cfg.sharding (tiered exchange)."""
+    return build_step(cfg, mesh, mode="train", axis=axis, plan=plan,
+                      exchange=row_wise_exchange, optimizer=optimizer,
+                      lr=lr, dp_axes=dp_axes, pipeline_depth=pipeline_depth,
+                      compress_grads=compress_grads)
 
 
 def make_dlrm_serve_step(
@@ -711,33 +78,12 @@ def make_dlrm_serve_step(
     row_wise_exchange: str = "partial_pool",
     dp_axes: Tuple[str, ...] = (),
     plan: Optional[ShardingPlan] = None,
+    pipeline_depth: int = 1,
 ) -> Callable:
-    """Returns jitted `serve(params, dense, indices) -> probs (B,)` —
-    Alg. 1 + sigmoid, the paper's inference query (Sec. III-B).
+    """Legacy name for `repro.parallel.build_step(mode="serve")`.
 
-    With a placed `plan`, each table's lookups are routed to its tier
-    (fast tables table_wise, bulk row_wise) instead of cfg.sharding."""
-    n = _axis_size(mesh, axis)
-    ax_tuple = (axis,) if isinstance(axis, str) else tuple(axis)
-    groups = (plan_table_groups(plan, n)
-              if plan is not None and plan.placements else None)
-    p_specs = param_specs(cfg, axis, groups)
-    data_spec = P(tuple(dp_axes) + ax_tuple)
-
-    def serve(params, dense, indices):
-        if groups is not None:
-            pooled, _, _ = planned_forward(
-                params["tables_fast"], params["tables_bulk"], indices,
-                axis, n, row_wise_exchange, groups)
-        elif cfg.sharding == "table_wise":
-            pooled, _ = table_wise_forward(params["tables"], indices, axis)
-        else:
-            pooled, _ = row_wise_forward(params["tables"], indices, axis, n,
-                                         row_wise_exchange)
-        logits = dlrm_lib.dlrm_forward_from_pooled(params, dense, pooled)
-        return jax.nn.sigmoid(logits)
-
-    smapped = shard_map(serve, mesh=mesh,
-                        in_specs=(p_specs, data_spec, data_spec),
-                        out_specs=data_spec, check_rep=False)
-    return jax.jit(smapped)
+    Returns jitted `serve(params, dense, indices) -> probs (B,)` —
+    Alg. 1 + sigmoid, the paper's inference query (Sec. III-B)."""
+    return build_step(cfg, mesh, mode="serve", axis=axis, plan=plan,
+                      exchange=row_wise_exchange, dp_axes=dp_axes,
+                      pipeline_depth=pipeline_depth)

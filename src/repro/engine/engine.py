@@ -52,6 +52,13 @@ class Engine:
     seed       : parameter init + data stream seed.
     fast_mb    : per-chip fast-tier capacity (MiB) for plan="auto";
                  default fits ~half the tables so smoke runs go MIXED.
+    pipeline_depth : micro-batch pipeline depth for the DLRM steps
+                 (repro.parallel.build_step). None = let the planner choose
+                 when plan="auto" (PlanReport.pipeline_depth), else 1.
+                 Clamped to the largest feasible depth dividing the
+                 per-device batch.
+    compress_grads : int8 error-feedback compression of the dense-grad
+                 all-reduce in DLRM train steps.
     verbose    : print the plan summary when a plan is built.
     """
 
@@ -61,6 +68,8 @@ class Engine:
                  optimizer: str = "sgd", lr: float = 0.01,
                  alpha: float = 0.0, seed: int = 0,
                  fast_mb: Optional[float] = None,
+                 pipeline_depth: Optional[int] = None,
+                 compress_grads: bool = False,
                  profile_batches: int = 4, verbose: bool = False):
         self.cfg = cfg
         self.mesh = mesh if mesh is not None else make_host_mesh(model=model_axis)
@@ -71,6 +80,8 @@ class Engine:
         self.alpha = alpha
         self.seed = seed
         self.fast_mb = fast_mb
+        self.pipeline_depth = pipeline_depth
+        self.compress_grads = compress_grads
         self.profile_batches = profile_batches
         self.verbose = verbose
         self.is_dlrm = isinstance(cfg, DLRMConfig)
@@ -80,6 +91,12 @@ class Engine:
         if not self.is_dlrm and plan not in (None, "none"):
             raise ValueError("plan placement is DLRM-only; LM configs take "
                              "plan='none'")
+        if not self.is_dlrm and (compress_grads
+                                 or pipeline_depth not in (None, 1)):
+            raise ValueError("pipeline_depth/compress_grads are DLRM-only")
+        if pipeline_depth is not None and pipeline_depth < 1:
+            raise ValueError(f"pipeline_depth must be >= 1, got "
+                             f"{pipeline_depth}")
         self._plan_arg: PlanArg = plan
         self._reports: Dict[str, PlanReport] = {}
 
@@ -95,9 +112,8 @@ class Engine:
         if self._plan_arg in (None, "none"):
             return None
         if isinstance(self._plan_arg, ShardingPlan):
-            from repro.core import sharding as dsh
-            return dsh.reconcile_plan_with_mesh(self._plan_arg,
-                                                self.n_devices)
+            from repro.parallel import reconcile_plan_with_mesh
+            return reconcile_plan_with_mesh(self._plan_arg, self.n_devices)
         if mode not in self._reports:
             report = build_auto_plan(
                 self.cfg, self.n_devices, alpha=self.alpha, seed=self.seed,
@@ -117,6 +133,22 @@ class Engine:
         plan = self.build_plan(mode)
         return plan, (plan.exchange if plan is not None else self.exchange)
 
+    def resolve_pipeline_depth(self, mode: str,
+                               local_batch_samples: int) -> int:
+        """The depth a session will execute: the explicit engine setting,
+        or the planner's choice (PlanReport.pipeline_depth) under an auto
+        plan, clamped to the largest feasible depth that splits the
+        per-device batch (`local_batch_samples` = global samples / devices)
+        into whole micro-batches."""
+        depth = self.pipeline_depth
+        if depth is None:
+            report = self._reports.get(mode)
+            depth = report.pipeline_depth if report is not None else 1
+        depth = min(int(depth), max(1, local_batch_samples))
+        while depth > 1 and local_batch_samples % depth:
+            depth -= 1
+        return depth
+
     # -- sessions ----------------------------------------------------------
     def serve_session(self, *, max_batch_queries: int = 8,
                       max_wait_ms: float = 2.0,
@@ -132,28 +164,35 @@ class Engine:
         if not self.is_dlrm:
             raise ValueError("serve_session is DLRM-only")
         plan, exchange = self._plan_and_exchange("inference")
+        qs = int(query_size or self.cfg.batch_size)
+        depth = self.resolve_pipeline_depth(
+            "inference", (max_batch_queries * qs) // self.n_devices)
         return ServeSession(
             self.cfg, self.mesh, self.axis, plan=plan, exchange=exchange,
             max_batch_queries=max_batch_queries, max_wait_ms=max_wait_ms,
             query_size=query_size, params=params, seed=self.seed,
-            alpha=self.alpha, warmup=warmup)
+            alpha=self.alpha, warmup=warmup, pipeline_depth=depth)
 
     def train_session(self, *, ckpt_dir: Optional[str] = None,
                       ckpt_every: int = 50, ckpt_keep: int = 3,
                       batch: int = 8, seq: int = 128,
+                      chain_prob: float = 0.8,
                       schedule_steps: int = 100):
         """Build the full training pipeline (plan-aware step + opt state +
         TrainLoop with checkpoint-resume, retaining `ckpt_keep` snapshots).
         DLRM configs get `TrainSession`; LM configs get `LMTrainSession`
-        (batch/seq/schedule_steps apply)."""
+        (batch/seq/chain_prob/schedule_steps apply)."""
         if self.is_dlrm:
             plan, exchange = self._plan_and_exchange("training")
+            depth = self.resolve_pipeline_depth(
+                "training", self.cfg.batch_size // self.n_devices)
             return TrainSession(
                 self.cfg, self.mesh, self.axis, plan=plan, exchange=exchange,
                 optimizer=self.optimizer, lr=self.lr, seed=self.seed,
                 alpha=self.alpha, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
-                ckpt_keep=ckpt_keep)
+                ckpt_keep=ckpt_keep, pipeline_depth=depth,
+                compress_grads=self.compress_grads)
         return LMTrainSession(
             self.cfg, self.mesh, lr=self.lr, seed=self.seed, batch=batch,
-            seq=seq, schedule_steps=schedule_steps, ckpt_dir=ckpt_dir,
-            ckpt_every=ckpt_every, ckpt_keep=ckpt_keep)
+            seq=seq, chain_prob=chain_prob, schedule_steps=schedule_steps,
+            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, ckpt_keep=ckpt_keep)

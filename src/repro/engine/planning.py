@@ -8,8 +8,8 @@ to be hand-wired in `launch/serve.py` (and cross-imported by
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -24,6 +24,10 @@ class PlanReport:
     plan: ShardingPlan
     mode: str                 # "inference" | "training"
     predicted_qps: float
+    # Planner-chosen micro-batch pipeline depth (executed-schedule model:
+    # perf_model.optimal_pipeline_depth) + the swept step times behind it.
+    pipeline_depth: int = 1
+    depth_sweep: Dict[int, float] = field(default_factory=dict)
 
     def summary(self) -> str:
         plan = self.plan
@@ -33,6 +37,7 @@ class PlanReport:
                 f"fast_tables={n_fast}/{n_tables} "
                 f"hit_ratio={plan.hit_ratio:.3f} "
                 f"predicted_qps={self.predicted_qps:.0f} "
+                f"pipeline_depth={self.pipeline_depth} "
                 f"(hybrid HBM+DDR4 model)")
 
 
@@ -47,8 +52,8 @@ def build_auto_plan(cfg: DLRMConfig, n: int, *, alpha: float = 0.0,
     runs exercise a MIXED placement.
     """
     from repro.core import perf_model, planner
-    from repro.core import sharding as dsh
     from repro.core import tiered_embedding as te
+    from repro import parallel
 
     counts = te.measure_row_freq(cfg, alpha, seed, n_batches=profile_batches)
     table_freq = np.asarray(counts.sum(axis=1), dtype=np.float64)
@@ -63,12 +68,18 @@ def build_auto_plan(cfg: DLRMConfig, n: int, *, alpha: float = 0.0,
         bulk_capacity_bytes=cfg.num_tables * tbytes, mode=mode)
     # fold the mesh-divisibility demotion into the plan so the reported
     # placement + hit ratio match what the step factories execute
-    plan = dsh.reconcile_plan_with_mesh(plan, n, table_freq)
+    plan = parallel.reconcile_plan_with_mesh(plan, n, table_freq)
     hybrid = dataclasses.replace(perf_model.recspeed_hybrid_system(),
                                  n_chips=n)
     # predict for the sharding mode the plan actually chose (breakdown
     # routes on cfg.sharding)
-    pred = perf_model.breakdown(dataclasses.replace(cfg, sharding=plan.mode),
-                                hybrid, mode, plan.exchange,
+    mode_cfg = dataclasses.replace(cfg, sharding=plan.mode)
+    pred = perf_model.breakdown(mode_cfg, hybrid, mode, plan.exchange,
                                 hit_ratio=plan.hit_ratio)
-    return PlanReport(plan=plan, mode=mode, predicted_qps=pred.qps)
+    # executed-schedule pipelining: pick the micro-batch depth that hides
+    # the most exchange time behind compute on this system
+    best_depth, sweep = perf_model.optimal_pipeline_depth(
+        mode_cfg, hybrid, mode, row_wise_exchange=plan.exchange,
+        hit_ratio=plan.hit_ratio)
+    return PlanReport(plan=plan, mode=mode, predicted_qps=pred.qps,
+                      pipeline_depth=best_depth, depth_sweep=sweep)

@@ -1,6 +1,6 @@
 """ServeSession: the engine's request path for batched DLRM inference.
 
-Wraps the plan-executing serve step (`core/sharding.make_dlrm_serve_step`)
+Wraps the plan-executing serve step (`repro.parallel.build_step`)
 behind a dynamic micro-batcher: callers `submit()` fixed-size queries;
 micro-batches flush when full or when the oldest query hits its deadline.
 Two drivers measure the latency distribution D_Q against the paper's SLA
@@ -28,8 +28,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import DLRMConfig
 from repro.core import dlrm as dlrm_lib
-from repro.core import sharding as dsh
 from repro.core.planner import ShardingPlan
+from repro import parallel
 from repro.data import make_recsys_batch
 from repro.engine.batching import (MicroBatcher, QueryFuture, now_s,
                                    poisson_arrivals)
@@ -96,7 +96,7 @@ class ServeSession:
                  max_wait_ms: float = 2.0,
                  query_size: Optional[int] = None,
                  params=None, seed: int = 0, alpha: float = 0.0,
-                 warmup: bool = False):
+                 warmup: bool = False, pipeline_depth: int = 1):
         self.cfg = cfg
         self.mesh = mesh
         self.plan = plan
@@ -104,23 +104,28 @@ class ServeSession:
         self.alpha = alpha
         self.query_size = int(query_size or cfg.batch_size)
         self.max_batch_queries = int(max_batch_queries)
+        self.pipeline_depth = int(pipeline_depth)
         if self.max_batch_queries < 1:
             raise ValueError("max_batch_queries must be >= 1")
         n = int(mesh.devices.size)
-        if (self.max_batch_queries * self.query_size) % n:
+        # every flushed batch splits into whole per-device micro-batches
+        if (self.max_batch_queries * self.query_size) % (
+                n * self.pipeline_depth):
             raise ValueError(
                 f"capacity batch {self.max_batch_queries}x{self.query_size} "
-                f"samples must divide the {n}-device mesh")
+                f"samples must divide the {n}-device mesh x "
+                f"pipeline_depth={self.pipeline_depth}")
         self._n = n
-        self._step = dsh.make_dlrm_serve_step(cfg, mesh, axis, exchange,
-                                              plan=plan)
+        self._step = parallel.build_step(
+            cfg, mesh, mode="serve", axis=axis, exchange=exchange,
+            plan=plan, pipeline_depth=self.pipeline_depth)
         if params is None:
             params = dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg)
         elif "tables" not in params:
             # plan-split params (e.g. TrainSession.params under plan=auto):
             # only accepted when the split matches THIS session's plan
             # groups, otherwise tables would land in the wrong tier.
-            groups = (dsh.plan_table_groups(plan, n)
+            groups = (parallel.plan_table_groups(plan, n)
                       if plan is not None and plan.placements else None)
             if groups is None:
                 raise ValueError(
@@ -134,7 +139,7 @@ class ServeSession:
                     f"plan-split params (fast,bulk)={got} do not match this "
                     f"session's plan groups {want}; re-stack them with "
                     f"merge_dlrm_params_by_plan under their own plan first")
-        self.params = dsh.shard_dlrm_params(params, cfg, mesh, axis,
+        self.params = parallel.shard_dlrm_params(params, cfg, mesh, axis,
                                             plan=plan)
         self.batcher = MicroBatcher(self.max_batch_queries, max_wait_ms / 1e3)
         self._qid = 0
@@ -148,13 +153,13 @@ class ServeSession:
     # -- shapes ------------------------------------------------------------
     def _padded_count(self, n_queries: int) -> int:
         """Smallest query count >= n_queries whose sample total divides the
-        mesh (exists because the capacity batch does)."""
+        mesh x pipeline depth (exists because the capacity batch does)."""
         if n_queries > self.max_batch_queries:
             raise ValueError(
                 f"{n_queries} queries exceed the micro-batch capacity "
                 f"({self.max_batch_queries})")
         k = n_queries
-        while (k * self.query_size) % self._n:
+        while (k * self.query_size) % (self._n * self.pipeline_depth):
             k += 1
         return k
 

@@ -17,8 +17,8 @@ import jax.numpy as jnp
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import DLRMConfig
 from repro.core import dlrm as dlrm_lib
-from repro.core import sharding as dsh
 from repro.core.planner import ShardingPlan
+from repro import parallel
 from repro.data import make_lm_batch, make_recsys_batch
 from repro.runtime import TrainLoop
 
@@ -80,14 +80,21 @@ class TrainSession(_SessionBase):
                  exchange: str = "partial_pool", optimizer: str = "sgd",
                  lr: float = 0.01, seed: int = 0, alpha: float = 0.0,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
-                 ckpt_keep: int = 3):
+                 ckpt_keep: int = 3, pipeline_depth: int = 1,
+                 compress_grads: bool = False):
         n = int(mesh.devices.size)
-        step_fn = dsh.make_dlrm_train_step(
-            cfg, mesh, axis=axis, lr=lr, row_wise_exchange=exchange,
-            optimizer=optimizer, plan=plan)
+        self.pipeline_depth = int(pipeline_depth)
+        step_fn = parallel.build_step(
+            cfg, mesh, mode="train", axis=axis, lr=lr, exchange=exchange,
+            optimizer=optimizer, plan=plan,
+            pipeline_depth=self.pipeline_depth,
+            compress_grads=compress_grads)
         params = dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg)
-        params = dsh.shard_dlrm_params(params, cfg, mesh, axis, plan=plan)
-        opt_state = dsh.init_dlrm_opt_state(cfg, optimizer, plan, n)
+        params = parallel.shard_dlrm_params(params, cfg, mesh, axis,
+                                            plan=plan)
+        opt_state = parallel.init_dlrm_opt_state(
+            cfg, optimizer, plan, n, compress_grads=compress_grads,
+            n_devices=n)
 
         def loop_step(state, batch):
             p, o = state
@@ -118,7 +125,7 @@ class LMTrainSession(_SessionBase):
     workload = "lm"
 
     def __init__(self, cfg, mesh, *, lr: float = 3e-4, seed: int = 0,
-                 batch: int = 8, seq: int = 128,
+                 batch: int = 8, seq: int = 128, chain_prob: float = 0.8,
                  schedule_steps: int = 100,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
                  ckpt_keep: int = 3):
@@ -136,7 +143,8 @@ class LMTrainSession(_SessionBase):
                  "step": jnp.zeros((), jnp.int32)}
         loop = TrainLoop(
             step_fn=step,
-            batch_fn=lambda s: make_lm_batch(cfg, s, seed, batch, seq),
+            batch_fn=lambda s: make_lm_batch(cfg, s, seed, batch, seq,
+                                             chain_prob),
             ckpt=(CheckpointManager(ckpt_dir, keep=ckpt_keep)
                   if ckpt_dir else None),
             ckpt_every=ckpt_every)

@@ -53,6 +53,10 @@ def main(argv: Optional[list] = None) -> int:
                          "--plan auto)")
     ap.add_argument("--fast-mb", type=float, default=None,
                     help="per-chip fast-tier capacity (MiB) for --plan auto")
+    ap.add_argument("--pipeline-depth", type=int, default=0,
+                    help="micro-batch pipeline depth inside the serve step "
+                         "(overlaps embedding exchange with MLP compute); "
+                         "0 = auto (planner-chosen under --plan auto, else 1)")
     args = ap.parse_args(argv)
 
     cfg = get_dlrm(args.config)
@@ -61,7 +65,8 @@ def main(argv: Optional[list] = None) -> int:
 
     engine = Engine(cfg, model_axis=args.model_axis, plan=args.plan,
                     exchange=args.exchange, alpha=args.alpha,
-                    seed=args.seed, fast_mb=args.fast_mb, verbose=True)
+                    seed=args.seed, fast_mb=args.fast_mb,
+                    pipeline_depth=args.pipeline_depth or None, verbose=True)
     session = engine.serve_session(max_batch_queries=args.max_batch_queries,
                                    max_wait_ms=args.max_wait_ms)
     if args.qps > 0:

@@ -43,6 +43,13 @@ def main(argv: Optional[list] = None) -> int:
                    help="auto: profile + place tables, execute placements")
     p.add_argument("--fast-mb", type=float, default=None,
                    help="per-chip fast-tier capacity (MiB) for --plan auto")
+    p.add_argument("--pipeline-depth", type=int, default=0,
+                   help="micro-batch pipeline depth inside the train step "
+                        "(overlaps embedding exchange with MLP compute); "
+                        "0 = auto (planner-chosen under --plan auto, else 1)")
+    p.add_argument("--compress-grads", action="store_true",
+                   help="int8 block-quantized dense-grad all-reduce with "
+                        "error feedback (optim/compression.py)")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=50)
     args = p.parse_args(argv)
@@ -55,13 +62,19 @@ def main(argv: Optional[list] = None) -> int:
             print("[train] --plan is DLRM-only; ignoring it for the lm "
                   "workload")
             args.plan = "none"
+        if args.pipeline_depth > 1 or args.compress_grads:
+            print("[train] --pipeline-depth/--compress-grads are DLRM-only; "
+                  "ignoring them for the lm workload")
+            args.pipeline_depth, args.compress_grads = 0, False
     if args.smoke:
         cfg = cfg.reduced()
 
     engine = Engine(cfg, model_axis=args.model_axis, plan=args.plan,
                     exchange=args.exchange, optimizer=args.optimizer,
                     lr=args.lr, alpha=args.alpha, seed=args.seed,
-                    fast_mb=args.fast_mb, verbose=True)
+                    fast_mb=args.fast_mb,
+                    pipeline_depth=args.pipeline_depth or None,
+                    compress_grads=args.compress_grads, verbose=True)
     session = engine.train_session(ckpt_dir=args.ckpt_dir,
                                    ckpt_every=args.ckpt_every,
                                    batch=args.batch, seq=args.seq,
