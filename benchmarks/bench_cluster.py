@@ -1,0 +1,196 @@
+"""Cluster serving sweep: scenario x router x replica count.
+
+Three fleet-level claims, each driven from a RECORDED JSONL trace (the
+events are generated once, written, re-loaded, and verified identical —
+so every number below reproduces from the trace file alone):
+
+  (a) scale-out:  under stationary load, 2 replicas sustain >= 1.8x the
+      single-replica within-SLA throughput — and the load that replica 2
+      absorbs provably breaks one replica (its solo run saturates and/or
+      busts the SLA). The SLA verdict is judged at P=95 (Eq. 1
+      parameterizes the percentile): service times are REAL executions,
+      and on a shared CPU runner the raw p99 of a few hundred queries is
+      one scheduler hiccup — p95 isolates the structural queueing claim.
+  (b) routing:    under flash_crowd bursts on a fleet with one straggler
+      board (2.2x service — the serving analogue of runtime/straggler.py),
+      power-of-two-choices beats round-robin's p99: state-blind rotation
+      keeps feeding the board whose queue drains slowest, queue-aware
+      sampling routes around it. Judged on the MEDIAN p99 over three
+      recorded burst traces — a single trace's p99 rides one or two
+      straggler-batch events and flips with execution jitter.
+  (c) drift:      on zipf_drift, the hit-ratio monitor's drift-triggered
+      `lfu_refresh` restores the tiered fast-tier hit ratio AND the tail
+      latency the erosion cost (service times retimed by the hybrid
+      memory model at full model scale), vs the same trace with the
+      refresh disabled. The latency side is judged at P=95 like (a) —
+      the hit-ratio recovery itself is deterministic.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_cluster [--queries 240]
+     [--tiny] [--trace-dir DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import tempfile
+from typing import List, Optional
+
+from repro.configs.registry import get_dlrm
+from repro.engine import Engine
+
+
+def _recorded(scenario, n, qps, seed, path):
+    """Generate -> record -> reload -> verify: the run consumes the FILE."""
+    from repro.traffic import load_trace, record_trace
+    events = scenario.events(n, qps=qps, seed=seed)
+    record_trace(path, events, scenario, qps=qps, seed=seed)
+    _, loaded = load_trace(path)
+    assert loaded == events, f"trace replay diverged for {path}"
+    return loaded
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    from repro.cluster import Cluster, HitRatioMonitor
+    from repro.traffic import make_scenario
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="dlrm-rm2-small-unsharded")
+    ap.add_argument("--queries", type=int, default=240)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke size (fewer queries)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--alpha", type=float, default=1.2)
+    ap.add_argument("--trace-dir", default=None,
+                    help="where the JSONL traces land (default: a tmp dir)")
+    args = ap.parse_args(argv)
+
+    n = 120 if args.tiny else args.queries
+    full_cfg = get_dlrm(args.config)
+    cfg = dataclasses.replace(full_cfg.reduced(), batch_size=8)
+    tdir = args.trace_dir or tempfile.mkdtemp(prefix="bench_cluster_")
+    os.makedirs(tdir, exist_ok=True)
+    failures: List[str] = []
+
+    # single-board capacities calibrate every offered load: per-query
+    # floor s1 and the batched saturation rate cap1 = 4 queries / s4
+    probe = Engine(cfg, alpha=args.alpha).serve_session(max_batch_queries=4)
+    s1 = probe.measure_service_time()
+    s4 = probe.measure_service_time(4)
+    cap1 = 4.0 / s4
+    sla_ms = 25.0 * s1 * 1e3     # generous vs service floor, real vs queueing
+    print(f"single board: per-query {s1 * 1e3:.2f} ms, batched capacity "
+          f"{cap1:.0f} qps -> C_SLA {sla_ms:.1f} ms")
+    common = dict(alpha=args.alpha, max_batch_queries=4, max_wait_ms=2.0)
+
+    # ---- (a) stationary scale-out: 1 -> 2 replicas -----------------------
+    print("\n== (a) stationary scale-out (SLA judged at P=95)")
+    print("replicas,offered_qps,achieved_qps,p95_ms,p99_ms,sla")
+    runs = {}
+    for replicas, load in ((1, 0.55), (1, 1.2), (2, 1.2)):
+        qps = load * cap1
+        events = _recorded(make_scenario("stationary", alpha=args.alpha),
+                           n, qps, args.seed,
+                           os.path.join(tdir, f"stationary_{load}.jsonl"))
+        cl = Cluster(cfg, n_replicas=replicas, router="jsq", **common)
+        r = cl.run(events, sla_ms=sla_ms, percentile=95.0,
+                   scenario="stationary")
+        runs[(replicas, load)] = r
+        print(f"{replicas},{r.offered_qps:.0f},{r.achieved_qps:.0f},"
+              f"{r.ppf_ms:.2f},{r.p99_ms:.2f},"
+              f"{'PASS' if r.ok else 'FAIL'}")
+    r1, r1x, r2 = runs[(1, 0.55)], runs[(1, 1.2)], runs[(2, 1.2)]
+    scaling = r2.achieved_qps / r1.achieved_qps
+    one_board_breaks = (not r1x.ok) or (r1x.achieved_qps
+                                        < 0.9 * r1x.offered_qps)
+    if r1.ok and r2.ok and scaling >= 1.8 and one_board_breaks:
+        print(f"WIN scale-out: {scaling:.2f}x within-SLA QPS from 1->2 "
+              f"replicas (1 replica at the 2-replica load: "
+              f"p95 {r1x.ppf_ms:.2f}ms, "
+              f"{'SLA FAIL' if not r1x.ok else 'saturated'})")
+    else:
+        failures.append(f"scale-out: scaling {scaling:.2f}x "
+                        f"(r1.ok={r1.ok} r2.ok={r2.ok} "
+                        f"one_board_breaks={one_board_breaks})")
+
+    # ---- (b) flash_crowd router duel -------------------------------------
+    print("\n== (b) flash_crowd: round_robin vs p2c "
+          "(4 replicas, one 2.2x straggler; median p99 of 3 traces)")
+    scales = (1.0, 1.0, 1.0, 2.2)
+    n_duel = 120                  # the regime tuned for burst overlap
+    base = 0.45 * len(scales) * cap1 / float(sum(scales) / len(scales))
+    horizon = n_duel / base
+    print("trace_seed,router,achieved_qps,p50_ms,p99_ms")
+    p99s = {router: [] for router in ("round_robin", "jsq", "p2c")}
+    for k in range(3):
+        seed = args.seed + k
+        events = _recorded(
+            make_scenario("flash_crowd", alpha=args.alpha, burst_factor=10.0,
+                          on_s=0.2 * horizon, off_s=0.3 * horizon),
+            n_duel, base, seed,
+            os.path.join(tdir, f"flash_crowd_{seed}.jsonl"))
+        for router in p99s:
+            cl = Cluster(cfg, n_replicas=len(scales), router=router,
+                         seed=seed, service_scales=scales, **common)
+            r = cl.run(events, sla_ms=sla_ms, scenario="flash_crowd")
+            p99s[router].append(r.p99_ms)
+            print(f"{seed},{router},{r.achieved_qps:.0f},{r.p50_ms:.2f},"
+                  f"{r.p99_ms:.2f}")
+    med = {router: sorted(v)[len(v) // 2] for router, v in p99s.items()}
+    if med["p2c"] < med["round_robin"]:
+        print(f"WIN routing: p2c median p99 {med['p2c']:.2f}ms < "
+              f"round_robin {med['round_robin']:.2f}ms under bursts "
+              f"({med['round_robin'] / med['p2c']:.2f}x; jsq "
+              f"{med['jsq']:.2f}ms)")
+    else:
+        failures.append(f"routing: p2c median p99 {med['p2c']:.2f}ms !< "
+                        f"round_robin {med['round_robin']:.2f}ms "
+                        f"(per-trace {p99s})")
+
+    # ---- (c) zipf_drift: drift-triggered lfu_refresh ---------------------
+    print("\n== (c) zipf_drift: drift-triggered lfu_refresh vs refresh-off")
+    qps = 0.8 * 2 / s1
+    horizon = n / qps
+    events = _recorded(
+        make_scenario("zipf_drift", alpha=args.alpha,
+                      rotate_every_s=0.6 * horizon, salt_stride=37),
+        n, qps, args.seed, os.path.join(tdir, "zipf_drift.jsonl"))
+    print("refresh,hit_first,hit_last,p95_ms,p99_ms,refreshes")
+    by_refresh = {}
+    for refresh_on in (True, False):
+        monitor = HitRatioMonitor(cfg, alpha=args.alpha, window=16,
+                                  cooldown_queries=24, model_cfg=full_cfg,
+                                  enabled=refresh_on)
+        cl = Cluster(cfg, n_replicas=2, router="jsq", monitor=monitor,
+                     **common)
+        r = cl.run(events, sla_ms=sla_ms, percentile=95.0,
+                   scenario="zipf_drift")
+        by_refresh[refresh_on] = r
+        print(f"{'on' if refresh_on else 'off'},{r.hit_ratio_first:.3f},"
+              f"{r.hit_ratio_last:.3f},{r.ppf_ms:.2f},{r.p99_ms:.2f},"
+              f"{len(r.refreshes)}")
+    on, off = by_refresh[True], by_refresh[False]
+    recovered = (on.refreshes and on.hit_ratio_last > 2.0 * off.hit_ratio_last
+                 and on.ppf_ms < off.ppf_ms)
+    if recovered:
+        print(f"WIN drift: lfu_refresh restored hit ratio "
+              f"{off.hit_ratio_last:.3f} -> {on.hit_ratio_last:.3f} and p95 "
+              f"{off.ppf_ms:.2f} -> {on.ppf_ms:.2f}ms "
+              f"({len(on.refreshes)} refresh)")
+    else:
+        failures.append(
+            f"drift: refresh-on hit {on.hit_ratio_last:.3f} / p95 "
+            f"{on.ppf_ms:.2f}ms vs refresh-off {off.hit_ratio_last:.3f} / "
+            f"{off.ppf_ms:.2f}ms (refreshes={len(on.refreshes)})")
+
+    print(f"\ntraces: {tdir}")
+    if failures:
+        for f in failures:
+            print(f"FAILED CLAIM: {f}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

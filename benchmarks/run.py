@@ -4,7 +4,7 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_engine_serve, bench_pipeline,
+from benchmarks import (bench_cluster, bench_engine_serve, bench_pipeline,
                         bench_tiered_embedding, fig6_membw, fig8_inference,
                         fig9_latency, fig10_sharding, fig11_training,
                         fig12_13_phases, kernel_bench, roofline,
@@ -22,6 +22,7 @@ SECTIONS = [
     ("tiered_embedding", lambda: bench_tiered_embedding.main([])),
     ("engine_serve", lambda: bench_engine_serve.main(["--queries", "80"])),
     ("pipeline", lambda: bench_pipeline.main(["--tiny"])),
+    ("cluster", lambda: bench_cluster.main(["--tiny"])),
     ("roofline", roofline.main),
 ]
 

@@ -1,0 +1,25 @@
+"""repro.cluster — multi-replica scale-in serving.
+
+`Replica` wraps an Engine+ServeSession on its own sub-mesh (one board);
+`Router` policies (round_robin / jsq / p2c) spread a traffic scenario's
+timestamped queries over the fleet; `Cluster` runs the merged
+virtual-clock event loop into a `ClusterReport`; `SLAAutoscaler`
+grows/shrinks the fleet on sustained p99 violation (re-placing params
+via `runtime/elastic.remesh_tree`); `HitRatioMonitor` watches the tiered
+fast tier erode under `zipf_drift` and fires
+`tiered_embedding.lfu_refresh` mid-serve.
+"""
+from repro.cluster.autoscale import ScaleEvent, SLAAutoscaler
+from repro.cluster.cluster import Cluster, ClusterReport
+from repro.cluster.monitor import HitRatioMonitor
+from repro.cluster.replica import Replica, slice_devices, submesh
+from repro.cluster.router import (POLICIES, JoinShortestQueueRouter,
+                                  PowerOfTwoRouter, RoundRobinRouter, Router,
+                                  make_router)
+
+__all__ = [
+    "Cluster", "ClusterReport", "Replica", "submesh", "slice_devices",
+    "Router", "RoundRobinRouter", "JoinShortestQueueRouter",
+    "PowerOfTwoRouter", "make_router", "POLICIES",
+    "SLAAutoscaler", "ScaleEvent", "HitRatioMonitor",
+]

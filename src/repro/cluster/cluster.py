@@ -1,0 +1,310 @@
+"""Cluster: N scale-in boards behind a router, on one merged virtual clock.
+
+This is the fleet-level claim of the paper made runnable: each `Replica`
+is an Engine+ServeSession on its own sub-mesh (a board), a `Router`
+spreads a `TrafficScenario`'s timestamped queries over them, and the
+event loop merges per-replica flush deadlines with the arrival stream —
+the same event-by-event discipline as the single-board
+`ServeSession.run_open_loop`, generalized to N servers:
+
+    next event = min(next arrival, min over replicas of batch deadline)
+      arrival  -> monitor.observe -> router.pick -> enqueue
+                  (flush that replica if its batch filled)
+      deadline -> flush the replica whose oldest query timed out
+
+Flush SERVICE times are real device executions on the replica's
+sub-mesh (optionally retimed by the hit-ratio monitor's hybrid-memory
+model); queueing and batching delays compose on the virtual clock, so a
+run is deterministic given (trace, fleet, policy) up to hardware timing
+noise — and a RECORDED trace reproduces the whole workload.
+
+Two controllers ride the loop: an `SLAAutoscaler` that grows/shrinks
+the fleet on sustained p99 violation/slack (scale-up re-places live
+params onto the new board's sub-mesh via `runtime/elastic.remesh_tree`),
+and a `HitRatioMonitor` that fires `tiered_embedding.lfu_refresh` when a
+`zipf_drift` stream erodes the frequency-elected fast tier.
+
+The run folds into one `ClusterReport`: aggregate p50/p90/p99 + Eq. 1
+verdict, achieved vs offered QPS, per-replica utilization, measured vs
+`replicas x PlanReport.predicted_qps`, scale events, refresh events.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import DLRMConfig
+from repro.core.planner import ShardingPlan
+from repro.engine.batching import QueryFuture
+from repro.engine.planning import PlanReport, build_auto_plan
+from repro.cluster.autoscale import ScaleEvent, SLAAutoscaler
+from repro.cluster.monitor import HitRatioMonitor
+from repro.cluster.replica import Replica, slice_devices, submesh
+from repro.cluster.router import Router, make_router
+from repro.traffic.scenarios import QueryEvent, materialize_query
+
+
+@dataclass(frozen=True)
+class ClusterReport:
+    """One cluster run: latency distribution, scaling, tier health."""
+
+    scenario: str
+    router: str
+    n_queries: int
+    n_replicas_start: int
+    n_replicas_end: int
+    offered_qps: float
+    achieved_qps: float
+    p50_ms: float
+    p90_ms: float
+    p99_ms: float
+    percentile: float
+    ppf_ms: float
+    sla_ms: float
+    ok: bool
+    mean_batch_queries: float
+    makespan_s: float
+    replicas: Tuple[Dict[str, float], ...]
+    predicted_qps: Optional[float]        # n_replicas_start x plan prediction
+    scale_events: Tuple[ScaleEvent, ...] = ()
+    refreshes: Tuple[float, ...] = ()
+    hit_ratio_first: Optional[float] = None
+    hit_ratio_last: Optional[float] = None
+
+    def summary(self) -> str:
+        lines = [
+            f"[cluster] {self.scenario} x {self.router}: "
+            f"{self.n_queries} queries over "
+            f"{self.n_replicas_start}->{self.n_replicas_end} replicas, "
+            f"offered={self.offered_qps:.1f}qps "
+            f"achieved={self.achieved_qps:.1f}qps "
+            f"mean_batch={self.mean_batch_queries:.2f}",
+            f"[cluster] p50={self.p50_ms:.2f}ms p90={self.p90_ms:.2f}ms "
+            f"p99={self.p99_ms:.2f}ms | SLA PPF(D_Q, "
+            f"{self.percentile:.0f}) = {self.ppf_ms:.2f}ms "
+            f"{'<=' if self.ok else '>'} C_SLA={self.sla_ms:.1f}ms -> "
+            f"{'PASS' if self.ok else 'FAIL'}",
+            "[cluster] util: " + " ".join(
+                f"r{int(s['rid'])}={s['util']:.2f}" for s in self.replicas),
+        ]
+        if self.predicted_qps:
+            lines.append(
+                f"[cluster] measured/predicted QPS = "
+                f"{self.achieved_qps:.1f}/{self.predicted_qps:.1f} "
+                f"({self.achieved_qps / self.predicted_qps:.2f}x of "
+                f"{self.n_replicas_start} x PlanReport)")
+        for e in self.scale_events:
+            lines.append(
+                f"[cluster] scale {e.action} at t={e.t_s:.3f}s -> "
+                f"{e.n_replicas} replicas (window p99 "
+                f"{e.window_p99_ms:.2f}ms, remesh {e.remesh})")
+        if self.hit_ratio_first is not None:
+            lines.append(
+                f"[cluster] tier hit ratio {self.hit_ratio_first:.3f} -> "
+                f"{self.hit_ratio_last:.3f}"
+                + (f", {len(self.refreshes)} lfu_refresh at "
+                   + ",".join(f"{t:.2f}s" for t in self.refreshes)
+                   if self.refreshes else ", no refresh"))
+        return "\n".join(lines)
+
+
+class Cluster:
+    """N replicas + router (+ optional autoscaler / hit-ratio monitor).
+
+    The placement plan is resolved ONCE (profile + plan on a replica-sized
+    mesh) and every replica executes the same concrete plan — boards of a
+    fleet are interchangeable. All replicas init params from the shared
+    seed, so they serve bit-identical results regardless of routing.
+    """
+
+    def __init__(self, cfg: DLRMConfig, *, n_replicas: int = 2,
+                 devices: Optional[Sequence] = None,
+                 devices_per_replica: Optional[int] = None,
+                 model_axis: int = 1,
+                 plan: Union[None, str, ShardingPlan] = "none",
+                 exchange: str = "partial_pool",
+                 alpha: float = 0.0, seed: int = 0,
+                 fast_mb: Optional[float] = None,
+                 max_batch_queries: int = 4, max_wait_ms: float = 2.0,
+                 query_size: Optional[int] = None,
+                 router: Union[str, Router] = "round_robin",
+                 autoscaler: Optional[SLAAutoscaler] = None,
+                 monitor: Optional[HitRatioMonitor] = None,
+                 pipeline_depth: Optional[int] = None,
+                 service_scales: Optional[Sequence[float]] = None,
+                 verbose: bool = False):
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        if service_scales is not None and len(service_scales) != n_replicas:
+            raise ValueError(
+                f"service_scales must have one entry per replica "
+                f"({n_replicas}), got {len(service_scales)}")
+        self.cfg = cfg
+        self.query_size = int(query_size or cfg.batch_size)
+        self.verbose = verbose
+        pool = list(devices) if devices is not None else list(jax.devices())
+        dpr = devices_per_replica or max(
+            model_axis, model_axis * (len(pool) // (model_axis * n_replicas)))
+        self._pool = pool
+        self._dpr = dpr
+        self._model_axis = model_axis
+        self.plan_report: Optional[PlanReport] = None
+        if isinstance(plan, str) and plan == "auto":
+            self.plan_report = build_auto_plan(
+                cfg, dpr, alpha=alpha, seed=seed, fast_mb=fast_mb,
+                mode="inference")
+            if verbose:
+                print(self.plan_report.summary())
+            plan = self.plan_report.plan
+        elif isinstance(plan, str) and plan == "none":
+            plan = None
+        self._replica_kw = dict(
+            model_axis=model_axis, plan=plan, exchange=exchange, alpha=alpha,
+            seed=seed, max_batch_queries=max_batch_queries,
+            max_wait_ms=max_wait_ms, query_size=self.query_size,
+            pipeline_depth=pipeline_depth)
+        self.replicas: List[Replica] = [
+            Replica(rid, cfg, slice_devices(pool, rid, dpr),
+                    service_scale=(service_scales[rid]
+                                   if service_scales is not None else 1.0),
+                    **self._replica_kw)
+            for rid in range(n_replicas)]
+        self._next_rid = n_replicas
+        self.router: Router = (router if isinstance(router, Router)
+                               else make_router(router, seed))
+        self.autoscaler = autoscaler
+        self.monitor = monitor
+        self.completed: Dict[int, QueryFuture] = {}
+        self.scale_events: List[ScaleEvent] = []
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    # -- fleet changes -------------------------------------------------------
+    def _scale_up(self, now: float, window_p99: float) -> None:
+        rid = self._next_rid
+        self._next_rid += 1
+        devs = slice_devices(self._pool, rid, self._dpr)
+        new_mesh = submesh(devs, self._model_axis)
+        # re-place a live replica's params onto the new board's sub-mesh
+        params, remesh_report = self.replicas[0].clone_params_onto(new_mesh)
+        rep = Replica(rid, self.cfg, devs, params=params, **self._replica_kw)
+        rep.free = rep.spawned_at = now
+        self.replicas.append(rep)
+        self.scale_events.append(ScaleEvent(
+            t_s=now, action="up", n_replicas=len(self.replicas),
+            window_p99_ms=window_p99, remesh=remesh_report))
+        if self.verbose:
+            print(f"[cluster] t={now:.3f}s scale UP -> "
+                  f"{len(self.replicas)} replicas (p99 {window_p99:.2f}ms)")
+
+    def _scale_down(self, now: float, window_p99: float) -> None:
+        # retire the emptiest board; drain its queue before it goes
+        victim = min(self.replicas, key=lambda r: (r.backlog(now), -r.rid))
+        self._flush(victim, now)
+        victim.retired_at = max(now, victim.free)   # serves out its queue
+        self.replicas.remove(victim)
+        self.router.replica_removed(self.replicas)
+        self._retired.append(victim)
+        self.scale_events.append(ScaleEvent(
+            t_s=now, action="down", n_replicas=len(self.replicas),
+            window_p99_ms=window_p99))
+        if self.verbose:
+            print(f"[cluster] t={now:.3f}s scale DOWN -> "
+                  f"{len(self.replicas)} replicas (r{victim.rid} retired, "
+                  f"p99 {window_p99:.2f}ms)")
+
+    # -- event loop ----------------------------------------------------------
+    def _flush(self, replica: Replica, trigger: float) -> List[QueryFuture]:
+        scale = 1.0
+        if self.monitor is not None:
+            qids = [f.qid for f in replica.batcher.queue]
+            scale = self.monitor.service_multiplier(
+                self.monitor.batch_hit_ratio(qids))
+        futs = replica.flush(trigger, service_scale=scale)
+        if not futs:
+            return futs
+        self._batch_sizes.append(len(futs))
+        for f in futs:
+            self.completed[f.qid] = f
+            self._lat_ms.append(f.latency_ms)
+        self._last_done = max(self._last_done, futs[0].completed_at)
+        if self.autoscaler is not None:
+            decision = self.autoscaler.observe(
+                [f.latency_ms for f in futs], now=trigger,
+                n_replicas=len(self.replicas))
+            if decision is not None:
+                action, p99 = decision
+                if action == "up":
+                    self._scale_up(trigger, p99)
+                else:
+                    self._scale_down(trigger, p99)
+        return futs
+
+    def run(self, events: Sequence[QueryEvent], *, sla_ms: float = 50.0,
+            percentile: float = 99.0, scenario: str = "trace") -> ClusterReport:
+        """Serve one event stream to completion; see module docstring."""
+        if not events:
+            raise ValueError("cluster run needs at least one event")
+        self._lat_ms: List[float] = []
+        self._batch_sizes: List[int] = []
+        self._last_done = 0.0
+        self._retired: List[Replica] = []
+        self.completed = {}
+        self.scale_events = []
+        n_start = len(self.replicas)
+        i = 0
+        while i < len(events) or any(r.batcher.queue for r in self.replicas):
+            next_arr = events[i].arrival_s if i < len(events) else float("inf")
+            due = min(self.replicas, key=lambda r: r.deadline())
+            # deadline wins ties, matching MicroBatcher.due (now >= deadline)
+            if next_arr < due.deadline():
+                ev = events[i]
+                i += 1
+                query = materialize_query(self.cfg, ev, self.query_size)
+                if self.monitor is not None:
+                    self.monitor.observe(ev.qid, query["indices"],
+                                         ev.arrival_s)
+                    self.monitor.maybe_refresh(ev.arrival_s)
+                fut = QueryFuture(ev.qid, ev.arrival_s, query)
+                replica = self.router.pick(self.replicas, ev.arrival_s)
+                if replica.enqueue(fut):
+                    self._flush(replica, ev.arrival_s)
+            else:
+                self._flush(due, due.deadline())
+
+        lat = np.asarray(self._lat_ms, np.float64)
+        p50, p90, p99 = (float(np.percentile(lat, p)) for p in (50, 90, 99))
+        ppf = float(np.percentile(lat, percentile))
+        makespan = max(self._last_done, 1e-12)
+        offered = len(events) / max(events[-1].arrival_s, 1e-12)
+        predicted = (self.plan_report.predicted_qps * n_start
+                     if self.plan_report is not None else None)
+        hit_first = hit_last = None
+        if self.monitor is not None and self.monitor.history:
+            hs = [h for _, h in self.monitor.history]
+            k = min(len(hs), 16)
+            hit_first = float(np.mean(hs[:k]))
+            hit_last = float(np.mean(hs[-k:]))
+        return ClusterReport(
+            scenario=scenario, router=self.router.name,
+            n_queries=len(events), n_replicas_start=n_start,
+            n_replicas_end=len(self.replicas), offered_qps=offered,
+            achieved_qps=len(events) / makespan,
+            p50_ms=p50, p90_ms=p90, p99_ms=p99, percentile=percentile,
+            ppf_ms=ppf, sla_ms=sla_ms, ok=ppf <= sla_ms,
+            mean_batch_queries=(float(np.mean(self._batch_sizes))
+                                if self._batch_sizes else 0.0),
+            makespan_s=makespan,
+            replicas=tuple(r.stats(makespan)
+                           for r in self.replicas + self._retired),
+            predicted_qps=predicted,
+            scale_events=tuple(self.scale_events),
+            refreshes=(tuple(self.monitor.refreshes)
+                       if self.monitor is not None else ()),
+            hit_ratio_first=hit_first, hit_ratio_last=hit_last)

@@ -1,0 +1,156 @@
+"""Hit-ratio monitor: watch the fast tier erode under drift, refresh it.
+
+The PR 1 tiered runtime elects hot rows ONCE from a profiled frequency
+snapshot. A `zipf_drift` stream rotates which rows are hot, so the
+elected set serves a shrinking share of traffic — the cache keeps paying
+fast-tier capacity for yesterday's hot rows. This monitor closes the
+loop mid-serve:
+
+  * it mirrors the fast tier as a `TieredTables` row map (embed dim 1 —
+    the map is what matters, not the values) elected from the same
+    profile snapshot the plan used;
+  * every arriving query is scored against the map (`hit_mask`) into a
+    sliding window, and its row accesses are folded into live LFU counts
+    (`accumulate_row_freq`) — the same statistics currency the planner
+    uses;
+  * when the windowed hit ratio falls below `refresh_threshold` x the
+    profiled baseline, it fires `tiered_embedding.lfu_refresh` with the
+    LIVE counts: flush + re-elect the hot set, restoring the ratio.
+
+Service-time retiming: CPU test boards have no DDR4 bulk tier, so a
+measured service time cannot show the miss cost. Mirroring how
+`bench_pipeline` pairs measured steps with the executed-schedule model,
+`service_multiplier(h)` retimes a measured execution by the hybrid
+memory model's step-time ratio at hit ratio `h` vs the profiled
+baseline (`perf_model.inference_breakdown` on `recspeed_hybrid_system`,
+evaluated on the UNREDUCED model config, where lookups dominate — the
+regime the paper's Sec. VII-A hybrid targets).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.core import perf_model
+from repro.core import tiered_embedding as te
+
+
+class HitRatioMonitor:
+    """Windowed fast-tier hit-ratio tracker + drift-triggered LFU refresh.
+
+    Two-phase trigger: when the windowed ratio first crosses below
+    `refresh_threshold * baseline` the monitor RESETS its live counts —
+    the drifted regime's statistics start clean, not diluted by the
+    pre-drift era — and after `cooldown_queries` more arrivals it fires
+    `lfu_refresh` with those pure post-drift counts. (Electing from
+    mixed-era counts re-installs yesterday's hot rows; tuning note for
+    scenarios: a drift epoch should outlast window + cooldown queries
+    for full recovery between rotations.)
+    """
+
+    def __init__(self, cfg: DLRMConfig, *, alpha: float = 1.05,
+                 seed: int = 0, hot_fraction: float = 0.1,
+                 window: int = 24, refresh_threshold: float = 0.7,
+                 cooldown_queries: int = 24, profile_batches: int = 4,
+                 model_cfg: Optional[DLRMConfig] = None,
+                 n_chips: int = 1, enabled: bool = True):
+        self.cfg = cfg
+        self.enabled = enabled
+        self.hot_per_table = max(1, int(hot_fraction * cfg.rows_per_table))
+        self.refresh_threshold = float(refresh_threshold)
+        self.cooldown_queries = int(cooldown_queries)
+        row_freq = te.measure_row_freq(cfg, alpha, seed,
+                                       n_batches=profile_batches)
+        # dim-1 value slab: the monitor needs the row MAP, not embeddings
+        shadow = jnp.zeros((cfg.num_tables, cfg.rows_per_table, 1),
+                           jnp.float32)
+        self.tiered = te.build_tiered_tables(shadow, row_freq,
+                                             self.hot_per_table)
+        self.baseline = te.expected_hit_ratio(row_freq, self.tiered)
+        self._counts = jnp.zeros((cfg.num_tables, cfg.rows_per_table),
+                                 jnp.int32)
+        self._window: Deque[float] = deque(maxlen=int(window))
+        self._seen = 0
+        self._degraded_at: Optional[int] = None
+        self._hit_by_qid: Dict[int, float] = {}
+        self.history: List[Tuple[float, float]] = []   # (t, per-query hit)
+        self.refreshes: List[float] = []               # refresh fire times
+        # hybrid-memory retiming curve, evaluated at full model scale
+        self._model_cfg = model_cfg if model_cfg is not None else cfg
+        self._system = dataclasses.replace(
+            perf_model.recspeed_hybrid_system(), n_chips=max(1, int(n_chips)))
+        self._t_step_cache: Dict[float, float] = {}
+
+    # -- observation ---------------------------------------------------------
+    def observe(self, qid: int, indices, now: float) -> float:
+        """Score one arriving query against the current hot map; fold its
+        accesses into the live LFU counts. Returns the query's hit ratio."""
+        h = float(np.asarray(te.hit_mask(self.tiered, indices)).mean())
+        self._counts = te.accumulate_row_freq(self._counts, indices)
+        self._window.append(h)
+        self._seen += 1
+        self._hit_by_qid[qid] = h
+        self.history.append((now, h))
+        if (self.enabled and self._degraded_at is None
+                and len(self._window) == self._window.maxlen
+                and self.windowed_hit_ratio()
+                < self.refresh_threshold * self.baseline):
+            # drift detected: restart the stats so the coming refresh
+            # elects from the NEW regime's counts only
+            self._degraded_at = self._seen
+            self._counts = jnp.zeros_like(self._counts)
+        return h
+
+    def windowed_hit_ratio(self) -> float:
+        if not self._window:
+            return self.baseline
+        return float(np.mean(self._window))
+
+    def batch_hit_ratio(self, qids) -> float:
+        """Mean hit ratio of a flushed batch (falls back to the window)."""
+        hs = [self._hit_by_qid[q] for q in qids if q in self._hit_by_qid]
+        return float(np.mean(hs)) if hs else self.windowed_hit_ratio()
+
+    # -- refresh policy -------------------------------------------------------
+    def should_refresh(self) -> bool:
+        return (self.enabled
+                and self._degraded_at is not None
+                and self._seen - self._degraded_at >= self.cooldown_queries)
+
+    def refresh(self, now: float) -> None:
+        """Fire `tiered_embedding.lfu_refresh` with the LIVE counts: flush
+        the fast tier, re-elect the hot set from what the drifted stream
+        actually accesses, and restart the stats window."""
+        self.tiered = te.lfu_refresh(self.tiered, self._counts,
+                                     hot_per_table=self.hot_per_table)
+        self._counts = jnp.zeros_like(self._counts)
+        self._window.clear()
+        self._degraded_at = None
+        self.refreshes.append(now)
+
+    def maybe_refresh(self, now: float) -> bool:
+        if self.should_refresh():
+            self.refresh(now)
+            return True
+        return False
+
+    # -- memory-tier service retiming ----------------------------------------
+    def _t_step(self, hit_ratio: float) -> float:
+        key = round(float(hit_ratio), 3)
+        if key not in self._t_step_cache:
+            self._t_step_cache[key] = perf_model.inference_breakdown(
+                self._model_cfg, self._system, "partial_pool",
+                hit_ratio=key).t_step
+        return self._t_step_cache[key]
+
+    def service_multiplier(self, hit_ratio: float) -> float:
+        """Hybrid-memory retiming of a measured service time: modeled step
+        time at `hit_ratio` relative to the profiled baseline ratio (>= ~1
+        when the tier erodes, back to ~1 after a refresh)."""
+        return self._t_step(hit_ratio) / self._t_step(self.baseline)

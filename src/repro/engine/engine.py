@@ -22,13 +22,14 @@ mode), or a concrete `ShardingPlan` (reconciled against the mesh).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Union
+from typing import Callable, Dict, Optional, Tuple, Union
 
 from jax.sharding import Mesh
 
 from repro.configs.base import DLRMConfig
 from repro.core.planner import ShardingPlan
-from repro.engine.planning import PlanReport, build_auto_plan
+from repro.engine.planning import (PlanReport, build_auto_plan,
+                                   resolve_depth_for_batch)
 from repro.engine.serving import ServeSession
 from repro.engine.training import LMTrainSession, TrainSession
 from repro.launch.mesh import make_host_mesh
@@ -52,11 +53,20 @@ class Engine:
     seed       : parameter init + data stream seed.
     fast_mb    : per-chip fast-tier capacity (MiB) for plan="auto";
                  default fits ~half the tables so smoke runs go MIXED.
+    dp_axes    : extra PURE data-parallel mesh axes (DLRM only): the
+                 tables are replicated across them and the batch shards
+                 over dp_axes + axis (`parallel.build_step(dp_axes=...)`).
+                 The embedding distribution (planning, table groups, opt
+                 state) sees only `axis`. dp_axes + axis must cover the
+                 mesh. This is how a replica's sub-mesh goes pure-DP.
     pipeline_depth : micro-batch pipeline depth for the DLRM steps
-                 (repro.parallel.build_step). None = let the planner choose
-                 when plan="auto" (PlanReport.pipeline_depth), else 1.
-                 Clamped to the largest feasible depth dividing the
-                 per-device batch.
+                 (repro.parallel.build_step). An int pins every shape
+                 (clamped to the largest feasible depth dividing the
+                 per-device batch). None = planner-resolved: serving
+                 resolves the depth PER COMPILED BATCH SHAPE (the
+                 executed-schedule sweep at the actual flushed sample
+                 count); training uses PlanReport.pipeline_depth under
+                 plan="auto", else 1.
     compress_grads : int8 error-feedback compression of the dense-grad
                  all-reduce in DLRM train steps.
     verbose    : print the plan summary when a plan is built.
@@ -64,6 +74,7 @@ class Engine:
 
     def __init__(self, cfg, *, mesh: Optional[Mesh] = None,
                  model_axis: int = 1, axis=("data", "model"),
+                 dp_axes: Tuple[str, ...] = (),
                  plan: PlanArg = "none", exchange: str = "partial_pool",
                  optimizer: str = "sgd", lr: float = 0.01,
                  alpha: float = 0.0, seed: int = 0,
@@ -74,6 +85,7 @@ class Engine:
         self.cfg = cfg
         self.mesh = mesh if mesh is not None else make_host_mesh(model=model_axis)
         self.axis = axis
+        self.dp_axes = tuple(dp_axes)
         self.exchange = exchange
         self.optimizer = optimizer
         self.lr = lr
@@ -97,12 +109,41 @@ class Engine:
         if pipeline_depth is not None and pipeline_depth < 1:
             raise ValueError(f"pipeline_depth must be >= 1, got "
                              f"{pipeline_depth}")
+        if self.dp_axes:
+            if not self.is_dlrm:
+                raise ValueError("dp_axes is DLRM-only (the LM substrate "
+                                 "has its own sharding rules)")
+            ax = (self.axis,) if isinstance(self.axis, str) else tuple(self.axis)
+            missing = [a for a in self.dp_axes + ax
+                       if a not in self.mesh.shape]
+            if missing:
+                raise ValueError(f"axes {missing} not in mesh "
+                                 f"{dict(self.mesh.shape)}")
+            if set(self.dp_axes) & set(ax):
+                raise ValueError(f"dp_axes {self.dp_axes} overlap the "
+                                 f"embedding axis {ax}")
+            covered = 1
+            for a in self.dp_axes + ax:
+                covered *= self.mesh.shape[a]
+            if covered != self.mesh.devices.size:
+                raise ValueError(
+                    f"dp_axes + axis = {self.dp_axes + ax} cover {covered} "
+                    f"devices but the mesh has {self.mesh.devices.size}; "
+                    f"the batch must shard over the whole mesh")
         self._plan_arg: PlanArg = plan
         self._reports: Dict[str, PlanReport] = {}
 
     @property
     def n_devices(self) -> int:
         return int(self.mesh.devices.size)
+
+    @property
+    def embed_devices(self) -> int:
+        """Size of the embedding distribution axis — what the planner,
+        table groups, and sparse opt state are sized against. Equals
+        `n_devices` unless dp_axes replicate the tables."""
+        from repro.parallel import axis_size
+        return int(axis_size(self.mesh, self.axis))
 
     # -- planning stage ----------------------------------------------------
     def build_plan(self, mode: str = "inference") -> Optional[ShardingPlan]:
@@ -113,10 +154,10 @@ class Engine:
             return None
         if isinstance(self._plan_arg, ShardingPlan):
             from repro.parallel import reconcile_plan_with_mesh
-            return reconcile_plan_with_mesh(self._plan_arg, self.n_devices)
+            return reconcile_plan_with_mesh(self._plan_arg, self.embed_devices)
         if mode not in self._reports:
             report = build_auto_plan(
-                self.cfg, self.n_devices, alpha=self.alpha, seed=self.seed,
+                self.cfg, self.embed_devices, alpha=self.alpha, seed=self.seed,
                 fast_mb=self.fast_mb, mode=mode,
                 profile_batches=self.profile_batches)
             self._reports[mode] = report
@@ -149,6 +190,28 @@ class Engine:
             depth -= 1
         return depth
 
+    def make_depth_resolver(self, mode: str) -> Callable[[int], int]:
+        """Per-batch-shape depth resolver for serving: the executed-schedule
+        sweep (`planning.resolve_depth_for_batch`) at the actual flushed
+        sample count, under the engine's plan (its sharding mode, exchange,
+        and measured hit ratio). `ServeSession` caches the result per
+        compiled shape."""
+        plan, exchange = self._plan_and_exchange(mode)
+        hit = plan.hit_ratio if plan is not None else 0.0
+        sharding = (plan.mode if plan is not None and plan.placements
+                    else None)
+        n = self.n_devices
+        pmode = "inference" if mode == "inference" else "training"
+
+        def resolve(batch_samples: int) -> int:
+            best, _ = resolve_depth_for_batch(
+                self.cfg, n, batch_samples, mode=pmode, sharding=sharding,
+                exchange=exchange, hit_ratio=hit,
+                compress_grads=self.compress_grads)
+            return best
+
+        return resolve
+
     # -- sessions ----------------------------------------------------------
     def serve_session(self, *, max_batch_queries: int = 8,
                       max_wait_ms: float = 2.0,
@@ -165,13 +228,20 @@ class Engine:
             raise ValueError("serve_session is DLRM-only")
         plan, exchange = self._plan_and_exchange("inference")
         qs = int(query_size or self.cfg.batch_size)
-        depth = self.resolve_pipeline_depth(
-            "inference", (max_batch_queries * qs) // self.n_devices)
+        if self.pipeline_depth is None:
+            # planner depth PER COMPILED BATCH SHAPE: flushed batches vary
+            # with load, and the winning depth varies with them
+            depth, resolver = None, self.make_depth_resolver("inference")
+        else:
+            depth = self.resolve_pipeline_depth(
+                "inference", (max_batch_queries * qs) // self.n_devices)
+            resolver = None
         return ServeSession(
             self.cfg, self.mesh, self.axis, plan=plan, exchange=exchange,
             max_batch_queries=max_batch_queries, max_wait_ms=max_wait_ms,
             query_size=query_size, params=params, seed=self.seed,
-            alpha=self.alpha, warmup=warmup, pipeline_depth=depth)
+            alpha=self.alpha, warmup=warmup, pipeline_depth=depth,
+            depth_resolver=resolver, dp_axes=self.dp_axes)
 
     def train_session(self, *, ckpt_dir: Optional[str] = None,
                       ckpt_every: int = 50, ckpt_keep: int = 3,
@@ -191,7 +261,7 @@ class Engine:
                 optimizer=self.optimizer, lr=self.lr, seed=self.seed,
                 alpha=self.alpha, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
                 ckpt_keep=ckpt_keep, pipeline_depth=depth,
-                compress_grads=self.compress_grads)
+                compress_grads=self.compress_grads, dp_axes=self.dp_axes)
         return LMTrainSession(
             self.cfg, self.mesh, lr=self.lr, seed=self.seed, batch=batch,
             seq=seq, chain_prob=chain_prob, schedule_steps=schedule_steps,

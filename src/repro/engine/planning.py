@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -83,3 +83,32 @@ def build_auto_plan(cfg: DLRMConfig, n: int, *, alpha: float = 0.0,
         hit_ratio=plan.hit_ratio)
     return PlanReport(plan=plan, mode=mode, predicted_qps=pred.qps,
                       pipeline_depth=best_depth, depth_sweep=sweep)
+
+
+def resolve_depth_for_batch(cfg: DLRMConfig, n: int, batch_samples: int, *,
+                            mode: str = "inference",
+                            sharding: Optional[str] = None,
+                            exchange: str = "partial_pool",
+                            hit_ratio: float = 0.0,
+                            compress_grads: bool = False
+                            ) -> Tuple[int, Dict[int, float]]:
+    """Planner-depth for ONE compiled batch shape.
+
+    The planner picks `PlanReport.pipeline_depth` once from
+    `cfg.batch_size`, but a ServeSession's flushed batches vary with load
+    — a deadline flush can be a fraction of the capacity batch, where the
+    latency-replay cost of deep pipelining dominates. This re-runs the
+    executed-schedule sweep (`perf_model.optimal_pipeline_depth`) at the
+    ACTUAL flushed sample count so each compiled shape executes the depth
+    that wins for it. Returns (best_depth, {depth: t_step_s}).
+    """
+    from repro.core import perf_model
+
+    shape_cfg = dataclasses.replace(
+        cfg, batch_size=int(batch_samples),
+        sharding=sharding if sharding is not None else cfg.sharding)
+    hybrid = dataclasses.replace(perf_model.recspeed_hybrid_system(),
+                                 n_chips=n)
+    return perf_model.optimal_pipeline_depth(
+        shape_cfg, hybrid, mode, row_wise_exchange=exchange,
+        hit_ratio=hit_ratio, compress_grads=compress_grads)

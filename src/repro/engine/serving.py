@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -96,7 +96,10 @@ class ServeSession:
                  max_wait_ms: float = 2.0,
                  query_size: Optional[int] = None,
                  params=None, seed: int = 0, alpha: float = 0.0,
-                 warmup: bool = False, pipeline_depth: int = 1):
+                 warmup: bool = False,
+                 pipeline_depth: Optional[int] = 1,
+                 depth_resolver: Optional[Callable[[int], int]] = None,
+                 dp_axes: Tuple[str, ...] = ()):
         self.cfg = cfg
         self.mesh = mesh
         self.plan = plan
@@ -104,28 +107,41 @@ class ServeSession:
         self.alpha = alpha
         self.query_size = int(query_size or cfg.batch_size)
         self.max_batch_queries = int(max_batch_queries)
-        self.pipeline_depth = int(pipeline_depth)
+        self.dp_axes = tuple(dp_axes)
+        # pipeline_depth: a fixed int pins every compiled shape to that
+        # depth; None resolves the depth PER COMPILED BATCH SHAPE through
+        # `depth_resolver` (planner executed-schedule sweep at the actual
+        # flushed sample count — Engine wires it), falling back to 1.
+        self.pipeline_depth = (None if pipeline_depth is None
+                               else int(pipeline_depth))
+        self._depth_resolver = depth_resolver
+        if self.pipeline_depth is not None and self.pipeline_depth < 1:
+            raise ValueError(f"pipeline_depth must be >= 1, got "
+                             f"{pipeline_depth}")
         if self.max_batch_queries < 1:
             raise ValueError("max_batch_queries must be >= 1")
-        n = int(mesh.devices.size)
+        ax_tuple = (axis,) if isinstance(axis, str) else tuple(axis)
+        n = parallel.axis_size(mesh, self.dp_axes + ax_tuple)
         # every flushed batch splits into whole per-device micro-batches
-        if (self.max_batch_queries * self.query_size) % (
-                n * self.pipeline_depth):
+        fixed = self.pipeline_depth or 1
+        if (self.max_batch_queries * self.query_size) % (n * fixed):
             raise ValueError(
                 f"capacity batch {self.max_batch_queries}x{self.query_size} "
                 f"samples must divide the {n}-device mesh x "
-                f"pipeline_depth={self.pipeline_depth}")
+                f"pipeline_depth={fixed}")
         self._n = n
-        self._step = parallel.build_step(
-            cfg, mesh, mode="serve", axis=axis, exchange=exchange,
-            plan=plan, pipeline_depth=self.pipeline_depth)
+        self._n_embed = parallel.axis_size(mesh, axis)
+        self._axis = axis
+        self._exchange = exchange
+        self._steps: Dict[int, Callable] = {}
+        self._depth_by_samples: Dict[int, int] = {}
         if params is None:
             params = dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg)
         elif "tables" not in params:
             # plan-split params (e.g. TrainSession.params under plan=auto):
             # only accepted when the split matches THIS session's plan
             # groups, otherwise tables would land in the wrong tier.
-            groups = (parallel.plan_table_groups(plan, n)
+            groups = (parallel.plan_table_groups(plan, self._n_embed)
                       if plan is not None and plan.placements else None)
             if groups is None:
                 raise ValueError(
@@ -159,25 +175,56 @@ class ServeSession:
                 f"{n_queries} queries exceed the micro-batch capacity "
                 f"({self.max_batch_queries})")
         k = n_queries
-        while (k * self.query_size) % (self._n * self.pipeline_depth):
+        div = self._n * (self.pipeline_depth or 1)
+        while (k * self.query_size) % div:
             k += 1
         return k
 
+    def depth_for_samples(self, batch_samples: int) -> int:
+        """The pipeline depth the step for this batch shape executes: the
+        fixed session depth, or (pipeline_depth=None) the per-shape
+        planner choice via `depth_resolver`, clamped to the largest
+        feasible depth dividing the per-device batch. Cached per shape —
+        the resolution runs once per compiled shape, off the hot path."""
+        if self.pipeline_depth is not None:
+            return self.pipeline_depth
+        b = int(batch_samples)
+        if b in self._depth_by_samples:
+            return self._depth_by_samples[b]
+        local = max(1, b // self._n)
+        depth = (self._depth_resolver(b) if self._depth_resolver is not None
+                 else 1)
+        depth = max(1, min(int(depth), local))
+        while depth > 1 and local % depth:
+            depth -= 1
+        self._depth_by_samples[b] = depth
+        return depth
+
+    def _get_step(self, depth: int) -> Callable:
+        if depth not in self._steps:
+            self._steps[depth] = parallel.build_step(
+                self.cfg, self.mesh, mode="serve", axis=self._axis,
+                exchange=self._exchange, plan=self.plan,
+                dp_axes=self.dp_axes, pipeline_depth=depth)
+        return self._steps[depth]
+
     def _ensure_compiled(self, n_queries: int) -> None:
         k = self._padded_count(n_queries)
-        if k in self._compiled:
-            return
         b = self.query_size * k
+        if b in self._compiled:
+            return
+        step = self._get_step(self.depth_for_samples(b))
         dense = jnp.zeros((b, self.cfg.num_dense), jnp.float32)
         idx = jnp.zeros((b, self.cfg.num_tables, self.cfg.lookups_per_table),
                         jnp.int32)
-        self._step(self.params, dense, idx).block_until_ready()
-        self._compiled.add(k)
+        step(self.params, dense, idx).block_until_ready()
+        self._compiled.add(b)
 
     # -- execution ---------------------------------------------------------
     def serve_direct(self, dense: jax.Array, indices: jax.Array) -> np.ndarray:
         """Run the compiled serve step on one exact batch (no batching/pad)."""
-        return np.asarray(self._step(self.params, dense, indices))
+        step = self._get_step(self.depth_for_samples(dense.shape[0]))
+        return np.asarray(step(self.params, dense, indices))
 
     def _execute(self, queries: List[Query]) -> Tuple[np.ndarray, float]:
         """Concatenate + pad queries, run the step, split results back.
@@ -193,23 +240,49 @@ class ServeSession:
             parts.append(queries[0])
         dense = jnp.concatenate([p["dense"] for p in parts], axis=0)
         idx = jnp.concatenate([p["indices"] for p in parts], axis=0)
+        step = self._get_step(self.depth_for_samples(k * self.query_size))
         t0 = time.perf_counter()
-        probs = self._step(self.params, dense, idx)
+        probs = step(self.params, dense, idx)
         probs.block_until_ready()
         service = time.perf_counter() - t0
         out = np.asarray(probs).reshape(k, self.query_size)
         return out[:len(queries)], service
 
     # -- request path ------------------------------------------------------
+    def validate_query(self, query: Query) -> None:
+        """Shape/dtype-check a query against the session's config BEFORE it
+        reaches the jitted step, so a malformed query fails with a clear
+        ValueError at submit time instead of an opaque XLA shape error deep
+        inside the compiled pipeline. Metadata-only: no device sync."""
+        for field in ("dense", "indices"):
+            if field not in query:
+                raise ValueError(f"query is missing the {field!r} field")
+        dense, idx = query["dense"], query["indices"]
+        q = self.query_size
+        want_dense = (q, self.cfg.num_dense)
+        if tuple(dense.shape) != want_dense:
+            raise ValueError(
+                f"query 'dense' must have shape {want_dense} "
+                f"(query_size x cfg.num_dense), got {tuple(dense.shape)}")
+        want_idx = (q, self.cfg.num_tables, self.cfg.lookups_per_table)
+        if tuple(idx.shape) != want_idx:
+            raise ValueError(
+                f"query 'indices' must have shape {want_idx} (query_size x "
+                f"cfg.num_tables x cfg.lookups_per_table), got "
+                f"{tuple(idx.shape)}")
+        if not jnp.issubdtype(dense.dtype, jnp.floating):
+            raise ValueError(
+                f"query 'dense' must be floating point, got {dense.dtype}")
+        if not jnp.issubdtype(idx.dtype, jnp.integer):
+            raise ValueError(
+                f"query 'indices' must be an integer dtype (row ids), got "
+                f"{idx.dtype}")
+
     def submit(self, query: Query, now: Optional[float] = None) -> QueryFuture:
         """Enqueue one query; flushes the micro-batch if it became full or
         the oldest query's deadline has already passed. `now` (seconds) is
         injectable for deterministic tests; defaults to the wall clock."""
-        q = self.query_size
-        if query["dense"].shape[0] != q or query["indices"].shape[0] != q:
-            raise ValueError(
-                f"query must have {q} samples, got "
-                f"{query['dense'].shape[0]}/{query['indices'].shape[0]}")
+        self.validate_query(query)
         t = now_s() if now is None else now
         fut = QueryFuture(self._qid, t, {"dense": query["dense"],
                                          "indices": query["indices"]})

@@ -9,7 +9,7 @@ by hand anymore.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -81,20 +81,26 @@ class TrainSession(_SessionBase):
                  lr: float = 0.01, seed: int = 0, alpha: float = 0.0,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
                  ckpt_keep: int = 3, pipeline_depth: int = 1,
-                 compress_grads: bool = False):
-        n = int(mesh.devices.size)
+                 compress_grads: bool = False,
+                 dp_axes: Tuple[str, ...] = ()):
+        dp_axes = tuple(dp_axes)
+        ax_tuple = (axis,) if isinstance(axis, str) else tuple(axis)
+        # table groups / sparse opt state are sized by the EMBEDDING axis;
+        # error-feedback residuals by the full batch-sharding device count
+        n_embed = parallel.axis_size(mesh, axis)
+        n_full = parallel.axis_size(mesh, dp_axes + ax_tuple)
         self.pipeline_depth = int(pipeline_depth)
         step_fn = parallel.build_step(
             cfg, mesh, mode="train", axis=axis, lr=lr, exchange=exchange,
-            optimizer=optimizer, plan=plan,
+            optimizer=optimizer, plan=plan, dp_axes=dp_axes,
             pipeline_depth=self.pipeline_depth,
             compress_grads=compress_grads)
         params = dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg)
         params = parallel.shard_dlrm_params(params, cfg, mesh, axis,
                                             plan=plan)
         opt_state = parallel.init_dlrm_opt_state(
-            cfg, optimizer, plan, n, compress_grads=compress_grads,
-            n_devices=n)
+            cfg, optimizer, plan, n_embed, compress_grads=compress_grads,
+            n_devices=n_full)
 
         def loop_step(state, batch):
             p, o = state

@@ -1,4 +1,5 @@
-"""Serving launcher — a thin argparse adapter over `repro.engine.Engine`.
+"""Serving launcher — a thin argparse adapter over `repro.engine.Engine`
+and, for fleets, `repro.cluster.Cluster`.
 
 The pipeline (profile -> plan -> reconcile -> serve step -> shard params ->
 micro-batcher) lives in `repro.engine`; this module only maps flags onto
@@ -13,6 +14,13 @@ PPF(D_Q, P) <= C_SLA (Eq. 1).
   PYTHONPATH=src python -m repro.launch.serve --smoke --queries 200 \
       --qps 300 --max-batch-queries 8 --max-wait-ms 2
 
+  # fleet: 2 replicas under a flash-crowd burst, p2c routing, autoscaling
+  PYTHONPATH=src python -m repro.launch.serve --smoke --queries 100 \
+      --replicas 2 --scenario flash_crowd --router p2c --autoscale
+
+Any of --replicas>1 / --scenario / --autoscale / --replay-trace routes
+through the cluster path: a `TrafficScenario` event stream (or a recorded
+JSONL trace) served by N replica sub-meshes behind the chosen router.
 With ``--plan auto`` the engine profiles the index stream, runs the
 placement planner, prints the chosen placement + predicted QPS, and
 EXECUTES the placements inside the serve step.
@@ -56,12 +64,39 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--pipeline-depth", type=int, default=0,
                     help="micro-batch pipeline depth inside the serve step "
                          "(overlaps embedding exchange with MLP compute); "
-                         "0 = auto (planner-chosen under --plan auto, else 1)")
+                         "0 = auto (planner-resolved per compiled batch "
+                         "shape under the engine's plan)")
+    # -- fleet / scenario flags (repro.cluster path) -----------------------
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">1 serves a fleet of replica sub-meshes behind "
+                         "--router (repro.cluster)")
+    ap.add_argument("--scenario", default=None,
+                    help="traffic scenario for the fleet path: stationary, "
+                         "diurnal, flash_crowd, zipf_drift (zipf_drift "
+                         "enables the hit-ratio monitor + lfu_refresh)")
+    ap.add_argument("--router", default="round_robin",
+                    help="routing policy: round_robin, jsq, p2c")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="SLA-driven autoscaling: add replicas on sustained "
+                         "p99 violation (params re-placed via remesh_tree), "
+                         "drop them on sustained slack")
+    ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--record-trace", default=None, metavar="PATH",
+                    help="write the generated scenario events as a JSONL "
+                         "trace before serving")
+    ap.add_argument("--replay-trace", default=None, metavar="PATH",
+                    help="serve a recorded JSONL trace instead of "
+                         "generating events (bit-identical replay)")
     args = ap.parse_args(argv)
 
     cfg = get_dlrm(args.config)
+    full_cfg = cfg
     if args.smoke:
         cfg = cfg.reduced()
+
+    if (args.replicas > 1 or args.scenario or args.autoscale
+            or args.record_trace or args.replay_trace):
+        return _cluster_main(args, cfg, full_cfg)
 
     engine = Engine(cfg, model_axis=args.model_axis, plan=args.plan,
                     exchange=args.exchange, alpha=args.alpha,
@@ -77,6 +112,70 @@ def main(argv: Optional[list] = None) -> int:
         report = session.run_serial(
             args.queries, sla_ms=args.sla_ms,
             percentile=args.sla_percentile)
+    print(f"[serve] {cfg.name}:")
+    print(report.summary())
+    return 0 if report.ok else 1
+
+
+def _cluster_main(args, cfg, full_cfg) -> int:
+    """Fleet path: scenario/trace -> router -> N replicas -> ClusterReport."""
+    from repro.cluster import Cluster, HitRatioMonitor, SLAAutoscaler
+    from repro.traffic import (load_trace, make_scenario, record_trace)
+
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+    # resolve the scenario BEFORE building the fleet: a replayed trace's
+    # header decides it (so a recorded zipf_drift trace replays with the
+    # same monitor/refresh machinery the live run had)
+    events = None
+    if args.replay_trace:
+        meta, events = load_trace(args.replay_trace)
+        scen_name = meta.get("scenario", args.scenario or "stationary")
+        print(f"[serve] replaying {len(events)} events from "
+              f"{args.replay_trace} (scenario={scen_name})")
+    else:
+        scen_name = args.scenario or "stationary"
+    if scen_name == "zipf_drift" and args.alpha == 0.0:
+        # a uniform stream has no hot set to erode; without an explicit
+        # --alpha use the scenario's default skew so the drift mechanism
+        # (and the monitor's baseline) is meaningful
+        args.alpha = 1.05
+        print("[serve] zipf_drift with --alpha 0: using alpha=1.05 "
+              "(uniform streams have no hot rows to drift)")
+
+    monitor = None
+    if scen_name == "zipf_drift":
+        # drift erodes the frequency-elected fast tier; monitor + refresh
+        monitor = HitRatioMonitor(cfg, alpha=args.alpha, seed=args.seed,
+                                  model_cfg=full_cfg)
+    autoscaler = (SLAAutoscaler(args.sla_ms, max_replicas=args.max_replicas)
+                  if args.autoscale else None)
+    cluster = Cluster(
+        cfg, n_replicas=args.replicas, model_axis=args.model_axis,
+        plan=args.plan, exchange=args.exchange, alpha=args.alpha,
+        seed=args.seed, fast_mb=args.fast_mb,
+        max_batch_queries=args.max_batch_queries,
+        max_wait_ms=args.max_wait_ms, router=args.router,
+        autoscaler=autoscaler, monitor=monitor,
+        pipeline_depth=args.pipeline_depth or None, verbose=True)
+
+    if events is None:
+        qps = args.qps
+        if qps <= 0:
+            # default load: ~80% of the fleet's aggregate per-query capacity
+            s1 = cluster.replicas[0].session.measure_service_time()
+            qps = 0.8 * args.replicas / s1
+            print(f"[serve] --qps 0: offering 0.8 x fleet capacity = "
+                  f"{qps:.1f} qps (per-query service {s1 * 1e3:.2f} ms)")
+        scenario = make_scenario(scen_name, alpha=args.alpha)
+        events = scenario.events(args.queries, qps=qps, seed=args.seed)
+        if args.record_trace:
+            record_trace(args.record_trace, events, scenario, qps=qps,
+                         seed=args.seed, config=cfg.name)
+            print(f"[serve] recorded trace -> {args.record_trace}")
+
+    report = cluster.run(events, sla_ms=args.sla_ms,
+                         percentile=args.sla_percentile, scenario=scen_name)
     print(f"[serve] {cfg.name}:")
     print(report.summary())
     return 0 if report.ok else 1

@@ -1,0 +1,21 @@
+"""repro.traffic — scenario traffic generation + trace record/replay.
+
+`TrafficScenario` compiles a production traffic regime (stationary /
+diurnal / flash_crowd / zipf_drift) into a timestamped `QueryEvent`
+stream on the virtual clock; `materialize_query` regenerates each
+event's content purely, and `traffic.trace` records/replays event
+streams as JSONL so every bench is reproducible.
+"""
+from repro.traffic.scenarios import (SCENARIOS, DiurnalScenario,
+                                     FlashCrowdScenario, QueryEvent,
+                                     StationaryScenario, TrafficScenario,
+                                     ZipfDriftScenario, make_scenario,
+                                     materialize_query)
+from repro.traffic.trace import load_trace, record_trace
+
+__all__ = [
+    "TrafficScenario", "StationaryScenario", "DiurnalScenario",
+    "FlashCrowdScenario", "ZipfDriftScenario", "QueryEvent",
+    "SCENARIOS", "make_scenario", "materialize_query",
+    "record_trace", "load_trace",
+]

@@ -1,0 +1,272 @@
+"""repro.cluster: fleet serving correctness on CPU meshes.
+
+The invariants the subsystem must hold:
+
+  * routing is a pure dispatch decision — every policy serves the exact
+    same per-query results as a single-board session;
+  * the autoscaler's scale-up re-places live params through
+    `runtime/elastic.remesh_tree` onto a REAL sub-mesh without changing
+    served results (subprocess, 8 virtual devices);
+  * the hit-ratio monitor detects zipf_drift erosion and its
+    `tiered_embedding.lfu_refresh` restores the hit ratio;
+  * the bench is registered in benchmarks/run.py.
+"""
+import dataclasses
+import os
+import sys
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_dlrm
+from repro.engine import Engine
+from repro.traffic import make_scenario, materialize_query
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cfg():
+    return dataclasses.replace(
+        get_dlrm("dlrm-rm2-small-unsharded").reduced(), batch_size=8)
+
+
+# ---------------------------------------------------------------------------
+# Routers (unit: fake replicas)
+# ---------------------------------------------------------------------------
+def _fake(rid, wait):
+    return SimpleNamespace(rid=rid, expected_wait_s=lambda now, w=wait: w,
+                           backlog=lambda now: 0)
+
+
+def test_router_policies_unit():
+    from repro.cluster import make_router
+
+    reps = [_fake(0, 5.0), _fake(1, 1.0), _fake(2, 3.0)]
+    rr = make_router("round_robin")
+    assert [rr.pick(reps, 0.0).rid for _ in range(4)] == [0, 1, 2, 0]
+    rr.replica_removed(reps[:2])               # shrink: index must re-wrap
+    assert rr.pick(reps[:2], 0.0).rid in (0, 1)
+
+    jsq = make_router("jsq")
+    assert jsq.pick(reps, 0.0).rid == 1        # global min expected wait
+    p2c = make_router("p2c", seed=0)
+    picks = {p2c.pick(reps, 0.0).rid for _ in range(32)}
+    assert 0 not in picks                      # never joins the longest queue
+    assert p2c.pick(reps[:1], 0.0).rid == 0    # single replica degenerates
+
+    with pytest.raises(ValueError, match="unknown router"):
+        make_router("nosuch")
+
+
+def test_autoscaler_policy_unit():
+    from repro.cluster import SLAAutoscaler
+
+    auto = SLAAutoscaler(10.0, max_replicas=3, window=4, patience=2,
+                         scale_down_frac=0.3, cooldown_s=1.0)
+    # sustained violation: two consecutive full windows above SLA -> up
+    assert auto.observe([20.0] * 4, now=0.0, n_replicas=1) is None
+    act = auto.observe([20.0] * 4, now=0.1, n_replicas=1)
+    assert act is not None and act[0] == "up" and act[1] > 10.0
+    # cooldown (until 1.1) holds even under continued violation
+    assert auto.observe([20.0] * 4, now=0.3, n_replicas=2) is None
+    assert auto.observe([20.0] * 4, now=0.5, n_replicas=2) is None
+    # sustained slack after cooldown -> down (but never below min)
+    assert auto.observe([1.0] * 4, now=2.0, n_replicas=2) is None
+    act = auto.observe([1.0] * 4, now=2.1, n_replicas=2)
+    assert act is not None and act[0] == "down"
+    auto2 = SLAAutoscaler(10.0, min_replicas=1, window=2, patience=1)
+    assert auto2.observe([1.0] * 2, now=0.0, n_replicas=1) is None
+
+    with pytest.raises(ValueError, match="min_replicas"):
+        SLAAutoscaler(10.0, min_replicas=3, max_replicas=2)
+
+
+# ---------------------------------------------------------------------------
+# Cluster runs (in-process, replicas share the single CPU device)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["round_robin", "jsq", "p2c"])
+def test_router_policies_preserve_results(policy):
+    """Any routing policy == single-board serving, query for query."""
+    from repro.cluster import Cluster
+
+    cfg = _cfg()
+    events = make_scenario("stationary", alpha=1.05).events(
+        10, qps=400.0, seed=1)
+    cluster = Cluster(cfg, n_replicas=2, alpha=1.05, router=policy,
+                      max_batch_queries=2, max_wait_ms=2.0)
+    report = cluster.run(events, sla_ms=1e6, scenario="stationary")
+    assert report.n_queries == 10 and report.router == policy
+    assert sorted(cluster.completed) == [e.qid for e in events]
+    ref = Engine(cfg, alpha=1.05).serve_session(max_batch_queries=2)
+    for ev in events:
+        q = materialize_query(cfg, ev, cluster.query_size)
+        expect = ref.serve_direct(q["dense"], q["indices"])
+        np.testing.assert_allclose(
+            cluster.completed[ev.qid].probs, expect, rtol=1e-5, atol=1e-6,
+            err_msg=f"qid={ev.qid} policy={policy}")
+
+
+def test_cluster_report_shape():
+    from repro.cluster import Cluster
+
+    cfg = _cfg()
+    events = make_scenario("diurnal", alpha=1.05, period_s=0.1).events(
+        8, qps=300.0, seed=0)
+    report = Cluster(cfg, n_replicas=2, alpha=1.05, max_batch_queries=2
+                     ).run(events, sla_ms=1e6, scenario="diurnal")
+    assert report.scenario == "diurnal"
+    assert report.n_replicas_start == report.n_replicas_end == 2
+    assert report.p50_ms <= report.p90_ms <= report.p99_ms
+    assert report.achieved_qps > 0 and report.offered_qps > 0
+    assert len(report.replicas) == 2
+    assert all(0.0 <= s["util"] <= 1.0 for s in report.replicas)
+    assert sum(s["served"] for s in report.replicas) == 8
+    assert report.predicted_qps is None        # plan="none"
+    assert "PASS" in report.summary()
+
+
+def test_cluster_auto_plan_predicts_qps():
+    from repro.cluster import Cluster
+
+    cfg = _cfg()
+    events = make_scenario("stationary", alpha=1.05).events(
+        6, qps=300.0, seed=0)
+    cl = Cluster(cfg, n_replicas=2, alpha=1.05, plan="auto",
+                 max_batch_queries=2)
+    report = cl.run(events, sla_ms=1e6, scenario="stationary")
+    assert cl.plan_report is not None
+    assert report.predicted_qps == pytest.approx(
+        2 * cl.plan_report.predicted_qps)
+    assert "PlanReport" in report.summary()
+
+
+def test_autoscaler_scales_and_preserves_results(subproc):
+    """Scale-up on a REAL sub-mesh split: 8 virtual devices, 2-device
+    replicas. The tiny SLA forces a scale-up mid-run; the new replica's
+    params arrive via remesh_tree and every served result still matches
+    the single-board reference. A second run with huge SLA + min_replicas
+    scales DOWN and results still match: the up/down round trip through
+    remesh_tree is output-transparent."""
+    code = """
+    import dataclasses
+    import numpy as np
+    from repro.configs.registry import get_dlrm
+    from repro.cluster import Cluster, SLAAutoscaler
+    from repro.engine import Engine
+    from repro.traffic import make_scenario, materialize_query
+
+    cfg = dataclasses.replace(get_dlrm("dlrm-rm2-small-unsharded").reduced(),
+                              batch_size=8)
+    events = make_scenario("stationary", alpha=1.05).events(40, qps=2000.0,
+                                                            seed=2)
+    ref = Engine(cfg, alpha=1.05).serve_session(max_batch_queries=2)
+
+    # up: impossible SLA -> grow to max_replicas
+    auto = SLAAutoscaler(sla_ms=1e-3, max_replicas=3, window=8, patience=1)
+    cl = Cluster(cfg, n_replicas=1, devices_per_replica=2, alpha=1.05,
+                 router="jsq", max_batch_queries=2, autoscaler=auto)
+    rep = cl.run(events, sla_ms=1e6)
+    ups = [e for e in rep.scale_events if e.action == "up"]
+    assert rep.n_replicas_end == 3 and len(ups) == 2, rep.scale_events
+    assert all(e.remesh.get("resharded", 0) > 0 for e in ups), ups
+    assert all(e.remesh.get("replicated_fallback", 1) == 0 for e in ups)
+    meshes = {id(r.mesh) for r in cl.replicas}
+    assert len(meshes) == 3                      # distinct sub-meshes
+    for ev in events:
+        q = materialize_query(cfg, ev, cl.query_size)
+        np.testing.assert_allclose(cl.completed[ev.qid].probs,
+                                   ref.serve_direct(q["dense"], q["indices"]),
+                                   rtol=1e-5, atol=1e-6)
+
+    # down: huge SLA -> shed back to min_replicas, results still exact
+    auto2 = SLAAutoscaler(sla_ms=1e6, min_replicas=1, max_replicas=3,
+                          window=8, patience=1)
+    cl2 = Cluster(cfg, n_replicas=2, devices_per_replica=2, alpha=1.05,
+                  router="jsq", max_batch_queries=2, autoscaler=auto2)
+    rep2 = cl2.run(events, sla_ms=1e6)
+    downs = [e for e in rep2.scale_events if e.action == "down"]
+    assert rep2.n_replicas_end == 1 and downs, rep2.scale_events
+    for ev in events:
+        q = materialize_query(cfg, ev, cl2.query_size)
+        np.testing.assert_allclose(cl2.completed[ev.qid].probs,
+                                   ref.serve_direct(q["dense"], q["indices"]),
+                                   rtol=1e-5, atol=1e-6)
+    print("SCALE-OK")
+    """
+    proc = subproc(code, n_devices=8)
+    assert proc.returncode == 0, proc.stderr
+    assert "SCALE-OK" in proc.stdout
+
+
+def test_drift_refresh_restores_hit_ratio():
+    """zipf_drift erodes the monitor's elected hot set; the drift-triggered
+    lfu_refresh (live counts) restores the windowed hit ratio. Pure
+    monitor-level check — no serving, fully deterministic."""
+    from repro.cluster import HitRatioMonitor
+
+    cfg = _cfg()
+    sc = make_scenario("zipf_drift", alpha=1.2, rotate_every_s=0.3,
+                       salt_stride=37)
+    events = sc.events(200, qps=400.0, seed=4)
+    salts = {e.perm_salt for e in events}
+    assert salts == {0, 37}, salts              # exactly one rotation
+    mon = HitRatioMonitor(cfg, alpha=1.2, window=12, cooldown_queries=20)
+    assert mon.baseline > 0.4
+    pre, post_drift, post_refresh = [], [], []
+    for ev in events:
+        q = materialize_query(cfg, ev, cfg.batch_size)
+        h = mon.observe(ev.qid, q["indices"], ev.arrival_s)
+        fired = mon.maybe_refresh(ev.arrival_s)
+        if ev.perm_salt == 0:
+            pre.append(h)
+        elif not mon.refreshes:
+            post_drift.append(h)
+        elif not fired:
+            post_refresh.append(h)
+    assert len(mon.refreshes) == 1, mon.refreshes
+    assert np.mean(pre) > 0.8 * mon.baseline
+    assert np.mean(post_drift) < 0.3 * mon.baseline     # erosion
+    tail = post_refresh[-20:]
+    assert np.mean(tail) > 0.8 * mon.baseline, np.mean(tail)  # recovery
+
+
+def test_monitor_service_multiplier_tracks_hit_ratio():
+    """Hybrid-memory retiming: losing the fast tier must cost service
+    time (multiplier > 1 vs baseline, monotone in the deficit)."""
+    from repro.cluster import HitRatioMonitor
+
+    cfg = _cfg()
+    mon = HitRatioMonitor(cfg, alpha=1.2,
+                          model_cfg=get_dlrm("dlrm-rm2-small-unsharded"))
+    at_base = mon.service_multiplier(mon.baseline)
+    assert at_base == pytest.approx(1.0)
+    degraded = mon.service_multiplier(0.1)
+    mild = mon.service_multiplier(0.8 * mon.baseline)
+    assert degraded > mild > at_base
+    assert degraded > 1.5                      # full-scale lookups dominate
+
+
+def test_straggler_service_scale_applies():
+    from repro.cluster import Cluster
+
+    cfg = _cfg()
+    events = make_scenario("stationary", alpha=1.05).events(
+        12, qps=2000.0, seed=0)
+    fast = Cluster(cfg, n_replicas=2, alpha=1.05, max_batch_queries=2,
+                   router="round_robin")
+    slow = Cluster(cfg, n_replicas=2, alpha=1.05, max_batch_queries=2,
+                   router="round_robin", service_scales=(1.0, 20.0))
+    rf = fast.run(events, sla_ms=1e6)
+    rs = slow.run(events, sla_ms=1e6)
+    assert rs.p99_ms > 2.0 * rf.p99_ms, (rs.p99_ms, rf.p99_ms)
+    with pytest.raises(ValueError, match="service_scales"):
+        Cluster(cfg, n_replicas=2, service_scales=(1.0,))
+
+
+def test_bench_cluster_registered():
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    from benchmarks import run as bench_run
+
+    assert "cluster" in {name for name, _ in bench_run.SECTIONS}

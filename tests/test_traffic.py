@@ -1,0 +1,142 @@
+"""repro.traffic: scenario generation + trace record/replay.
+
+The subsystem's load-bearing property: an event stream IS the workload —
+query content is a pure function of the event — so a recorded JSONL
+trace must replay bit-identically to live generation, for every
+scenario. Plus the scenario-shape checks: diurnal modulates the rate,
+flash_crowd bursts, zipf_drift rotates the hot-row permutation through a
+row-space bijection.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_dlrm
+from repro.traffic import (SCENARIOS, QueryEvent, load_trace, make_scenario,
+                           materialize_query, record_trace)
+
+SCENARIO_KW = {
+    "stationary": dict(alpha=1.05),
+    "diurnal": dict(alpha=1.05, amplitude=0.8, period_s=0.2),
+    "flash_crowd": dict(alpha=1.05, burst_factor=6.0, on_s=0.05, off_s=0.1),
+    "zipf_drift": dict(alpha=1.0, alpha_hi=1.4, drift_period_s=0.4,
+                       rotate_every_s=0.06, salt_stride=37),
+}
+
+
+def _cfg():
+    return dataclasses.replace(
+        get_dlrm("dlrm-rm2-small-unsharded").reduced(), batch_size=8)
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_events_deterministic_and_well_formed(name):
+    sc = make_scenario(name, **SCENARIO_KW[name])
+    ev = sc.events(50, qps=200.0, seed=7)
+    assert ev == sc.events(50, qps=200.0, seed=7)
+    assert ev != sc.events(50, qps=200.0, seed=8)
+    assert [e.qid for e in ev] == list(range(50))
+    arr = [e.arrival_s for e in ev]
+    assert all(b > a for a, b in zip(arr, arr[1:]))   # strictly ordered
+    assert all(e.arrival_s > 0 for e in ev)
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_trace_replay_bit_identical(name, tmp_path):
+    """Recorded trace == live generation, events AND materialized query
+    content (the reproducibility contract of every cluster bench)."""
+    cfg = _cfg()
+    sc = make_scenario(name, **SCENARIO_KW[name])
+    events = sc.events(30, qps=300.0, seed=3)
+    path = os.path.join(tmp_path, f"{name}.jsonl")
+    record_trace(path, events, sc, qps=300.0, seed=3)
+    meta, loaded = load_trace(path)
+    assert meta["scenario"] == name and meta["n"] == 30
+    assert loaded == events                    # exact, including floats
+    for ev_live, ev_rec in zip(events[::7], loaded[::7]):
+        a = materialize_query(cfg, ev_live)
+        b = materialize_query(cfg, ev_rec)
+        assert np.array_equal(np.asarray(a["dense"]), np.asarray(b["dense"]))
+        assert np.array_equal(np.asarray(a["indices"]),
+                              np.asarray(b["indices"]))
+
+
+def test_trace_rejects_bad_version_and_truncation(tmp_path):
+    sc = make_scenario("stationary")
+    events = sc.events(5, qps=100.0, seed=0)
+    path = os.path.join(tmp_path, "t.jsonl")
+    record_trace(path, events, sc)
+    with open(path) as f:
+        lines = f.read().splitlines()
+    with open(path, "w") as f:                 # drop one event
+        f.write("\n".join(lines[:-1]) + "\n")
+    with pytest.raises(ValueError, match="truncated"):
+        load_trace(path)
+    with open(path, "w") as f:
+        f.write('{"trace_version": 99, "n": 0}\n')
+    with pytest.raises(ValueError, match="trace_version"):
+        load_trace(path)
+
+
+def test_diurnal_modulates_arrival_rate():
+    """More arrivals land in the sin>0 half-period than in the sin<0 one."""
+    sc = make_scenario("diurnal", amplitude=0.8, period_s=1.0)
+    ev = sc.events(400, qps=400.0, seed=0)
+    phase = [e.arrival_s % 1.0 for e in ev]
+    up = sum(1 for p in phase if p < 0.5)      # rising half of the sinusoid
+    down = len(phase) - up
+    assert up > 1.4 * down, (up, down)
+
+
+def test_flash_crowd_is_bursty():
+    """Inter-arrival gaps mix a fast (burst) and a slow (base) regime: the
+    squared coefficient of variation of the gaps is ~1 for a homogeneous
+    Poisson process and far above it for the MMPP-style mixture."""
+    kw = dict(alpha=0.0, burst_factor=8.0, on_s=0.08, off_s=0.15)
+    ev = make_scenario("flash_crowd", **kw).events(400, qps=300.0, seed=0)
+    gaps = np.diff([e.arrival_s for e in ev])
+    cv2 = np.var(gaps) / np.mean(gaps) ** 2
+    base = make_scenario("stationary").events(400, qps=300.0, seed=0)
+    base_gaps = np.diff([e.arrival_s for e in base])
+    base_cv2 = np.var(base_gaps) / np.mean(base_gaps) ** 2
+    assert base_cv2 < 1.5, base_cv2
+    assert cv2 > 2.0, (cv2, base_cv2)
+
+
+def test_zipf_drift_rotates_salt_and_sweeps_alpha():
+    sc = make_scenario("zipf_drift", **SCENARIO_KW["zipf_drift"])
+    ev = sc.events(200, qps=500.0, seed=2)
+    salts = sorted({e.perm_salt for e in ev})
+    assert len(salts) >= 3 and salts[0] == 0
+    assert all(s % 37 == 0 for s in salts)     # multiples of the stride
+    alphas = {round(e.alpha, 6) for e in ev}
+    assert len(alphas) > 10                    # alpha actually sweeps
+    assert all(1.0 <= e.alpha <= 1.4 + 1e-9 for e in ev)
+
+
+def test_perm_salt_is_rowspace_rotation():
+    """materialize applies (idx + salt) % R — a bijection that rotates
+    WHICH rows are hot without changing the distribution's shape."""
+    cfg = _cfg()
+    base = QueryEvent(qid=0, arrival_s=0.1, step=5, seed=0, alpha=1.1)
+    rot = dataclasses.replace(base, perm_salt=37)
+    i0 = np.asarray(materialize_query(cfg, base)["indices"])
+    i1 = np.asarray(materialize_query(cfg, rot)["indices"])
+    np.testing.assert_array_equal((i0 + 37) % cfg.rows_per_table, i1)
+    # dense features are salt-independent
+    d0 = np.asarray(materialize_query(cfg, base)["dense"])
+    d1 = np.asarray(materialize_query(cfg, rot)["dense"])
+    np.testing.assert_array_equal(d0, d1)
+
+
+def test_scenario_registry_and_validation():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        make_scenario("nosuch")
+    with pytest.raises(ValueError, match="rate must be > 0"):
+        make_scenario("stationary").events(5, qps=0.0)
+    with pytest.raises(ValueError, match="amplitude"):
+        make_scenario("diurnal", amplitude=1.5)
+    with pytest.raises(ValueError, match="burst_factor"):
+        make_scenario("flash_crowd", burst_factor=0.5)
