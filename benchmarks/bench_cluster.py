@@ -85,7 +85,10 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     # ---- (a) stationary scale-out: 1 -> 2 replicas -----------------------
     print("\n== (a) stationary scale-out (SLA judged at P=95)")
-    print("replicas,offered_qps,achieved_qps,p95_ms,p99_ms,sla")
+    # board_s/kq + violations are the cost-vs-SLA frontier: what each
+    # within-SLA operating point COSTS in boards x time per 1k queries
+    print("replicas,offered_qps,achieved_qps,p95_ms,p99_ms,sla,"
+          "board_s_per_kq,sla_violations")
     runs = {}
     for replicas, load in ((1, 0.55), (1, 1.2), (2, 1.2)):
         qps = load * cap1
@@ -98,7 +101,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         runs[(replicas, load)] = r
         print(f"{replicas},{r.offered_qps:.0f},{r.achieved_qps:.0f},"
               f"{r.ppf_ms:.2f},{r.p99_ms:.2f},"
-              f"{'PASS' if r.ok else 'FAIL'}")
+              f"{'PASS' if r.ok else 'FAIL'},"
+              f"{1e3 * r.board_seconds / r.n_queries:.1f},"
+              f"{r.sla_violations}")
     r1, r1x, r2 = runs[(1, 0.55)], runs[(1, 1.2)], runs[(2, 1.2)]
     scaling = r2.achieved_qps / r1.achieved_qps
     one_board_breaks = (not r1x.ok) or (r1x.achieved_qps

@@ -37,6 +37,7 @@ class ScaleEvent:
     n_replicas: int             # fleet size AFTER the action
     window_p99_ms: float        # the p99 that triggered it
     remesh: Dict[str, int] = field(default_factory=dict)  # remesh_tree report
+    board_seconds: float = 0.0  # running boards x time cost at the decision
 
 
 class SLAAutoscaler:
@@ -60,6 +61,14 @@ class SLAAutoscaler:
         self._violations = 0
         self._slacks = 0
         self._hold_until = -float("inf")
+        # running (t, board_seconds) at each scale decision — the cost side
+        # of the autoscaler-economics frontier; the cluster records it
+        self.cost_log: List[Tuple[float, float]] = []
+
+    def record_cost(self, now: float, board_seconds: float) -> None:
+        """Log the fleet's running boards x time spend at a scale decision
+        (called by the cluster, which owns the replica lifetimes)."""
+        self.cost_log.append((float(now), float(board_seconds)))
 
     def window_p99_ms(self) -> float:
         if not self._lat:

@@ -74,6 +74,11 @@ class ClusterReport:
     refreshes: Tuple[float, ...] = ()
     hit_ratio_first: Optional[float] = None
     hit_ratio_last: Optional[float] = None
+    # cost accounting (autoscaler economics): boards x live time, and how
+    # many individual queries exceeded C_SLA — the two axes of the
+    # cost-vs-SLA frontier bench_cluster / bench_fabric report
+    board_seconds: float = 0.0
+    sla_violations: int = 0
 
     def summary(self) -> str:
         lines = [
@@ -90,6 +95,8 @@ class ClusterReport:
             f"{'PASS' if self.ok else 'FAIL'}",
             "[cluster] util: " + " ".join(
                 f"r{int(s['rid'])}={s['util']:.2f}" for s in self.replicas),
+            f"[cluster] cost: {self.board_seconds:.3f} board-seconds, "
+            f"{self.sla_violations} queries over C_SLA",
         ]
         if self.predicted_qps:
             lines.append(
@@ -186,6 +193,15 @@ class Cluster:
         return len(self.replicas)
 
     # -- fleet changes -------------------------------------------------------
+    def _board_seconds(self, now: float) -> float:
+        """Boards x live time so far: the autoscaler-economics cost axis
+        (every live replica since its spawn + every retired one's full
+        spawn->retirement window)."""
+        live = sum(max(now - r.spawned_at, 0.0) for r in self.replicas)
+        gone = sum(max((r.retired_at or now) - r.spawned_at, 0.0)
+                   for r in self._retired)
+        return live + gone
+
     def _scale_up(self, now: float, window_p99: float) -> None:
         rid = self._next_rid
         self._next_rid += 1
@@ -196,12 +212,17 @@ class Cluster:
         rep = Replica(rid, self.cfg, devs, params=params, **self._replica_kw)
         rep.free = rep.spawned_at = now
         self.replicas.append(rep)
+        cost = self._board_seconds(now)
+        if self.autoscaler is not None:
+            self.autoscaler.record_cost(now, cost)
         self.scale_events.append(ScaleEvent(
             t_s=now, action="up", n_replicas=len(self.replicas),
-            window_p99_ms=window_p99, remesh=remesh_report))
+            window_p99_ms=window_p99, remesh=remesh_report,
+            board_seconds=cost))
         if self.verbose:
             print(f"[cluster] t={now:.3f}s scale UP -> "
-                  f"{len(self.replicas)} replicas (p99 {window_p99:.2f}ms)")
+                  f"{len(self.replicas)} replicas (p99 {window_p99:.2f}ms, "
+                  f"{cost:.3f} board-s spent)")
 
     def _scale_down(self, now: float, window_p99: float) -> None:
         # retire the emptiest board; drain its queue before it goes
@@ -211,13 +232,16 @@ class Cluster:
         self.replicas.remove(victim)
         self.router.replica_removed(self.replicas)
         self._retired.append(victim)
+        cost = self._board_seconds(now)
+        if self.autoscaler is not None:
+            self.autoscaler.record_cost(now, cost)
         self.scale_events.append(ScaleEvent(
             t_s=now, action="down", n_replicas=len(self.replicas),
-            window_p99_ms=window_p99))
+            window_p99_ms=window_p99, board_seconds=cost))
         if self.verbose:
             print(f"[cluster] t={now:.3f}s scale DOWN -> "
                   f"{len(self.replicas)} replicas (r{victim.rid} retired, "
-                  f"p99 {window_p99:.2f}ms)")
+                  f"p99 {window_p99:.2f}ms, {cost:.3f} board-s spent)")
 
     # -- event loop ----------------------------------------------------------
     def _flush(self, replica: Replica, trigger: float) -> List[QueryFuture]:
@@ -307,4 +331,6 @@ class Cluster:
             scale_events=tuple(self.scale_events),
             refreshes=(tuple(self.monitor.refreshes)
                        if self.monitor is not None else ()),
-            hit_ratio_first=hit_first, hit_ratio_last=hit_last)
+            hit_ratio_first=hit_first, hit_ratio_last=hit_last,
+            board_seconds=self._board_seconds(makespan),
+            sla_violations=int((lat > sla_ms).sum()))

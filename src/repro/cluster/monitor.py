@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -59,7 +59,9 @@ class HitRatioMonitor:
                  window: int = 24, refresh_threshold: float = 0.7,
                  cooldown_queries: int = 24, profile_batches: int = 4,
                  model_cfg: Optional[DLRMConfig] = None,
-                 n_chips: int = 1, enabled: bool = True):
+                 n_chips: int = 1, enabled: bool = True,
+                 service_multiplier: Optional[
+                     Union[float, Callable[[float], float]]] = None):
         self.cfg = cfg
         self.enabled = enabled
         self.hot_per_table = max(1, int(hot_fraction * cfg.rows_per_table))
@@ -81,11 +83,21 @@ class HitRatioMonitor:
         self._hit_by_qid: Dict[int, float] = {}
         self.history: List[Tuple[float, float]] = []   # (t, per-query hit)
         self.refreshes: List[float] = []               # refresh fire times
-        # hybrid-memory retiming curve, evaluated at full model scale
+        # hybrid-memory retiming curve, evaluated at full model scale —
+        # unless the caller injects a calibrated override (see
+        # `service_multiplier` below)
         self._model_cfg = model_cfg if model_cfg is not None else cfg
         self._system = dataclasses.replace(
             perf_model.recspeed_hybrid_system(), n_chips=max(1, int(n_chips)))
         self._t_step_cache: Dict[float, float] = {}
+        if service_multiplier is not None and not (
+                callable(service_multiplier)
+                or isinstance(service_multiplier, (int, float))):
+            raise ValueError(
+                "service_multiplier must be a number (constant retiming) or "
+                f"a callable hit_ratio -> multiplier, got "
+                f"{type(service_multiplier).__name__}")
+        self._multiplier_override = service_multiplier
 
     # -- observation ---------------------------------------------------------
     def observe(self, qid: int, indices, now: float) -> float:
@@ -152,5 +164,15 @@ class HitRatioMonitor:
     def service_multiplier(self, hit_ratio: float) -> float:
         """Hybrid-memory retiming of a measured service time: modeled step
         time at `hit_ratio` relative to the profiled baseline ratio (>= ~1
-        when the tier erodes, back to ~1 after a refresh)."""
+        when the tier erodes, back to ~1 after a refresh).
+
+        Calibration hook (ROADMAP "latency-model calibration"): pass
+        `HitRatioMonitor(service_multiplier=...)` to replace the modeled
+        curve — a callable `hit_ratio -> multiplier` built from real
+        HBM+DDR4 measurements, or a constant for a fixed retiming. Default
+        (None) keeps the full-scale hybrid-memory model unchanged."""
+        if self._multiplier_override is not None:
+            if callable(self._multiplier_override):
+                return float(self._multiplier_override(float(hit_ratio)))
+            return float(self._multiplier_override)
         return self._t_step(hit_ratio) / self._t_step(self.baseline)

@@ -46,7 +46,8 @@ from dataclasses import replace as _replace
 
 from repro.configs.base import DLRMConfig
 from repro.core.collectives import (
-    CollectiveOp, Interconnect, Topology, collective_time)
+    CollectiveOp, Interconnect, Topology, all_to_all_topology_factor,
+    collective_time)
 from repro.core.memsys import (
     MemorySystem, recspeed_hbm2e, recspeed_sweep_hbm2e, tpu_v5e_hbm,
     v100_hbm2, xeon_ddr4_6ch)
@@ -419,6 +420,61 @@ def pipelined_breakdown(
         "t_stage_compute_mb": stage_c,
         "pipeline_overlap": serial - t_pipe,
     })
+    return bd
+
+
+# ---------------------------------------------------------------------------
+# Cross-board fabric model (repro.fabric): the paper's interconnect terms
+# applied at BOARD granularity instead of chip granularity
+# ---------------------------------------------------------------------------
+def fabric_link(latency_us: float = 1.0, bandwidth_gbs: float = 100.0,
+                topology: Topology = Topology.QUADRATIC,
+                switch_hop_latency_ns: float = 0.0,
+                n_switch_hops: int = 0) -> Interconnect:
+    """An inter-board fabric link in bench/CLI units (us, GB/s). The same
+    `Interconnect` abstraction the chip-level CC model uses — the paper's
+    scale-in argument is that latency/bandwidth/topology bound throughput
+    identically at every level of the hierarchy."""
+    return Interconnect(bandwidth_gbs * 1e9, latency_us * 1e-6, topology,
+                       switch_hop_latency_ns * 1e-9, n_switch_hops)
+
+
+def fabric_exchange_time(bytes_out: float, bytes_in: float, n_boards: int,
+                         link: Interconnect) -> float:
+    """Seconds one query-owner board spends on the inter-board embedding
+    exchange: index scatter to the owner boards (`bytes_out`) and pooled
+    vectors gathered back (`bytes_in`).
+
+    Latency is paid twice (request + response round) and the payloads ride
+    the all-to-all topology factor (a ring/torus fabric forwards the same
+    byte over multiple links). `bytes_out`/`bytes_in` are the exact wire
+    payloads the caller accounts from the partition map — lookups whose
+    owner IS the query board (or that hit the remote-row cache) never
+    reach this term."""
+    if n_boards <= 1 or (bytes_out <= 0 and bytes_in <= 0):
+        return 0.0
+    factor = all_to_all_topology_factor(link.topology, n_boards)
+    return (2.0 * link.latency
+            + factor * (bytes_out + bytes_in) / link.bandwidth)
+
+
+def sharded_query_bound(cfg: DLRMConfig, sys: SystemConfig, n_boards: int,
+                        link: Interconnect, remote_miss_fraction: float,
+                        ) -> StepBreakdown:
+    """Upper-bound step time for ONE query served by a sharded fleet: the
+    single-board inference breakdown plus the inter-board exchange for the
+    `remote_miss_fraction` of lookups that neither the local shard nor the
+    remote-row cache services. Drives `bench_fabric`'s link-latency
+    sensitivity sweep (the paper's Fig. 9 trend, one level up)."""
+    bd = inference_breakdown(cfg, sys)
+    f = min(max(float(remote_miss_fraction), 0.0), 1.0)
+    b, t, l = cfg.batch_size, cfg.num_tables, cfg.lookups_per_table
+    bytes_out = f * b * t * l * sys.index_bytes
+    bytes_in = f * b * t * cfg.embed_dim * sys.elem_bytes
+    t_fabric = fabric_exchange_time(bytes_out, bytes_in, n_boards, link)
+    bd.notes["t_fabric"] = t_fabric
+    bd.notes["fabric_bytes_per_query"] = bytes_out + bytes_in
+    bd.t_step = bd.t_fwd + t_fabric
     return bd
 
 

@@ -91,6 +91,24 @@ def plan_dlrm(cfg: DLRMConfig, system: SystemConfig, mode: str = "inference",
         qps_row_wise_partial=rw_p.qps)
 
 
+def default_table_bytes(cfg: DLRMConfig) -> List[int]:
+    """Per-table embedding bytes at the model's stored precision (fp16) —
+    the capacity-accounting unit every placement decision budgets in."""
+    return [cfg.rows_per_table * cfg.embed_dim * 2] * cfg.num_tables
+
+
+def access_density_order(access_freq: Sequence[float],
+                         table_bytes: Sequence[int]) -> np.ndarray:
+    """Table ids sorted by access density (accesses per byte), hottest
+    first — the shared greedy currency of the hot/cold tier placement
+    below AND the cross-board partitioner (`repro.fabric.partition`):
+    whatever is being filled (a chip's fast tier, a board's memory), the
+    highest-value bytes go in first."""
+    density = (np.asarray(access_freq, dtype=np.float64)
+               / np.maximum(table_bytes, 1))
+    return np.argsort(-density, kind="stable")
+
+
 def place_tables(
     cfg: DLRMConfig,
     access_freq: Sequence[float],
@@ -106,12 +124,11 @@ def place_tables(
     row-sharded across the bulk tier. Mirrors the paper's static
     HBM-vs-DDR4 allocation argument.
     """
-    t_bytes = list(table_bytes) if table_bytes is not None else [
-        cfg.rows_per_table * cfg.embed_dim * 2] * cfg.num_tables
+    t_bytes = (list(table_bytes) if table_bytes is not None
+               else default_table_bytes(cfg))
     assert len(access_freq) == cfg.num_tables == len(t_bytes)
 
-    density = np.asarray(access_freq, dtype=np.float64) / np.maximum(t_bytes, 1)
-    order = np.argsort(-density)
+    order = access_density_order(access_freq, t_bytes)
 
     placements: List[Optional[TablePlacement]] = [None] * cfg.num_tables
     fast_used = bulk_used = 0

@@ -243,6 +243,32 @@ class Engine:
             alpha=self.alpha, warmup=warmup, pipeline_depth=depth,
             depth_resolver=resolver, dp_axes=self.dp_axes)
 
+    def sharded_fleet(self, *, n_boards: int = 2,
+                      board_capacity_bytes: Optional[int] = None,
+                      link=None, cache_rows: Optional[int] = None,
+                      cache_enabled: bool = True,
+                      max_batch_queries: int = 4, max_wait_ms: float = 2.0,
+                      query_size: Optional[int] = None,
+                      router: str = "round_robin", **kw):
+        """Build a `repro.fabric.ShardedFleet` from this engine's config:
+        N boards that TOGETHER own one partitioned table set (vs the
+        replicated `repro.cluster` fleet), profiled/partitioned with the
+        engine's (alpha, seed) stream so the placement sees the traffic
+        the fleet will serve. `link` is a `perf_model.fabric_link(...)`
+        interconnect; remaining kwargs forward to `ShardedFleet`."""
+        if not self.is_dlrm:
+            raise ValueError("sharded_fleet is DLRM-only")
+        from repro.fabric import ShardedFleet
+        return ShardedFleet(
+            self.cfg, n_boards=n_boards,
+            board_capacity_bytes=board_capacity_bytes, link=link,
+            cache_rows=cache_rows, cache_enabled=cache_enabled,
+            alpha=self.alpha, seed=self.seed,
+            profile_batches=self.profile_batches,
+            max_batch_queries=max_batch_queries, max_wait_ms=max_wait_ms,
+            query_size=query_size, router=router,
+            verbose=self.verbose, **kw)
+
     def train_session(self, *, ckpt_dir: Optional[str] = None,
                       ckpt_every: int = 50, ckpt_keep: int = 3,
                       batch: int = 8, seq: int = 128,

@@ -1,0 +1,23 @@
+"""repro.fabric — cross-board sharded serving.
+
+A `ShardedFleet` is N boards that TOGETHER hold one partitioned table
+set (vs `repro.cluster`'s N full copies): `partition_tables` extends the
+planner's greedy access-density placement to board ownership with
+capacity accounting, `FabricExchange` routes lookups to owner boards and
+meters the modeled fabric link (latency + bandwidth + topology,
+`perf_model.fabric_exchange_time`), and each board's `RemoteRowCache`
+(LFU over remote hot rows, CacheEmbedding-style) turns most cross-board
+lookups into local ones under Zipf traffic. Served values are
+bit-identical to a single full board in every configuration.
+"""
+from repro.fabric.cache import RemoteRowCache
+from repro.fabric.exchange import ExchangeTraffic, FabricExchange
+from repro.fabric.fleet import FabricBoard, FabricReport, ShardedFleet
+from repro.fabric.partition import (PartitionMap, fits_one_board,
+                                    partition_tables)
+
+__all__ = [
+    "ShardedFleet", "FabricBoard", "FabricReport",
+    "PartitionMap", "partition_tables", "fits_one_board",
+    "FabricExchange", "ExchangeTraffic", "RemoteRowCache",
+]

@@ -1,0 +1,162 @@
+"""Per-board LFU cache of REMOTE hot rows — locality recovery for the
+sharded fleet.
+
+Partitioning a table set across boards destroys the locality a single
+board enjoys: every lookup whose owner is another board pays the fabric.
+hpcaitech/CacheEmbedding's observation is that a small software-managed
+cache of the hot rows recovers most of it, because recommendation
+streams are Zipfian — a few percent of rows take most of the accesses.
+
+`RemoteRowCache` is that cache for one board, over the tables the board
+does NOT own. It reuses the tiered-embedding machinery's statistics
+currency (`tiered_embedding.accumulate_row_freq` counts, LFU election by
+count) and the hit-ratio monitor's drift discipline
+(`cluster/monitor.py`): a sliding window of per-query remote-hit ratios,
+a two-phase drift trigger that resets the counts when the windowed ratio
+erodes below `refresh_threshold x baseline`, and a cooldown before the
+re-election fires — so a `zipf_drift` rotation degrades gracefully and
+recovers instead of serving a stale hot set forever.
+
+Serving is frozen (no online updates in this subsystem), so a cached row
+is an exact copy of the owner's row: the cache changes which lookups pay
+fabric bytes/latency, never the served values — the fleet's equivalence
+invariant (tests/test_fabric.py) holds with the cache on or off.
+Capacity is budgeted in ROWS (`capacity_rows` = bytes / row bytes),
+elected globally across all remote tables, true-LFU.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import DLRMConfig
+
+
+class RemoteRowCache:
+    """LFU row cache over one board's REMOTE tables; see module docstring."""
+
+    def __init__(self, cfg: DLRMConfig, remote_tables: Sequence[int], *,
+                 capacity_rows: int, window: int = 24,
+                 refresh_threshold: float = 0.6,
+                 cooldown_queries: int = 24, enabled: bool = True):
+        self.cfg = cfg
+        self.remote_tables = tuple(sorted(int(t) for t in remote_tables))
+        self.capacity_rows = max(0, int(capacity_rows))
+        self.enabled = bool(enabled) and self.capacity_rows > 0
+        self.refresh_threshold = float(refresh_threshold)
+        self.cooldown_queries = int(cooldown_queries)
+        self._remote_mask = np.zeros(cfg.num_tables, bool)
+        self._remote_mask[list(self.remote_tables)] = True
+        self._rt = np.asarray(self.remote_tables, np.int64)
+        # stats live at REMOTE-table granularity only — a board must not
+        # carry per-row state for the whole model it explicitly cannot hold
+        # (rows: (n_remote_tables, R); slot order == self.remote_tables)
+        n_remote = len(self.remote_tables)
+        self._counts = np.zeros((n_remote, cfg.rows_per_table), np.int64)
+        self._cached = np.zeros((n_remote, cfg.rows_per_table), bool)
+        self.baseline = 0.0
+        self._window: Deque[float] = deque(maxlen=int(window))
+        self._seen = 0
+        self._degraded_at: Optional[int] = None
+        self.refreshes: List[float] = []
+        self.history: List[Tuple[float, float]] = []   # (t, per-query hit)
+
+    @property
+    def cached_rows(self) -> int:
+        return int(self._cached.sum())
+
+    # -- election ------------------------------------------------------------
+    def _elect(self, counts: np.ndarray) -> None:
+        """Install the `capacity_rows` most-accessed remote rows. Global
+        LFU across tables (a very hot table may take more slots than a
+        cool one); stable tie-break by (table, row) id so the election is
+        deterministic in the counts. `counts` is in compact remote-slot
+        order, like every internal stat."""
+        self._cached[:] = False
+        if not self.enabled or not self.remote_tables:
+            return
+        flat = counts.reshape(-1)
+        k = min(self.capacity_rows, flat.size)
+        hot = np.argsort(-flat, kind="stable")[:k]
+        hot = hot[flat[hot] > 0]               # never cache never-seen rows
+        self._cached[hot // self.cfg.rows_per_table,
+                     hot % self.cfg.rows_per_table] = True
+
+    def warm(self, row_freq) -> float:
+        """Elect from a profiled frequency snapshot (the same (T, R)
+        profile the partition used) and set the expected-hit baseline the
+        drift trigger judges against. Returns the baseline."""
+        freq = np.asarray(row_freq, np.float64)[self._rt]
+        self._elect(freq)
+        mass = float(freq.sum())
+        self.baseline = (float(freq[self._cached].sum()) / mass
+                         if mass > 0 else 0.0)
+        return self.baseline
+
+    # -- lookup-path queries --------------------------------------------------
+    def hit_mask(self, indices) -> np.ndarray:
+        """(B, T, L) bool: remote lookups this cache serves locally. Local
+        tables are False — they never needed the cache."""
+        idx = np.asarray(indices)
+        hits = np.zeros(idx.shape, bool)
+        if self._rt.size:
+            idx_r = idx[:, self._rt, :]        # (B, n_remote, L)
+            hits[:, self._rt, :] = self._cached[
+                np.arange(self._rt.size)[None, :, None], idx_r]
+        return hits
+
+    def observe(self, indices, now: float,
+                hit: Optional[np.ndarray] = None) -> float:
+        """Fold one query's REMOTE accesses into the LFU counts; score its
+        remote lookups against the cache into the drift window. Returns
+        the query's remote-hit ratio (1.0 when nothing was remote). `hit`
+        short-circuits the mask when the caller already computed
+        `hit_mask(indices)` (the fleet shares one mask per flush between
+        scoring and wire accounting)."""
+        idx = np.asarray(indices)
+        if self._rt.size == 0:
+            return 1.0
+        idx_r = idx[:, self._rt, :]
+        slot_ix = np.arange(self._rt.size)[None, :, None]
+        np.add.at(self._counts,
+                  (np.broadcast_to(slot_ix, idx_r.shape), idx_r), 1)
+        n_remote = idx_r.size
+        if hit is None:
+            hit = self.hit_mask(idx)
+        h = float(hit.sum()) / n_remote
+        self._window.append(h)
+        self._seen += 1
+        self.history.append((now, h))
+        if (self.enabled and self._degraded_at is None
+                and len(self._window) == self._window.maxlen
+                and self.windowed_hit_ratio()
+                < self.refresh_threshold * self.baseline):
+            # drift detected: restart the stats so the coming re-election
+            # sees the NEW regime's counts only (cluster/monitor.py's
+            # two-phase discipline)
+            self._degraded_at = self._seen
+            self._counts[:] = 0
+        return h
+
+    def windowed_hit_ratio(self) -> float:
+        if not self._window:
+            return self.baseline
+        return float(np.mean(self._window))
+
+    # -- refresh policy -------------------------------------------------------
+    def should_refresh(self) -> bool:
+        return (self.enabled
+                and self._degraded_at is not None
+                and self._seen - self._degraded_at >= self.cooldown_queries)
+
+    def maybe_refresh(self, now: float) -> bool:
+        if not self.should_refresh():
+            return False
+        self._elect(self._counts)
+        self._counts[:] = 0
+        self._window.clear()
+        self._degraded_at = None
+        self.refreshes.append(now)
+        return True

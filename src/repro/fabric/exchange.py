@@ -1,0 +1,115 @@
+"""Inter-board embedding exchange: route lookups to owners, pool, return.
+
+One flushed batch on a dense-owner board plays Alg. 1 across BOARDS:
+
+  1. split the (B, T, L) index stream by the partition map's table
+     ownership; the slice for each owner board is one bag call on that
+     board's stacked owned tables (`FabricBoard.lookup` — the same
+     Pallas-backed `kernels.ops.embedding_bag` every other serving path
+     uses), producing pooled (B, T_o, d) parts;
+  2. re-stitch the parts into original table order (the
+     `parallel.exchange.planned_forward` inverse-permutation idiom);
+  3. account the wire traffic the remote slices imply — index bytes out
+     for every remote lookup the dense owner's `RemoteRowCache` does NOT
+     hold, one partially-pooled d-vector back per (sample, table) bag
+     with at least one miss (the partial-pool wire format of
+     `core/perf_model.py`: owners pool what they can before shipping) —
+     and price it with `perf_model.fabric_exchange_time`
+     (latency + bandwidth + topology).
+
+The VALUES never depend on the cache or the link (cached rows are exact
+copies of frozen rows); the exchange's job is to make the pooled tensor
+bit-identical to a single full board's while metering exactly what a
+real fabric would carry.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import DLRMConfig
+from repro.core.collectives import Interconnect
+from repro.core.perf_model import fabric_exchange_time
+from repro.fabric.cache import RemoteRowCache
+from repro.fabric.partition import PartitionMap
+
+
+@dataclass(frozen=True)
+class ExchangeTraffic:
+    """Wire accounting for one flushed batch on one dense-owner board."""
+
+    n_queries: int
+    remote_lookups: int       # lookups owned by another board
+    cache_hits: int           # of those, served by the remote-row cache
+    miss_rows: int            # row fetches that actually cross the fabric
+    miss_bags: int            # (sample, table) bags with >= 1 miss
+    bytes_out: float          # index payload to the owner boards
+    bytes_in: float           # partially-pooled vectors coming back
+    t_link_s: float           # modeled fabric time for the round
+
+    @property
+    def bytes_total(self) -> float:
+        return self.bytes_out + self.bytes_in
+
+    @property
+    def remote_hit_ratio(self) -> float:
+        if self.remote_lookups == 0:
+            return 1.0
+        return self.cache_hits / self.remote_lookups
+
+
+class FabricExchange:
+    """Partition-aware exchange accounting for a sharded fleet.
+
+    index_bytes / elem_bytes follow the perf model's wire conventions
+    (4 B indices, fp16 embeddings on the wire) so the fabric numbers
+    compose with the chip-level CC model's.
+    """
+
+    def __init__(self, cfg: DLRMConfig, partition: PartitionMap,
+                 link: Interconnect, *, index_bytes: int = 4,
+                 elem_bytes: int = 2):
+        self.cfg = cfg
+        self.partition = partition
+        self.link = link
+        self.index_bytes = int(index_bytes)
+        self.elem_bytes = int(elem_bytes)
+        owner = np.asarray(partition.owner)
+        # per-board table-id slices + the inverse permutation that restores
+        # original table order after concatenating the owners' pooled parts
+        self.tables_by_board: Tuple[np.ndarray, ...] = tuple(
+            np.flatnonzero(owner == b).astype(np.int32)
+            for b in range(partition.n_boards))
+        concat_order = np.concatenate(
+            [t for t in self.tables_by_board if t.size]
+            or [np.zeros(0, np.int32)])
+        self.inv_perm = np.argsort(concat_order).astype(np.int32)
+
+    def account(self, board_id: int, indices,
+                cache: Optional[RemoteRowCache] = None,
+                hit: Optional[np.ndarray] = None) -> ExchangeTraffic:
+        """Meter one batch's cross-board traffic as seen from the dense
+        owner `board_id`; `cache` filters remote lookups it holds. `hit`
+        reuses a mask the caller already computed for this batch."""
+        idx = np.asarray(indices)
+        B, T, L = idx.shape
+        remote_tables = np.asarray(self.partition.owner) != board_id
+        remote_lookups = int(remote_tables.sum()) * B * L
+        if remote_lookups == 0:
+            return ExchangeTraffic(B, 0, 0, 0, 0, 0.0, 0.0, 0.0)
+        if hit is None:
+            hit = (cache.hit_mask(idx) if cache is not None
+                   else np.zeros_like(idx, bool))
+        miss = remote_tables[None, :, None] & ~hit
+        miss_rows = int(miss.sum())
+        miss_bags = int(miss.any(axis=2).sum())
+        cache_hits = remote_lookups - miss_rows
+        bytes_out = miss_rows * self.index_bytes
+        bytes_in = miss_bags * self.cfg.embed_dim * self.elem_bytes
+        t_link = fabric_exchange_time(bytes_out, bytes_in,
+                                      self.partition.n_boards, self.link)
+        return ExchangeTraffic(B, remote_lookups, cache_hits, miss_rows,
+                               miss_bags, float(bytes_out), float(bytes_in),
+                               t_link)

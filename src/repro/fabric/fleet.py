@@ -1,0 +1,480 @@
+"""ShardedFleet: N boards that TOGETHER hold one model too big for any
+single board.
+
+`repro.cluster.Cluster` replicates — every board a full copy, so the
+fleet's servable model is capped by ONE board's memory. `ShardedFleet`
+partitions: each board owns a slice of the table set (plus a replicated
+copy of the small dense MLPs), and a query is served by two-level
+routing on the cluster's virtual-clock discipline:
+
+  query  -> dense-owner board   (the existing Router policies:
+                                 round_robin / jsq / p2c)
+  lookup -> table-owner boards  (the PartitionMap; owners run their
+                                 local Pallas bag reduction, pooled
+                                 vectors return over the modeled fabric)
+
+One flushed batch's timeline on the virtual clock:
+
+  start       = max(trigger, dense_owner.free)
+  parts ready = max over owners of (max(start, owner.free) + t_lookup)
+                -- owners look up in parallel, but a busy owner queues
+  done        = parts_ready + t_link(modeled: latency + bytes/bw +
+                topology, misses only -- the RemoteRowCache serves hot
+                remote rows locally) + t_dense (measured on the owner)
+
+Lookup and dense SERVICE times are real device executions on each
+board's sub-mesh, exactly like `Replica.flush`; only the fabric term is
+modeled (CPU test boards share a host — there is no real inter-board
+wire to measure). Served values are bit-identical to one full board
+regardless of partition, cache state, or link (tests/test_fabric.py).
+
+The run folds into a `FabricReport` — `ClusterReport`-compatible, plus
+cross-board bytes/query, the remote-row-cache hit ratio trajectory, and
+the share of service time stalled on the fabric link.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.core import dlrm as dlrm_lib
+from repro.core import perf_model
+from repro.core import tiered_embedding as te
+from repro.core.collectives import Interconnect
+from repro.cluster.cluster import ClusterReport
+from repro.cluster.replica import slice_devices, submesh
+from repro.cluster.router import Router, make_router
+from repro.engine.batching import MicroBatcher, QueryFuture
+from repro.fabric.cache import RemoteRowCache
+from repro.fabric.exchange import ExchangeTraffic, FabricExchange
+from repro.core.planner import default_table_bytes
+from repro.fabric.partition import PartitionMap, partition_tables
+from repro.kernels import ops
+from repro.traffic.scenarios import QueryEvent, materialize_query
+
+
+@dataclass(frozen=True)
+class FabricReport(ClusterReport):
+    """ClusterReport + the fabric-specific telemetry."""
+
+    n_boards: int = 0
+    board_capacity_bytes: int = 0
+    model_bytes: int = 0
+    fits_one_board: bool = True
+    cache_rows: int = 0
+    bytes_per_query: float = 0.0        # cross-board wire bytes / query
+    remote_lookup_fraction: float = 0.0
+    remote_hit_first: Optional[float] = None
+    remote_hit_last: Optional[float] = None
+    link_stall_share: float = 0.0       # fabric seconds / service seconds
+    cache_refreshes: int = 0
+
+    def summary(self) -> str:
+        lines = [super().summary()]
+        lines.append(
+            f"[fabric] {self.model_bytes / 2**20:.2f} MiB tables over "
+            f"{self.n_boards} boards @ "
+            f"{self.board_capacity_bytes / 2**20:.2f} MiB "
+            f"({'fits' if self.fits_one_board else 'does NOT fit'} one "
+            f"board); {self.remote_lookup_fraction:.0%} of lookups remote")
+        hit = ("" if self.remote_hit_first is None else
+               f" remote-cache hit {self.remote_hit_first:.3f} -> "
+               f"{self.remote_hit_last:.3f}"
+               + (f" ({self.cache_refreshes} refresh)"
+                  if self.cache_refreshes else ""))
+        lines.append(
+            f"[fabric] {self.bytes_per_query:.0f} B/query on the wire, "
+            f"link-stall {self.link_stall_share:.1%} of service;{hit}")
+        return "\n".join(lines)
+
+
+class FabricBoard:
+    """One board of a sharded fleet: its slice of the tables + a full
+    copy of the dense MLPs, on its own sub-mesh. Speaks the same
+    queue-state protocol routers see on `cluster.Replica` (rid /
+    expected_wait_s / backlog / enqueue / deadline)."""
+
+    def __init__(self, rid: int, cfg: DLRMConfig, devices: Sequence,
+                 table_ids: Sequence[int], params, *,
+                 model_axis: int = 1, max_batch_queries: int = 4,
+                 max_wait_ms: float = 2.0, service_scale: float = 1.0):
+        self.rid = rid
+        self.cfg = cfg
+        self.devices = list(devices)
+        self.mesh = submesh(self.devices, model_axis)
+        self.table_ids = np.asarray(sorted(table_ids), np.int32)
+        self.service_scale = float(service_scale)
+        sharding = jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec())
+        put = lambda x: jax.device_put(x, sharding)
+        # the board's resident state: ONLY its owned tables (the capacity
+        # claim) + the small dense params every board replicates
+        self.tables = put(params["tables"][self.table_ids])
+        self.dense_params = jax.tree_util.tree_map(
+            put, {"bot_mlp": params["bot_mlp"],
+                  "top_mlp": params["top_mlp"]})
+        self._sharding = sharding
+        self._lookup = jax.jit(ops.embedding_bag)
+        self._dense = jax.jit(
+            lambda p, dense, pooled: jax.nn.sigmoid(
+                dlrm_lib.dlrm_forward_from_pooled(p, dense, pooled)))
+        self.batcher = MicroBatcher(int(max_batch_queries), max_wait_ms / 1e3)
+        self.free = 0.0              # virtual clock: busy until this time
+        self.busy_s = 0.0            # occupied window (incl. link stalls)
+        self.lookup_busy_s = 0.0     # time spent serving OTHERS' lookups
+        self.served = 0
+        self.batch_sizes: List[int] = []
+        self._svc_ewma = 0.0
+        self._compiled: set = set()
+
+    # -- queue state (what routers see) -------------------------------------
+    def backlog(self, now: float) -> int:
+        return len(self.batcher.queue)
+
+    def expected_wait_s(self, now: float) -> float:
+        return (max(self.free - now, 0.0)
+                + len(self.batcher.queue) * self._svc_ewma)
+
+    def enqueue(self, fut: QueryFuture) -> bool:
+        return self.batcher.add(fut)
+
+    def deadline(self) -> float:
+        return self.batcher.deadline()
+
+    # -- real device executions ---------------------------------------------
+    def lookup(self, indices_local: jax.Array) -> Tuple[jax.Array, float]:
+        """Bag-reduce this board's owned tables for a batch slice:
+        (B, T_own, L) indices already translated to owned-table order ->
+        ((B, T_own, d) pooled part, measured seconds x service_scale)."""
+        key = ("lookup", indices_local.shape)
+        args = (self.tables, jax.device_put(indices_local, self._sharding))
+        if key not in self._compiled:
+            self._lookup(*args).block_until_ready()   # compile untimed
+            self._compiled.add(key)
+        t0 = time.perf_counter()
+        pooled = self._lookup(*args)
+        pooled.block_until_ready()
+        return pooled, (time.perf_counter() - t0) * self.service_scale
+
+    def dense_forward(self, dense: jax.Array, pooled: jax.Array
+                      ) -> Tuple[np.ndarray, float]:
+        """Bottom MLP + interactions + top MLP + sigmoid on this board's
+        sub-mesh; returns (probs (B,), measured seconds x service_scale)."""
+        key = ("dense", dense.shape)
+        args = (self.dense_params,
+                jax.device_put(dense, self._sharding),
+                jax.device_put(pooled, self._sharding))
+        if key not in self._compiled:
+            self._dense(*args).block_until_ready()
+            self._compiled.add(key)
+        t0 = time.perf_counter()
+        probs = self._dense(*args)
+        probs.block_until_ready()
+        return np.asarray(probs), (time.perf_counter() - t0) * self.service_scale
+
+    def pull(self, x) -> jax.Array:
+        """Land an array on THIS board's devices — the executable face of
+        the fabric transfer (remote owners' pooled parts must live on the
+        dense owner's sub-mesh before it can reassemble and compute)."""
+        return jax.device_put(np.asarray(x), self._sharding)
+
+    def note_service(self, window_s: float, n_queries: int) -> None:
+        per_query = window_s / max(n_queries, 1)
+        self._svc_ewma = (per_query if self._svc_ewma == 0.0
+                          else 0.3 * per_query + 0.7 * self._svc_ewma)
+
+    def stats(self, makespan_s: float) -> Dict[str, float]:
+        active = max(makespan_s, 1e-12)
+        return {
+            "rid": self.rid,
+            "served": self.served,
+            "batches": len(self.batch_sizes),
+            "mean_batch": (float(np.mean(self.batch_sizes))
+                           if self.batch_sizes else 0.0),
+            "busy_s": self.busy_s,
+            "lookup_busy_s": self.lookup_busy_s,
+            # occupancy = own flush windows + lookups served for OTHER
+            # boards' batches — without the second term a board that mostly
+            # answers remote lookups reads as idle
+            "util": min((self.busy_s + self.lookup_busy_s) / active, 1.0),
+        }
+
+
+class ShardedFleet:
+    """N boards collectively owning one partitioned table set; peer of
+    `cluster.Cluster` (same event loop, router policies, and report
+    shape) for the sharded axis of scale-in. See module docstring."""
+
+    def __init__(self, cfg: DLRMConfig, *, n_boards: int = 2,
+                 devices: Optional[Sequence] = None,
+                 devices_per_board: Optional[int] = None,
+                 model_axis: int = 1,
+                 board_capacity_bytes: Optional[int] = None,
+                 link: Optional[Interconnect] = None,
+                 cache_rows: Optional[int] = None,
+                 cache_enabled: bool = True,
+                 cache_window: int = 24,
+                 cache_refresh_threshold: float = 0.6,
+                 cache_cooldown: int = 24,
+                 alpha: float = 0.0, seed: int = 0,
+                 profile_batches: int = 4,
+                 max_batch_queries: int = 4, max_wait_ms: float = 2.0,
+                 query_size: Optional[int] = None,
+                 router: Union[str, Router] = "round_robin",
+                 service_scales: Optional[Sequence[float]] = None,
+                 verbose: bool = False):
+        if n_boards < 1:
+            raise ValueError(f"n_boards must be >= 1, got {n_boards}")
+        if service_scales is not None and len(service_scales) != n_boards:
+            raise ValueError(
+                f"service_scales must have one entry per board "
+                f"({n_boards}), got {len(service_scales)}")
+        self.cfg = cfg
+        self.query_size = int(query_size or cfg.batch_size)
+        self.verbose = verbose
+        self.alpha = float(alpha)
+        self.seed = int(seed)
+        self.link = link if link is not None else perf_model.fabric_link()
+
+        # -- partition: profiled access stats -> board ownership ------------
+        self.row_freq = te.measure_row_freq(cfg, alpha, seed,
+                                            n_batches=profile_batches)
+        table_freq = np.asarray(self.row_freq.sum(axis=1), np.float64)
+        total_bytes = sum(default_table_bytes(cfg))
+        if board_capacity_bytes is None:
+            # tightest sensible default: the fair share + 25% headroom for
+            # imbalance (callers proving the too-big-for-one-board claim
+            # pass an explicit budget)
+            board_capacity_bytes = int(np.ceil(1.25 * total_bytes / n_boards))
+        self.partition: PartitionMap = partition_tables(
+            cfg, table_freq, n_boards, board_capacity_bytes)
+        if verbose:
+            print(self.partition.summary())
+        self.exchange = FabricExchange(cfg, self.partition, self.link)
+
+        # -- boards: shared-seed params, sliced by ownership -----------------
+        params = dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg)
+        pool = list(devices) if devices is not None else list(jax.devices())
+        dpb = devices_per_board or max(
+            model_axis, model_axis * (len(pool) // (model_axis * n_boards)))
+        self.boards: List[FabricBoard] = [
+            FabricBoard(b, cfg, slice_devices(pool, b, dpb),
+                        self.partition.tables_of(b), params,
+                        model_axis=model_axis,
+                        max_batch_queries=max_batch_queries,
+                        max_wait_ms=max_wait_ms,
+                        service_scale=(service_scales[b]
+                                       if service_scales is not None else 1.0))
+            for b in range(n_boards)]
+
+        # -- per-board LFU caches of remote hot rows -------------------------
+        self.caches: List[RemoteRowCache] = []
+        for b in range(n_boards):
+            remote = [t for t in range(cfg.num_tables)
+                      if self.partition.owner[t] != b]
+            # default budget: ~10% of the row space the board does NOT own
+            # — small next to its owned slice, large next to the Zipf head
+            cap = (cache_rows if cache_rows is not None
+                   else int(np.ceil(0.1 * len(remote) * cfg.rows_per_table)))
+            cache = RemoteRowCache(
+                cfg, remote, capacity_rows=cap, enabled=cache_enabled,
+                window=cache_window,
+                refresh_threshold=cache_refresh_threshold,
+                cooldown_queries=cache_cooldown)
+            cache.warm(self.row_freq)
+            self.caches.append(cache)
+        self.cache_enabled = bool(cache_enabled) and any(
+            c.enabled for c in self.caches)
+
+        self.router: Router = (router if isinstance(router, Router)
+                               else make_router(router, seed))
+        self.completed: Dict[int, QueryFuture] = {}
+
+    @property
+    def n_boards(self) -> int:
+        return len(self.boards)
+
+    def measure_service_time(self, n_queries: int = 1, repeats: int = 3,
+                             ) -> float:
+        """Median seconds of one capacity-shaped service round on board 0
+        (parallel owner lookups + dense forward; no link/cache terms) —
+        the per-batch service floor benches calibrate offered load from."""
+        from repro.data import make_recsys_batch
+        qs = [make_recsys_batch(self.cfg, s, self.seed, self.alpha,
+                                batch_size=self.query_size)
+              for s in range(max(1, min(n_queries,
+                                        self.boards[0].batcher.capacity)))]
+        while len(qs) < self.boards[0].batcher.capacity:
+            qs.append(qs[0])
+        dense = jnp.concatenate([q["dense"] for q in qs], axis=0)
+        idx = jnp.concatenate([q["indices"] for q in qs], axis=0)
+        times = []
+        for _ in range(repeats):
+            t_owners = 0.0
+            parts = []
+            for o, tids in enumerate(self.exchange.tables_by_board):
+                if tids.size == 0:
+                    continue
+                pooled_o, t_o = self.boards[o].lookup(idx[:, tids, :])
+                parts.append(self.boards[0].pull(pooled_o))
+                t_owners = max(t_owners, t_o)
+            pooled = jnp.concatenate(parts, axis=1)[:, self.exchange.inv_perm, :]
+            _, t_dense = self.boards[0].dense_forward(dense, pooled)
+            times.append(t_owners + t_dense)
+        return float(np.median(times))
+
+    # -- one flushed batch ---------------------------------------------------
+    def _flush(self, board: FabricBoard, trigger: float) -> List[QueryFuture]:
+        futs = board.batcher.drain()
+        if not futs:
+            return []
+        # pad every flush to the CAPACITY shape (replicating query 0, padded
+        # outputs discarded): one compiled shape per board role, and — the
+        # equivalence invariant's load-bearing detail — identical executed
+        # shapes for every fleet size, so per-row results are bitwise equal
+        # to the single-full-board reference no matter how routing composed
+        # the batch (XLA re-blocks GEMMs per shape; same shape = same rows)
+        parts_q = [f.query for f in futs]
+        while len(parts_q) < board.batcher.capacity:
+            parts_q.append(parts_q[0])
+        dense = jnp.concatenate([q["dense"] for q in parts_q], axis=0)
+        idx = jnp.concatenate([q["indices"] for q in parts_q], axis=0)
+
+        # one hit mask per query, shared between LFU scoring and wire
+        # accounting (the election cannot change between the two — refresh
+        # only fires below); padding never reaches the cache or the meter
+        cache = self.caches[board.rid]
+        idx_per_q = [np.asarray(f.query["indices"]) for f in futs]
+        hits = [cache.hit_mask(q) for q in idx_per_q]
+        for q, hm in zip(idx_per_q, hits):   # LFU stats + drift window
+            cache.observe(q, trigger, hit=hm)
+        traffic = self.exchange.account(
+            board.rid, np.concatenate(idx_per_q, axis=0), cache,
+            hit=np.concatenate(hits, axis=0))
+        cache.maybe_refresh(trigger)
+
+        # owners bag-reduce their slices (board.rid's own slice included);
+        # a busy owner queues the request behind its horizon
+        start = max(trigger, board.free)
+        parts: List[jax.Array] = []
+        parts_ready = start
+        for o, tids in enumerate(self.exchange.tables_by_board):
+            if tids.size == 0:
+                continue
+            owner = self.boards[o]
+            pooled_o, t_o = owner.lookup(idx[:, tids, :])
+            parts.append(pooled_o if o == board.rid else board.pull(pooled_o))
+            begin = start if o == board.rid else max(start, owner.free)
+            done_o = begin + t_o
+            parts_ready = max(parts_ready, done_o)
+            if o != board.rid:
+                owner.free = max(owner.free, done_o)
+                owner.lookup_busy_s += t_o
+        pooled = jnp.concatenate(parts, axis=1)[:, self.exchange.inv_perm, :]
+
+        probs, t_dense = board.dense_forward(dense, pooled)
+        done = parts_ready + traffic.t_link_s + t_dense
+        window = done - start
+        board.free = done
+        board.busy_s += window
+        board.served += len(futs)
+        board.batch_sizes.append(len(futs))
+        board.note_service(window, len(futs))
+        self._service_s += window
+        self._link_s += traffic.t_link_s
+        self._traffic.append(traffic)
+        self._batch_sizes.append(len(futs))
+        self._last_done = max(self._last_done, done)
+
+        out = np.asarray(probs).reshape(len(parts_q),
+                                        self.query_size)[:len(futs)]
+        for f, p in zip(futs, out):
+            f.complete(p, done)
+            self.completed[f.qid] = f
+            self._lat_ms.append(f.latency_ms)
+        return futs
+
+    # -- event loop ----------------------------------------------------------
+    def run(self, events: Sequence[QueryEvent], *, sla_ms: float = 50.0,
+            percentile: float = 99.0, scenario: str = "trace"
+            ) -> FabricReport:
+        """Serve one event stream to completion on the merged virtual
+        clock — the cluster event loop with two-level routing."""
+        if not events:
+            raise ValueError("fleet run needs at least one event")
+        self._lat_ms: List[float] = []
+        self._batch_sizes: List[int] = []
+        self._traffic: List[ExchangeTraffic] = []
+        self._service_s = 0.0
+        self._link_s = 0.0
+        self._last_done = 0.0
+        self.completed = {}
+        i = 0
+        while i < len(events) or any(b.batcher.queue for b in self.boards):
+            next_arr = events[i].arrival_s if i < len(events) else float("inf")
+            due = min(self.boards, key=lambda b: b.deadline())
+            # deadline wins ties, matching MicroBatcher.due (now >= deadline)
+            if next_arr < due.deadline():
+                ev = events[i]
+                i += 1
+                query = materialize_query(self.cfg, ev, self.query_size)
+                fut = QueryFuture(ev.qid, ev.arrival_s, query)
+                board = self.router.pick(self.boards, ev.arrival_s)
+                if board.enqueue(fut):
+                    self._flush(board, ev.arrival_s)
+            else:
+                self._flush(due, due.deadline())
+
+        lat = np.asarray(self._lat_ms, np.float64)
+        p50, p90, p99 = (float(np.percentile(lat, p)) for p in (50, 90, 99))
+        ppf = float(np.percentile(lat, percentile))
+        makespan = max(self._last_done, 1e-12)
+        offered = len(events) / max(events[-1].arrival_s, 1e-12)
+        remote_lookups = sum(t.remote_lookups for t in self._traffic)
+        total_lookups = (len(events) * self.query_size
+                         * self.cfg.num_tables * self.cfg.lookups_per_table)
+        # only ENABLED caches report a hit trajectory: a cache-off run must
+        # show None, not a 0.0 indistinguishable from a stone-cold cache
+        hist = sorted((h for c in self.caches if c.enabled
+                       for h in c.history), key=lambda th: th[0])
+        hit_first = hit_last = None
+        if hist:
+            hs = [h for _, h in hist]
+            k = min(len(hs), 16)
+            hit_first = float(np.mean(hs[:k]))
+            hit_last = float(np.mean(hs[-k:]))
+        return FabricReport(
+            scenario=scenario, router=self.router.name,
+            n_queries=len(events), n_replicas_start=self.n_boards,
+            n_replicas_end=self.n_boards, offered_qps=offered,
+            achieved_qps=len(events) / makespan,
+            p50_ms=p50, p90_ms=p90, p99_ms=p99, percentile=percentile,
+            ppf_ms=ppf, sla_ms=sla_ms, ok=ppf <= sla_ms,
+            mean_batch_queries=(float(np.mean(self._batch_sizes))
+                                if self._batch_sizes else 0.0),
+            makespan_s=makespan,
+            replicas=tuple(b.stats(makespan) for b in self.boards),
+            predicted_qps=None,
+            board_seconds=self.n_boards * makespan,
+            sla_violations=int((lat > sla_ms).sum()),
+            n_boards=self.n_boards,
+            board_capacity_bytes=self.partition.board_capacity_bytes,
+            model_bytes=self.partition.total_bytes,
+            fits_one_board=(self.partition.total_bytes
+                            <= self.partition.board_capacity_bytes),
+            cache_rows=max((c.capacity_rows for c in self.caches
+                            if c.enabled), default=0),
+            bytes_per_query=(sum(t.bytes_total for t in self._traffic)
+                             / len(events)),
+            remote_lookup_fraction=remote_lookups / max(total_lookups, 1),
+            remote_hit_first=hit_first, remote_hit_last=hit_last,
+            link_stall_share=(self._link_s / self._service_s
+                              if self._service_s > 0 else 0.0),
+            cache_refreshes=sum(len(c.refreshes) for c in self.caches))

@@ -1,0 +1,127 @@
+"""Cross-board table partitioning: one model spread over a fleet's memory.
+
+`core/planner.py` decides where a table lives WITHIN a board (fast vs
+bulk tier). This module lifts the same greedy access-density logic one
+level up: N boards, each with `board_capacity_bytes` of embedding
+memory, collectively own ONE table set — the paper's multi-processor
+scale-in axis at board granularity, and the mechanism that lets the
+fleet serve a model that provably does not fit any single board.
+
+The partitioner budgets every byte (`PartitionMap.board_bytes` vs
+capacity) and balances the expected LOOKUP load, not just the bytes:
+tables are placed hottest-density-first (`planner.access_density_order`)
+onto the board with the least accumulated access mass that still has
+room. Capacity violations are errors, not silent spills:
+
+  * `partition_tables(...)` raises if the fleet as a whole cannot hold
+    the table set (naming the offending table, mirroring
+    `planner.place_tables`' bulk-overflow error);
+  * `fits_one_board(...)` is the feasibility probe benches and the CLI
+    use to show a config genuinely exceeds one board before the sharded
+    fleet serves it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import DLRMConfig
+from repro.core.planner import access_density_order, default_table_bytes
+
+
+@dataclass(frozen=True)
+class PartitionMap:
+    """Table ownership across a sharded fleet + the capacity accounting
+    that proves it fits."""
+
+    config: str
+    n_boards: int
+    board_capacity_bytes: int
+    owner: Tuple[int, ...]        # table_id -> owning board
+    table_bytes: Tuple[int, ...]
+    board_bytes: Tuple[int, ...]  # embedding bytes resident per board
+    board_load: Tuple[float, ...]  # expected access mass per board
+
+    @property
+    def total_bytes(self) -> int:
+        return int(sum(self.table_bytes))
+
+    def tables_of(self, board: int) -> Tuple[int, ...]:
+        """Table ids board `board` owns, ascending (the canonical order
+        every consumer — params split, exchange reassembly — derives)."""
+        return tuple(t for t, o in enumerate(self.owner) if o == board)
+
+    def load_balance(self) -> float:
+        """Peak-to-even ratio of per-board access mass: 1.0 = perfectly
+        balanced lookup load, k = the busiest board sees k x its fair
+        share. The partitioner optimizes this; tests assert it stays
+        near 1 under skewed (Zipf) frequencies."""
+        total = sum(self.board_load)
+        if total <= 0:
+            return 1.0
+        return float(max(self.board_load) * self.n_boards / total)
+
+    def summary(self) -> str:
+        used = max(self.board_bytes) / max(self.board_capacity_bytes, 1)
+        loads = " ".join(f"b{i}={l:.2f}" for i, l in enumerate(
+            np.asarray(self.board_load) / max(sum(self.board_load), 1e-12)))
+        return (f"[partition] {self.config}: {len(self.owner)} tables "
+                f"({self.total_bytes / 2**20:.2f} MiB) over {self.n_boards} "
+                f"boards @ {self.board_capacity_bytes / 2**20:.2f} MiB "
+                f"(peak board fill {used:.0%}); load share {loads}")
+
+
+def fits_one_board(cfg: DLRMConfig, board_capacity_bytes: int,
+                   table_bytes: Optional[Sequence[int]] = None) -> bool:
+    """Would the whole table set fit a single board's embedding memory?"""
+    t_bytes = (list(table_bytes) if table_bytes is not None
+               else default_table_bytes(cfg))
+    return sum(t_bytes) <= board_capacity_bytes
+
+
+def partition_tables(
+    cfg: DLRMConfig,
+    access_freq: Sequence[float],
+    n_boards: int,
+    board_capacity_bytes: int,
+    table_bytes: Optional[Sequence[int]] = None,
+) -> PartitionMap:
+    """Greedy balanced partition: hottest access density first, each table
+    to the least-loaded board with room. See module docstring."""
+    if n_boards < 1:
+        raise ValueError(f"n_boards must be >= 1, got {n_boards}")
+    t_bytes = (list(table_bytes) if table_bytes is not None
+               else default_table_bytes(cfg))
+    freq = np.asarray(access_freq, dtype=np.float64)
+    if len(freq) != cfg.num_tables or len(t_bytes) != cfg.num_tables:
+        raise ValueError(
+            f"access_freq/table_bytes must have one entry per table "
+            f"({cfg.num_tables}), got {len(freq)}/{len(t_bytes)}")
+
+    owner = [-1] * cfg.num_tables
+    bytes_used = [0] * n_boards
+    load = [0.0] * n_boards
+    for t in access_density_order(freq, t_bytes):
+        t = int(t)
+        fits = [b for b in range(n_boards)
+                if bytes_used[b] + t_bytes[t] <= board_capacity_bytes]
+        if not fits:
+            free = n_boards * board_capacity_bytes - sum(bytes_used)
+            raise ValueError(
+                f"model does not fit the fleet: table {t} ({t_bytes[t]} B) "
+                f"overflows every board ({free} B free across {n_boards} "
+                f"boards of {board_capacity_bytes} B; total table set "
+                f"{sum(t_bytes)} B)")
+        # least accumulated access mass; bytes then board id break ties so
+        # the partition is deterministic in (freq, capacities)
+        b = min(fits, key=lambda i: (load[i], bytes_used[i], i))
+        owner[t] = b
+        bytes_used[b] += t_bytes[t]
+        load[b] += float(freq[t])
+    return PartitionMap(
+        config=cfg.name, n_boards=n_boards,
+        board_capacity_bytes=int(board_capacity_bytes),
+        owner=tuple(owner), table_bytes=tuple(int(x) for x in t_bytes),
+        board_bytes=tuple(bytes_used), board_load=tuple(load))

@@ -31,6 +31,8 @@ import argparse
 import sys
 from typing import Optional
 
+import numpy as np
+
 from repro.configs.registry import get_dlrm
 from repro.engine import Engine
 
@@ -69,7 +71,28 @@ def main(argv: Optional[list] = None) -> int:
     # -- fleet / scenario flags (repro.cluster path) -----------------------
     ap.add_argument("--replicas", type=int, default=1,
                     help=">1 serves a fleet of replica sub-meshes behind "
-                         "--router (repro.cluster)")
+                         "--router (repro.cluster); under --fleet-mode "
+                         "sharded this is the BOARD count of one "
+                         "partitioned model (repro.fabric)")
+    ap.add_argument("--fleet-mode", choices=["replicated", "sharded"],
+                    default="replicated",
+                    help="replicated: every board a full model copy "
+                         "(repro.cluster); sharded: the boards TOGETHER "
+                         "own one partitioned table set, lookups routed "
+                         "to owners over the modeled fabric "
+                         "(repro.fabric.ShardedFleet)")
+    ap.add_argument("--board-capacity-mb", type=float, default=None,
+                    help="per-board embedding capacity (MiB) for the "
+                         "sharded fleet's partitioner; default: fair "
+                         "share + 25%% headroom")
+    ap.add_argument("--fabric-latency-us", type=float, default=1.0,
+                    help="inter-board fabric link latency (microseconds)")
+    ap.add_argument("--fabric-gbs", type=float, default=100.0,
+                    help="inter-board fabric bandwidth (GB/s per board)")
+    ap.add_argument("--fabric-cache-rows", type=int, default=None,
+                    help="per-board LFU cache of remote hot rows "
+                         "(rows; 0 disables, default ~10%% of the "
+                         "board's remote row space)")
     ap.add_argument("--scenario", default=None,
                     help="traffic scenario for the fleet path: stationary, "
                          "diurnal, flash_crowd, zipf_drift (zipf_drift "
@@ -94,6 +117,8 @@ def main(argv: Optional[list] = None) -> int:
     if args.smoke:
         cfg = cfg.reduced()
 
+    if args.fleet_mode == "sharded":
+        return _fabric_main(args, cfg)
     if (args.replicas > 1 or args.scenario or args.autoscale
             or args.record_trace or args.replay_trace):
         return _cluster_main(args, cfg, full_cfg)
@@ -113,6 +138,84 @@ def main(argv: Optional[list] = None) -> int:
             args.queries, sla_ms=args.sla_ms,
             percentile=args.sla_percentile)
     print(f"[serve] {cfg.name}:")
+    print(report.summary())
+    return 0 if report.ok else 1
+
+
+def _fabric_main(args, cfg) -> int:
+    """Sharded-fleet path: one partitioned model over --replicas boards,
+    lookups routed to owners over the modeled fabric (repro.fabric)."""
+    from repro.core.perf_model import fabric_link
+    from repro.fabric import fits_one_board
+    from repro.traffic import load_trace, make_scenario, record_trace
+
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+    if args.autoscale:
+        raise SystemExit(
+            "--autoscale is a replicated-fleet feature; growing a sharded "
+            "fleet means re-partitioning live tables across boards "
+            "(ROADMAP: sharded fleet autoscaling)")
+    cap = (int(args.board_capacity_mb * 2 ** 20)
+           if args.board_capacity_mb is not None else None)
+    # resolve the scenario BEFORE building the fleet (the _cluster_main
+    # discipline): the profile, partition and cache warm-up all consume
+    # alpha, so a replayed trace's header — or the zipf_drift alpha guard —
+    # must inform construction, not arrive after it
+    events = None
+    if args.replay_trace:
+        meta, events = load_trace(args.replay_trace)
+        scen_name = meta.get("scenario", args.scenario or "stationary")
+        print(f"[serve] replaying {len(events)} events from "
+              f"{args.replay_trace} (scenario={scen_name})")
+        if args.alpha == 0.0 and events:
+            # profile/cache must see the traffic the trace actually carries
+            args.alpha = float(np.median([e.alpha for e in events]))
+            if args.alpha:
+                print(f"[serve] --alpha 0 on replay: profiling at the "
+                      f"trace's median alpha {args.alpha:g}")
+    else:
+        scen_name = args.scenario or "stationary"
+    if scen_name == "zipf_drift" and args.alpha == 0.0:
+        args.alpha = 1.05
+        print("[serve] zipf_drift with --alpha 0: using alpha=1.05 "
+              "(uniform streams have no hot rows to drift)")
+    engine = Engine(cfg, seed=args.seed, alpha=args.alpha, verbose=True)
+    fleet = engine.sharded_fleet(
+        n_boards=args.replicas, board_capacity_bytes=cap,
+        link=fabric_link(args.fabric_latency_us, args.fabric_gbs),
+        cache_rows=args.fabric_cache_rows,
+        cache_enabled=(args.fabric_cache_rows is None
+                       or args.fabric_cache_rows > 0),
+        max_batch_queries=args.max_batch_queries,
+        max_wait_ms=args.max_wait_ms, router=args.router,
+        model_axis=args.model_axis)
+    if not fits_one_board(cfg, fleet.partition.board_capacity_bytes):
+        print(f"[serve] table set "
+              f"({fleet.partition.total_bytes / 2**20:.2f} MiB) exceeds one "
+              f"board ({fleet.partition.board_capacity_bytes / 2**20:.2f} "
+              f"MiB): only the sharded fleet can hold this model")
+
+    if events is None:
+        qps = args.qps
+        if qps <= 0:
+            # sharded throughput does NOT scale with boards: every batch's
+            # lookups occupy all owner boards, so the fleet behaves like one
+            # pipeline of capacity-batch rounds (no --replicas multiplier)
+            s_cap = fleet.measure_service_time()
+            qps = 0.3 * args.max_batch_queries / s_cap
+            print(f"[serve] --qps 0: offering 0.3 x sharded capacity = "
+                  f"{qps:.1f} qps (capacity batch {s_cap * 1e3:.2f} ms)")
+        scenario = make_scenario(scen_name, alpha=args.alpha)
+        events = scenario.events(args.queries, qps=qps, seed=args.seed)
+        if args.record_trace:
+            record_trace(args.record_trace, events, scenario, qps=qps,
+                         seed=args.seed, config=cfg.name)
+            print(f"[serve] recorded trace -> {args.record_trace}")
+
+    report = fleet.run(events, sla_ms=args.sla_ms,
+                       percentile=args.sla_percentile, scenario=scen_name)
+    print(f"[serve] {cfg.name} (sharded, {args.replicas} boards):")
     print(report.summary())
     return 0 if report.ok else 1
 

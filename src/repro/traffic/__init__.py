@@ -6,6 +6,7 @@ stream on the virtual clock; `materialize_query` regenerates each
 event's content purely, and `traffic.trace` records/replays event
 streams as JSONL so every bench is reproducible.
 """
+from repro.traffic.ingest import IngestError, estimate_zipf_alpha, ingest_jsonl
 from repro.traffic.scenarios import (SCENARIOS, DiurnalScenario,
                                      FlashCrowdScenario, QueryEvent,
                                      StationaryScenario, TrafficScenario,
@@ -18,4 +19,5 @@ __all__ = [
     "FlashCrowdScenario", "ZipfDriftScenario", "QueryEvent",
     "SCENARIOS", "make_scenario", "materialize_query",
     "record_trace", "load_trace",
+    "ingest_jsonl", "estimate_zipf_alpha", "IngestError",
 ]

@@ -270,3 +270,60 @@ def test_bench_cluster_registered():
     from benchmarks import run as bench_run
 
     assert "cluster" in {name for name, _ in bench_run.SECTIONS}
+
+
+def test_cluster_cost_accounting_fields():
+    """Autoscaler-economics satellite: ClusterReport carries board-seconds
+    and an SLA-violation count; scale decisions log the running cost."""
+    from repro.cluster import Cluster, SLAAutoscaler
+
+    cfg = _cfg()
+    events = make_scenario("stationary", alpha=1.05).events(
+        10, qps=400.0, seed=1)
+    cl = Cluster(cfg, n_replicas=2, alpha=1.05, max_batch_queries=2)
+    r = cl.run(events, sla_ms=1e6, scenario="stationary")
+    # fixed fleet: boards x makespan exactly
+    assert r.board_seconds == pytest.approx(2 * r.makespan_s)
+    assert r.sla_violations == 0
+    assert "board-seconds" in r.summary()
+    # a tiny SLA turns every query into a violation (latency is real)
+    r2 = Cluster(cfg, n_replicas=2, alpha=1.05, max_batch_queries=2
+                 ).run(events, sla_ms=1e-6, scenario="stationary")
+    assert r2.sla_violations == r2.n_queries
+
+    # scale decisions record the running board-seconds on the event AND in
+    # the autoscaler's cost log
+    auto = SLAAutoscaler(sla_ms=1e-3, max_replicas=2, window=4, patience=1)
+    cl3 = Cluster(cfg, n_replicas=1, alpha=1.05, max_batch_queries=2,
+                  autoscaler=auto)
+    r3 = cl3.run(events, sla_ms=1e6, scenario="stationary")
+    ups = [e for e in r3.scale_events if e.action == "up"]
+    assert ups, r3.scale_events
+    assert all(e.board_seconds >= 0.0 for e in ups)
+    assert len(auto.cost_log) == len(r3.scale_events)
+    assert auto.cost_log[0][1] == pytest.approx(ups[0].board_seconds)
+
+
+def test_monitor_service_multiplier_injectable():
+    """Calibration satellite: a measured override replaces the modeled
+    hybrid-memory retiming curve; default behavior is unchanged."""
+    from repro.cluster import HitRatioMonitor
+
+    cfg = _cfg()
+    measured = {0.9: 1.0, 0.1: 3.5}
+    mon = HitRatioMonitor(
+        cfg, alpha=1.2,
+        service_multiplier=lambda h: measured[round(h, 1)])
+    assert mon.service_multiplier(0.9) == 1.0
+    assert mon.service_multiplier(0.1) == 3.5
+
+    const = HitRatioMonitor(cfg, alpha=1.2, service_multiplier=2.5)
+    assert const.service_multiplier(0.42) == 2.5
+
+    with pytest.raises(ValueError, match="service_multiplier"):
+        HitRatioMonitor(cfg, alpha=1.2, service_multiplier="fast")
+
+    default = HitRatioMonitor(cfg, alpha=1.2,
+                              model_cfg=get_dlrm("dlrm-rm2-small-unsharded"))
+    assert default.service_multiplier(default.baseline) == pytest.approx(1.0)
+    assert default.service_multiplier(0.05) > 1.0

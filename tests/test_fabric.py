@@ -1,0 +1,324 @@
+"""repro.fabric: cross-board sharded serving correctness.
+
+The invariants the subsystem must hold:
+
+  * the partitioner accounts every byte against board capacity, balances
+    lookup load under skew, and refuses a model the fleet cannot hold;
+  * the remote-row cache is LFU over remote tables only, detects drift,
+    and re-elects from post-drift counts;
+  * exchange accounting: cache-off meters every remote bag, a saturating
+    cache drives the wire bytes to zero, and reassembly order is exact;
+  * THE fabric equivalence invariant (subprocess, real sub-meshes): a
+    k-board ShardedFleet returns bit-identical per-query outputs to a
+    single board holding the full model — cache on and off, across a
+    zipf_drift trace with live cache re-elections;
+  * the cluster's cost accounting (board-seconds, SLA violations) and
+    the monitor's injectable service multiplier behave;
+  * the bench is registered in benchmarks/run.py.
+"""
+import dataclasses
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_dlrm
+from repro.traffic import make_scenario
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cfg(**kw):
+    return dataclasses.replace(
+        get_dlrm("dlrm-rm2-small-unsharded").reduced(), batch_size=8, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Partition (unit)
+# ---------------------------------------------------------------------------
+def test_partition_accounts_capacity_and_balances_load():
+    from repro.fabric import fits_one_board, partition_tables
+
+    cfg = _cfg()
+    tbytes = cfg.rows_per_table * cfg.embed_dim * 2
+    # Zipf-ish table popularity: 1/(t+1); the heaviest table holds ~37% of
+    # the mass, so the best achievable balance is ~1.47x the fair share
+    freq = np.array([1.0 / (t + 1) for t in range(cfg.num_tables)])
+    pm = partition_tables(cfg, freq, 4, 4 * tbytes)
+    assert len(pm.owner) == cfg.num_tables
+    assert sorted(sum((pm.tables_of(b) for b in range(4)), ())) \
+        == list(range(cfg.num_tables))
+    assert all(b <= 4 * tbytes for b in pm.board_bytes)
+    assert pm.total_bytes == cfg.embedding_bytes
+    # hottest-first onto least-loaded: the top-4 tables land on 4 DISTINCT
+    # boards, so no board carries 2 of the heavy hitters
+    owners_of_hot = {pm.owner[t] for t in range(4)}
+    assert len(owners_of_hot) == 4
+    assert pm.load_balance() < 1.6       # near the skew-imposed floor
+    assert "boards" in pm.summary()
+    # determinism
+    pm2 = partition_tables(cfg, freq, 4, 4 * tbytes)
+    assert pm2 == pm
+    # tight capacity still respects the budget even when it breaks balance
+    tight = partition_tables(cfg, freq, 4, 2 * tbytes)
+    assert all(b <= 2 * tbytes for b in tight.board_bytes)
+
+    assert not fits_one_board(cfg, cfg.embedding_bytes - 1)
+    assert fits_one_board(cfg, cfg.embedding_bytes)
+
+
+def test_partition_rejects_what_the_fleet_cannot_hold():
+    from repro.fabric import partition_tables
+
+    cfg = _cfg()
+    tbytes = cfg.rows_per_table * cfg.embed_dim * 2
+    with pytest.raises(ValueError, match="does not fit the fleet"):
+        partition_tables(cfg, np.ones(cfg.num_tables), 2,
+                         (cfg.num_tables // 2 - 1) * tbytes)
+    with pytest.raises(ValueError, match="n_boards"):
+        partition_tables(cfg, np.ones(cfg.num_tables), 0, tbytes)
+    with pytest.raises(ValueError, match="one entry per table"):
+        partition_tables(cfg, np.ones(3), 2, tbytes)
+
+
+# ---------------------------------------------------------------------------
+# Remote-row cache (unit, deterministic)
+# ---------------------------------------------------------------------------
+def test_remote_row_cache_lfu_and_drift_refresh():
+    from repro.core import tiered_embedding as te
+    from repro.fabric import RemoteRowCache
+
+    cfg = _cfg()
+    remote = [0, 1, 2, 3]
+    freq = te.measure_row_freq(cfg, alpha=1.2, seed=0, n_batches=8)
+    cache = RemoteRowCache(cfg, remote, capacity_rows=64, window=8,
+                           refresh_threshold=0.7, cooldown_queries=10)
+    base = cache.warm(freq)
+    assert 0.0 < base <= 1.0 and 0 < cache.cached_rows <= 64
+    # stats are compact: one row of state per REMOTE table, none for the
+    # tables the board owns — and hit_mask never claims a local lookup
+    assert cache._cached.shape == (4, cfg.rows_per_table)
+    every_row = np.broadcast_to(
+        np.arange(cfg.rows_per_table)[None, None, :],
+        (1, cfg.num_tables, cfg.rows_per_table)).astype(np.int32)
+    hm = cache.hit_mask(every_row)
+    assert not hm[:, 4:, :].any() and hm[:, :4, :].any()
+
+    from repro.data import make_recsys_batch
+    # in-distribution queries score near the baseline
+    for step in range(8):
+        idx = np.asarray(make_recsys_batch(cfg, step, 0, 1.2)["indices"])
+        h = cache.observe(idx, float(step))
+    assert cache.windowed_hit_ratio() > 0.6 * base
+    assert not cache.refreshes
+
+    # drift: rotate the row space -> erosion -> reset -> re-election
+    drift = 0
+    for step in range(8, 60):
+        idx = np.asarray(make_recsys_batch(cfg, step, 0, 1.2)["indices"])
+        idx = (idx + 53) % cfg.rows_per_table
+        cache.observe(idx, float(step))
+        if cache.maybe_refresh(float(step)):
+            drift = step
+    assert len(cache.refreshes) >= 1, "drift never triggered a re-election"
+    # post-refresh the cache serves the ROTATED stream again
+    post = [cache.observe(
+        (np.asarray(make_recsys_batch(cfg, s, 0, 1.2)["indices"]) + 53)
+        % cfg.rows_per_table, float(s)) for s in range(60, 70)]
+    assert np.mean(post) > 0.6 * base, np.mean(post)
+
+
+def test_remote_row_cache_disabled_never_hits():
+    from repro.fabric import RemoteRowCache
+    from repro.core import tiered_embedding as te
+
+    cfg = _cfg()
+    freq = te.measure_row_freq(cfg, alpha=1.2, seed=0, n_batches=4)
+    off = RemoteRowCache(cfg, [0, 1], capacity_rows=0)
+    off.warm(freq)
+    idx = np.zeros((2, cfg.num_tables, cfg.lookups_per_table), np.int32)
+    assert not off.hit_mask(idx).any()
+    assert off.observe(idx, 0.0) == 0.0 or not off.enabled
+
+
+# ---------------------------------------------------------------------------
+# Exchange accounting (unit)
+# ---------------------------------------------------------------------------
+def test_exchange_accounting_and_reassembly():
+    from repro.core import perf_model
+    from repro.fabric import (FabricExchange, RemoteRowCache,
+                              partition_tables)
+
+    cfg = _cfg()
+    pm = partition_tables(cfg, np.ones(cfg.num_tables), 2,
+                          cfg.embedding_bytes)
+    link = perf_model.fabric_link(1.0, 100.0)
+    ex = FabricExchange(cfg, pm, link)
+    # reassembly: concat(owner slices)[inv_perm] restores table order
+    concat = np.concatenate([t for t in ex.tables_by_board])
+    assert list(concat[ex.inv_perm]) == list(range(cfg.num_tables))
+
+    B, T, L = 4, cfg.num_tables, cfg.lookups_per_table
+    idx = np.zeros((B, T, L), np.int32)
+    t0 = ex.account(0, idx, cache=None)
+    n_remote_tables = sum(1 for o in pm.owner if o != 0)
+    assert t0.remote_lookups == n_remote_tables * B * L
+    assert t0.miss_rows == t0.remote_lookups and t0.cache_hits == 0
+    assert t0.miss_bags == n_remote_tables * B
+    assert t0.bytes_out == t0.miss_rows * 4
+    assert t0.bytes_in == t0.miss_bags * cfg.embed_dim * 2
+    assert t0.t_link_s > 2 * link.latency - 1e-12
+
+    # a cache holding every accessed row drives the wire bytes to zero
+    cache = RemoteRowCache(cfg, [t for t in range(T) if pm.owner[t] != 0],
+                           capacity_rows=T * cfg.rows_per_table)
+    freq = np.zeros((T, cfg.rows_per_table))
+    freq[:, 0] = 1.0                          # row 0 hot everywhere
+    cache.warm(freq)
+    t1 = ex.account(0, idx, cache)
+    assert t1.miss_rows == 0 and t1.bytes_total == 0.0
+    assert t1.remote_hit_ratio == 1.0 and t1.t_link_s == 0.0
+    # local-only view: board that owns everything it sees
+    solo = partition_tables(cfg, np.ones(T), 1, cfg.embedding_bytes)
+    ex1 = FabricExchange(cfg, solo, link)
+    tl = ex1.account(0, idx)
+    assert tl.remote_lookups == 0 and tl.bytes_total == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Fleet runs (in-process, boards share the single CPU device)
+# ---------------------------------------------------------------------------
+def test_fleet_report_and_cache_transparency():
+    from repro.fabric import ShardedFleet
+
+    cfg = _cfg()
+    events = make_scenario("stationary", alpha=1.05).events(
+        10, qps=400.0, seed=1)
+    fleet = ShardedFleet(cfg, n_boards=2, alpha=1.05, max_batch_queries=2)
+    r = fleet.run(events, sla_ms=1e6, scenario="stationary")
+    assert sorted(fleet.completed) == [e.qid for e in events]
+    assert r.n_boards == 2 and r.n_queries == 10
+    assert r.bytes_per_query > 0
+    assert 0.0 < r.remote_lookup_fraction < 1.0
+    assert 0.0 <= r.link_stall_share <= 1.0
+    assert r.board_seconds == pytest.approx(2 * r.makespan_s)
+    assert r.sla_violations == 0
+    assert not r.fits_one_board          # default budget < total bytes
+    assert "fabric" in r.summary() and "B/query" in r.summary()
+
+    off = ShardedFleet(cfg, n_boards=2, alpha=1.05, max_batch_queries=2,
+                       cache_enabled=False)
+    r_off = off.run(events, sla_ms=1e6, scenario="stationary")
+    assert r_off.bytes_per_query > r.bytes_per_query  # cache saves wire
+    # no cache -> no hit trajectory (None, not a cold-looking 0.0)
+    assert r_off.remote_hit_first is None and r_off.remote_hit_last is None
+    assert r.remote_hit_first is not None
+    for ev in events:                    # ...without touching the results
+        np.testing.assert_array_equal(
+            fleet.completed[ev.qid].probs, off.completed[ev.qid].probs,
+            err_msg=f"qid={ev.qid}")
+
+
+def test_engine_builds_sharded_fleet():
+    """`Engine.sharded_fleet` is the declarative entry point: the fleet
+    inherits the engine's (alpha, seed) stream for profiling/partition."""
+    from repro.engine import Engine
+    from repro.fabric import ShardedFleet
+
+    cfg = _cfg()
+    eng = Engine(cfg, alpha=1.05, seed=7)
+    fleet = eng.sharded_fleet(n_boards=2, max_batch_queries=2)
+    assert isinstance(fleet, ShardedFleet)
+    assert fleet.alpha == 1.05 and fleet.seed == 7
+    assert fleet.n_boards == 2
+    events = make_scenario("stationary", alpha=1.05).events(
+        4, qps=400.0, seed=7)
+    r = fleet.run(events, sla_ms=1e6)
+    assert r.n_queries == 4
+
+    from repro.configs.registry import get_arch
+    with pytest.raises(ValueError, match="DLRM-only"):
+        Engine(get_arch("deepseek-7b").reduced()).sharded_fleet()
+
+
+def test_fabric_equivalence_sharded_vs_full_board(subproc):
+    """THE acceptance invariant: a k-board fleet on REAL sub-meshes (8
+    virtual devices, 2-device boards) returns bit-identical per-query
+    outputs to a single board holding the full model — with the remote
+    cache on and off, across a zipf_drift trace whose rotations force
+    live cache re-elections mid-run."""
+    code = """
+    import dataclasses
+    import numpy as np
+    from repro.configs.registry import get_dlrm
+    from repro.fabric import ShardedFleet
+    from repro.traffic import make_scenario
+
+    cfg = dataclasses.replace(get_dlrm("dlrm-rm2-small-unsharded").reduced(),
+                              batch_size=8)
+    events = make_scenario("zipf_drift", alpha=1.2, rotate_every_s=0.02,
+                           salt_stride=37).events(120, qps=2000.0, seed=3)
+    assert len({e.perm_salt for e in events}) > 1   # the trace DOES drift
+
+    # reference: ONE board holding every table (capacity = full model)
+    ref = ShardedFleet(cfg, n_boards=1, devices_per_board=2, alpha=1.2,
+                       board_capacity_bytes=cfg.embedding_bytes,
+                       max_batch_queries=2)
+    ref.run(events, sla_ms=1e6)
+
+    for cache_on in (True, False):
+        fleet = ShardedFleet(cfg, n_boards=4, devices_per_board=2,
+                             alpha=1.2, max_batch_queries=2,
+                             cache_enabled=cache_on, cache_window=6,
+                             cache_refresh_threshold=0.7, cache_cooldown=6,
+                             router="jsq")
+        assert len({id(b.mesh) for b in fleet.boards}) == 4
+        r = fleet.run(events, sla_ms=1e6, scenario="zipf_drift")
+        if cache_on:
+            assert r.cache_refreshes > 0, "drift never re-elected the cache"
+        for ev in events:
+            got = fleet.completed[ev.qid].probs
+            want = ref.completed[ev.qid].probs
+            assert np.array_equal(got, want), (
+                f"qid={ev.qid} cache={cache_on} "
+                f"max|d|={np.max(np.abs(got - want))}")
+    print("FABRIC-EQ-OK")
+    """
+    proc = subproc(code, n_devices=8)
+    assert proc.returncode == 0, proc.stderr
+    assert "FABRIC-EQ-OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Registration + perf-model terms
+# ---------------------------------------------------------------------------
+def test_fabric_link_model_terms():
+    from repro.core import perf_model
+    from repro.core.collectives import Topology
+
+    link = perf_model.fabric_link(2.0, 50.0)
+    assert link.latency == pytest.approx(2e-6)
+    assert link.bandwidth == pytest.approx(50e9)
+    t = perf_model.fabric_exchange_time(1e6, 1e6, 4, link)
+    assert t == pytest.approx(2 * 2e-6 + 2e6 / 50e9)
+    assert perf_model.fabric_exchange_time(0, 0, 4, link) == 0.0
+    assert perf_model.fabric_exchange_time(1e6, 0, 1, link) == 0.0
+    ring = perf_model.fabric_link(2.0, 50.0, topology=Topology.RING)
+    assert (perf_model.fabric_exchange_time(1e6, 1e6, 8, ring)
+            > perf_model.fabric_exchange_time(1e6, 1e6, 8, link))
+
+    cfg = _cfg()
+    sys_ = dataclasses.replace(perf_model.recspeed_system(), n_chips=1)
+    bounds = [perf_model.sharded_query_bound(
+        cfg, sys_, 4, perf_model.fabric_link(lat, 100.0), 0.5).qps
+        for lat in (0.5, 2.0, 10.0)]
+    assert bounds[0] > bounds[1] > bounds[2]   # latency sensitivity
+
+
+def test_bench_fabric_registered():
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    from benchmarks import run as bench_run
+
+    assert "fabric" in {name for name, _ in bench_run.SECTIONS}

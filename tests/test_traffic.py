@@ -140,3 +140,110 @@ def test_scenario_registry_and_validation():
         make_scenario("diurnal", amplitude=1.5)
     with pytest.raises(ValueError, match="burst_factor"):
         make_scenario("flash_crowd", burst_factor=0.5)
+
+
+# ---------------------------------------------------------------------------
+# External-log ingestion (traffic/ingest.py)
+# ---------------------------------------------------------------------------
+def _write_log(path, records):
+    import json
+    with open(path, "w") as f:
+        for r in records:
+            f.write((r if isinstance(r, str) else json.dumps(r)) + "\n")
+
+
+def test_ingest_round_trips_through_trace(tmp_path):
+    """External log -> QueryEvents -> record_trace -> load_trace must be
+    lossless: ingested streams are first-class trace citizens."""
+    from repro.traffic import ingest_jsonl
+
+    rng = np.random.default_rng(7)
+    t = 1712009423.0
+    recs = []
+    for _ in range(40):
+        t += float(rng.exponential(0.01))
+        items = [int(i) for i in rng.zipf(1.5, size=5) % 500]
+        recs.append({"ts": t, "items": items})
+    rng.shuffle(recs)                       # out-of-order logs are fine
+    log = tmp_path / "requests.jsonl"
+    _write_log(log, recs)
+
+    meta, events = ingest_jsonl(str(log), seed=3)
+    assert len(events) == 40 and meta["n"] == 40
+    assert events[0].arrival_s == 0.0       # normalized to t=0
+    assert all(a.arrival_s <= b.arrival_s for a, b in zip(events, events[1:]))
+    assert all(e.seed == 3 and e.perm_salt == 0 for e in events)
+    assert meta["alpha_fitted"] and 0.0 < meta["alpha"] <= 3.0
+    assert meta["qps"] == pytest.approx(40 / events[-1].arrival_s)
+
+    trace = tmp_path / "ingested.jsonl"
+    record_trace(str(trace), events, **meta)
+    header, loaded = load_trace(str(trace))
+    assert loaded == events                 # lossless round trip
+    assert header["source"] == str(log) and header["ingested"]
+
+    # the adapter honors an explicit alpha override
+    _, ev2 = ingest_jsonl(str(log), alpha=1.05)
+    assert all(e.alpha == 1.05 for e in ev2)
+
+
+def test_ingest_malformed_records(tmp_path):
+    from repro.traffic import IngestError, ingest_jsonl
+
+    log = tmp_path / "bad.jsonl"
+    _write_log(log, [{"ts": 1.0, "items": [1, 2]},
+                     "{not json",
+                     {"ts": 2.0, "items": [3]}])
+    with pytest.raises(IngestError, match=r"bad\.jsonl:2: invalid JSON"):
+        ingest_jsonl(str(log))
+    meta, events = ingest_jsonl(str(log), strict=False)
+    assert len(events) == 2 and meta["skipped"] == 1
+
+    cases = [
+        ({"items": [1]}, "missing 'ts'"),
+        ({"ts": 1.0}, "missing 'items'"),
+        ({"ts": "noon", "items": [1]}, "finite number"),
+        ({"ts": float("nan"), "items": [1]}, "finite number"),
+        ({"ts": 10 ** 400, "items": [1]}, "finite number"),  # legal JSON int
+        ({"ts": 1.0, "items": []}, "non-empty list"),
+        ({"ts": 1.0, "items": [1, -2]}, "non-negative"),
+        ({"ts": 1.0, "items": "abc"}, "non-empty list"),
+    ]
+    for rec, msg in cases:
+        _write_log(log, [rec])
+        with pytest.raises(IngestError, match=msg):
+            ingest_jsonl(str(log))
+    _write_log(log, [])
+    with pytest.raises(IngestError, match="no usable records"):
+        ingest_jsonl(str(log))
+
+
+def test_ingest_alpha_estimator_tracks_skew():
+    from repro.traffic import estimate_zipf_alpha
+
+    rng = np.random.default_rng(0)
+    flat = np.bincount(rng.integers(0, 200, size=5000))
+    skew = np.bincount(rng.zipf(2.0, size=5000) % 200)
+    assert estimate_zipf_alpha(skew) > estimate_zipf_alpha(flat) + 0.3
+    assert estimate_zipf_alpha([5]) == 0.0          # degenerate
+    assert 0.0 <= estimate_zipf_alpha(flat) <= 3.0
+
+
+def test_ingested_events_drive_a_cluster(tmp_path):
+    """End to end: a measured log's arrival process served by the fleet."""
+    from repro.cluster import Cluster
+    from repro.traffic import ingest_jsonl
+
+    log = tmp_path / "prod.jsonl"
+    rng = np.random.default_rng(1)
+    t = 100.0
+    recs = []
+    for _ in range(10):
+        t += float(rng.exponential(0.004))
+        recs.append({"ts": t, "items": [int(rng.integers(0, 99))]})
+    _write_log(log, recs)
+    _, events = ingest_jsonl(str(log), alpha=1.05)
+    cfg = _cfg()
+    report = Cluster(cfg, n_replicas=2, alpha=1.05, max_batch_queries=2
+                     ).run(events, sla_ms=1e6, scenario="ingested")
+    assert report.n_queries == 10 and report.scenario == "ingested"
