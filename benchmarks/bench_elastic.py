@@ -1,0 +1,183 @@
+"""Elastic sharded fleet: the board-seconds economics of LIVE row-range
+re-partitioning (fabric.elastic) on a diurnal trace.
+
+Four claims, driven from a RECORDED JSONL trace (the bench_cluster /
+bench_fabric discipline: generate -> record -> reload -> verify, so every
+number reproduces from the trace file alone):
+
+  (a) breathing: an `SLAAutoscaler`-driven k-board fleet grows toward 2k
+      through the diurnal peak and shrinks back in the trough — at least
+      one scale-up AND one scale-down, each executed as a
+      `MigrationPlan` on the virtual clock (rows stream, caches
+      invalidate only migrated rows).
+  (b) economics: the elastic fleet finishes the SAME trace for fewer
+      board-seconds than a static 2k-board fleet — the static fleet
+      pays 2k boards for the whole makespan, the elastic one pays for
+      capacity only while the peak needs it.
+  (c) zero drift: every per-query output of the elastic run is
+      bit-identical to the static 2k reference — re-partitioning moves
+      residency, never values.
+  (d) minimal movement: every migration's bytes equal the changed-owner
+      rows' bytes exactly (rows_moved x row_bytes) — the plan never
+      touches a row whose owner did not change.
+
+Run: PYTHONPATH=src python -m benchmarks.bench_elastic [--queries 120]
+     [--tiny] [--trace-dir DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import tempfile
+from typing import List, Optional
+
+import numpy as np
+
+from repro.configs.registry import get_dlrm
+
+
+def _recorded(scenario, n, qps, seed, path):
+    """Generate -> record -> reload -> verify: the run consumes the FILE."""
+    from repro.traffic import load_trace, record_trace
+    events = scenario.events(n, qps=qps, seed=seed)
+    record_trace(path, events, scenario, qps=qps, seed=seed)
+    _, loaded = load_trace(path)
+    assert loaded == events, f"trace replay diverged for {path}"
+    return loaded
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    from repro.cluster.autoscale import SLAAutoscaler
+    from repro.fabric import ShardedFleet
+    from repro.traffic import make_scenario
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="dlrm-rm2-small-unsharded")
+    ap.add_argument("--queries", type=int, default=120,
+                    help="one diurnal day is 120 queries; more queries = "
+                         "more days (the economics CLAIM is judged per "
+                         "day — a multi-day elastic run trades its longer "
+                         "peak-draining makespan against board count)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke size (one 120-query day)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--alpha", type=float, default=1.05)
+    ap.add_argument("--boards", type=int, default=2,
+                    help="k: the fleet breathes between k and 2k boards")
+    ap.add_argument("--trace-dir", default=None,
+                    help="where the JSONL trace lands (default: a tmp dir)")
+    args = ap.parse_args(argv)
+
+    n = 120 if args.tiny else args.queries
+    k = args.boards
+    cfg = dataclasses.replace(get_dlrm(args.config).reduced(), batch_size=8)
+    tdir = args.trace_dir or tempfile.mkdtemp(prefix="bench_elastic_")
+    os.makedirs(tdir, exist_ok=True)
+    failures: List[str] = []
+    row_b = cfg.embed_dim * 2
+    # capacity sized for the SMALL fleet (fair share + headroom): every
+    # fleet size from k to 2k partitions within the same per-board budget
+    cap = int(np.ceil(1.25 * cfg.embedding_bytes / k))
+    common = dict(alpha=args.alpha, seed=args.seed, max_batch_queries=2,
+                  board_capacity_bytes=cap)
+
+    # ---- calibrate offered load off the real service floor ----------------
+    probe = ShardedFleet(cfg, n_boards=k, **common)
+    s_cap = probe.measure_service_time()
+    # mean at ~80% of the k-board pipeline: the diurnal peak (1.9x mean)
+    # overloads k boards decisively even when the calibration probe ran on
+    # a noisy runner, and the trough (0.1x mean) is unambiguous slack
+    qps = 0.8 * common["max_batch_queries"] / s_cap
+    # a "day" is 120 queries at the mean rate — peak in its first half
+    # (queueing builds on k boards), trough in the second (boards idle).
+    # Pinning the period to query COUNT, not trace length, keeps the
+    # peak backlog small enough to drain before the trough at any
+    # --queries: longer runs just see more days, not deeper peaks
+    period_s = min(n, 120) / qps
+    print(f"k={k} boards, capacity batch {s_cap * 1e3:.2f} ms -> mean "
+          f"{qps:.0f} qps, day={period_s * 1e3:.0f} ms")
+    events = _recorded(
+        make_scenario("diurnal", alpha=args.alpha, amplitude=0.9,
+                      period_s=period_s),
+        n, qps, args.seed, os.path.join(tdir, "elastic_diurnal.jsonl"))
+
+    # ---- static 2k reference ----------------------------------------------
+    static = ShardedFleet(cfg, n_boards=2 * k, **common)
+    r_static = static.run(events, sla_ms=1e6, scenario="diurnal")
+    print(f"static {2 * k} boards: {r_static.board_seconds:.3f} "
+          f"board-seconds over {r_static.makespan_s * 1e3:.0f} ms")
+
+    # ---- elastic k <-> 2k fleet --------------------------------------------
+    # react to real queueing: the threshold sits a few service floors above
+    # the uncontended latency (trough queries cost ~max_wait + one batch,
+    # peak queries queue for many batches), and the slack band reaches
+    # almost up to it so the trough reliably reads as slack on a noisy
+    # shared runner while peak queueing never does
+    auto = SLAAutoscaler(
+        max(4.0 * s_cap * 1e3, 1.0), min_replicas=k, max_replicas=2 * k,
+        window=8, patience=1, scale_down_frac=0.9, cooldown_s=8 * s_cap)
+    fleet = ShardedFleet(cfg, n_boards=k, autoscaler=auto, verbose=True,
+                         **common)
+    r = fleet.run(events, sla_ms=1e6, scenario="diurnal")
+    print(r.summary())
+
+    # ---- (a) breathing -----------------------------------------------------
+    ups = [e for e in r.scale_events if e.action == "up"]
+    downs = [e for e in r.scale_events if e.action == "down"]
+    if ups and downs:
+        print(f"WIN breathing: {len(ups)} scale-up(s) + {len(downs)} "
+              f"scale-down(s), peak fleet "
+              f"{max(e.n_replicas for e in r.scale_events)} boards, "
+              f"{r.migrated_bytes} B migrated in "
+              f"{r.migration_s * 1e3:.2f} ms of stall")
+    else:
+        failures.append(f"breathing: {len(ups)} ups / {len(downs)} downs "
+                        f"(need >= 1 of each)")
+
+    # ---- (b) board-seconds economics --------------------------------------
+    if r.board_seconds < r_static.board_seconds:
+        print(f"WIN economics: elastic {r.board_seconds:.3f} vs static "
+              f"{r_static.board_seconds:.3f} board-seconds "
+              f"({r_static.board_seconds / max(r.board_seconds, 1e-12):.2f}x"
+              f" cheaper) at elastic p99 {r.p99_ms:.2f} ms "
+              f"(static {r_static.p99_ms:.2f} ms)")
+    else:
+        failures.append(f"economics: elastic {r.board_seconds:.3f} >= "
+                        f"static {r_static.board_seconds:.3f} board-seconds")
+
+    # ---- (c) zero output drift --------------------------------------------
+    drift = [ev.qid for ev in events
+             if not np.array_equal(fleet.completed[ev.qid].probs,
+                                   static.completed[ev.qid].probs)]
+    if not drift:
+        print(f"WIN zero-drift: all {len(events)} queries bit-identical to "
+              f"the static {2 * k}-board fleet across "
+              f"{len(r.scale_events)} live re-partitions")
+    else:
+        failures.append(f"drift: {len(drift)} queries diverged "
+                        f"(first qid={drift[0]})")
+
+    # ---- (d) minimal movement ---------------------------------------------
+    bad = [e for e in r.scale_events
+           if e.remesh["bytes_moved"] != e.remesh["rows_moved"] * row_b]
+    moved = sum(e.remesh["bytes_moved"] for e in r.scale_events)
+    if not bad and moved == r.migrated_bytes:
+        print(f"WIN minimal-movement: every migration moved exactly its "
+              f"changed-owner rows ({moved} B total, "
+              f"{r.cache_invalidated_rows} cached rows invalidated)")
+    else:
+        failures.append("movement: migrated bytes != changed-owner row "
+                        "bytes in some event")
+
+    print(f"\ntrace: {tdir}")
+    if failures:
+        for f in failures:
+            print(f"FAILED CLAIM: {f}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

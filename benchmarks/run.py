@@ -4,11 +4,11 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_cluster, bench_engine_serve, bench_fabric,
-                        bench_pipeline, bench_tiered_embedding, fig6_membw,
-                        fig8_inference, fig9_latency, fig10_sharding,
-                        fig11_training, fig12_13_phases, kernel_bench,
-                        roofline, table16_17_upper_bounds)
+from benchmarks import (bench_cluster, bench_elastic, bench_engine_serve,
+                        bench_fabric, bench_pipeline, bench_tiered_embedding,
+                        fig6_membw, fig8_inference, fig9_latency,
+                        fig10_sharding, fig11_training, fig12_13_phases,
+                        kernel_bench, roofline, table16_17_upper_bounds)
 
 SECTIONS = [
     ("fig6", fig6_membw.main),
@@ -24,6 +24,7 @@ SECTIONS = [
     ("pipeline", lambda: bench_pipeline.main(["--tiny"])),
     ("cluster", lambda: bench_cluster.main(["--tiny"])),
     ("fabric", lambda: bench_fabric.main(["--tiny"])),
+    ("elastic", lambda: bench_elastic.main(["--tiny"])),
     ("roofline", roofline.main),
 ]
 

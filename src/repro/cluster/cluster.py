@@ -31,7 +31,7 @@ verdict, achieved vs offered QPS, per-replica utilization, measured vs
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import ClassVar, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -49,8 +49,14 @@ from repro.traffic.scenarios import QueryEvent, materialize_query
 
 
 @dataclass(frozen=True)
-class ClusterReport:
-    """One cluster run: latency distribution, scaling, tier health."""
+class FleetReport:
+    """The serving-report surface EVERY fleet flavor shares: one run's
+    latency distribution judged against the paper's Eq. 1 SLA
+    (PPF(D_Q, p) <= C_SLA), achieved vs offered throughput, per-board
+    utilization, and the autoscaler-economics cost axes (board_seconds,
+    per-query SLA violations). `ClusterReport` (replicated fleet),
+    `FabricReport` (sharded fleet) and the elastic report extend it with
+    their flavor's telemetry instead of re-declaring the surface."""
 
     scenario: str
     router: str
@@ -70,40 +76,56 @@ class ClusterReport:
     makespan_s: float
     replicas: Tuple[Dict[str, float], ...]
     predicted_qps: Optional[float]        # n_replicas_start x plan prediction
-    scale_events: Tuple[ScaleEvent, ...] = ()
-    refreshes: Tuple[float, ...] = ()
-    hit_ratio_first: Optional[float] = None
-    hit_ratio_last: Optional[float] = None
     # cost accounting (autoscaler economics): boards x live time, and how
     # many individual queries exceeded C_SLA — the two axes of the
     # cost-vs-SLA frontier bench_cluster / bench_fabric report
     board_seconds: float = 0.0
     sla_violations: int = 0
 
+    # subclass hook: the bracket tag each summary line carries
+    tag: ClassVar[str] = "fleet"
+
     def summary(self) -> str:
         lines = [
-            f"[cluster] {self.scenario} x {self.router}: "
+            f"[{self.tag}] {self.scenario} x {self.router}: "
             f"{self.n_queries} queries over "
             f"{self.n_replicas_start}->{self.n_replicas_end} replicas, "
             f"offered={self.offered_qps:.1f}qps "
             f"achieved={self.achieved_qps:.1f}qps "
             f"mean_batch={self.mean_batch_queries:.2f}",
-            f"[cluster] p50={self.p50_ms:.2f}ms p90={self.p90_ms:.2f}ms "
+            f"[{self.tag}] p50={self.p50_ms:.2f}ms p90={self.p90_ms:.2f}ms "
             f"p99={self.p99_ms:.2f}ms | SLA PPF(D_Q, "
             f"{self.percentile:.0f}) = {self.ppf_ms:.2f}ms "
             f"{'<=' if self.ok else '>'} C_SLA={self.sla_ms:.1f}ms -> "
             f"{'PASS' if self.ok else 'FAIL'}",
-            "[cluster] util: " + " ".join(
+            f"[{self.tag}] util: " + " ".join(
                 f"r{int(s['rid'])}={s['util']:.2f}" for s in self.replicas),
-            f"[cluster] cost: {self.board_seconds:.3f} board-seconds, "
+            f"[{self.tag}] cost: {self.board_seconds:.3f} board-seconds, "
             f"{self.sla_violations} queries over C_SLA",
         ]
         if self.predicted_qps:
             lines.append(
-                f"[cluster] measured/predicted QPS = "
+                f"[{self.tag}] measured/predicted QPS = "
                 f"{self.achieved_qps:.1f}/{self.predicted_qps:.1f} "
                 f"({self.achieved_qps / self.predicted_qps:.2f}x of "
                 f"{self.n_replicas_start} x PlanReport)")
+        return "\n".join(lines)
+
+
+@dataclass(frozen=True)
+class ClusterReport(FleetReport):
+    """FleetReport + the replicated fleet's telemetry: scale events, tier
+    hit-ratio health, lfu refreshes."""
+
+    scale_events: Tuple[ScaleEvent, ...] = ()
+    refreshes: Tuple[float, ...] = ()
+    hit_ratio_first: Optional[float] = None
+    hit_ratio_last: Optional[float] = None
+
+    tag: ClassVar[str] = "cluster"
+
+    def summary(self) -> str:
+        lines = [super().summary()]
         for e in self.scale_events:
             lines.append(
                 f"[cluster] scale {e.action} at t={e.t_s:.3f}s -> "

@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from dataclasses import replace as _replace
 
@@ -456,6 +456,27 @@ def fabric_exchange_time(bytes_out: float, bytes_in: float, n_boards: int,
     factor = all_to_all_topology_factor(link.topology, n_boards)
     return (2.0 * link.latency
             + factor * (bytes_out + bytes_in) / link.bandwidth)
+
+
+def repartition_time(per_board_send_bytes: Sequence[float],
+                     per_board_recv_bytes: Sequence[float],
+                     link: Interconnect) -> float:
+    """Seconds a live re-partition stalls the fleet: boards stream their
+    migrating row ranges point-to-point over the same fabric link queries
+    ride, all boards in parallel, so the wall time is bounded by the
+    BUSIEST endpoint (its send + receive bytes serialized through its one
+    port) plus one request/ack latency round. No topology factor: a
+    migration is a handful of long point-to-point streams, not an
+    all-to-all — bandwidth, not fan-out, is the constraint."""
+    send = [max(0.0, float(b)) for b in per_board_send_bytes]
+    recv = [max(0.0, float(b)) for b in per_board_recv_bytes]
+    if len(send) != len(recv):
+        raise ValueError(
+            f"per-board send/recv must align, got {len(send)}/{len(recv)}")
+    busiest = max((s + r for s, r in zip(send, recv)), default=0.0)
+    if busiest <= 0:
+        return 0.0
+    return 2.0 * link.latency + busiest / link.bandwidth
 
 
 def sharded_query_bound(cfg: DLRMConfig, sys: SystemConfig, n_boards: int,

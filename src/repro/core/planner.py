@@ -109,6 +109,60 @@ def access_density_order(access_freq: Sequence[float],
     return np.argsort(-density, kind="stable")
 
 
+def split_table_shards(
+    n_rows: int,
+    row_freq: Optional[Sequence[float]],
+    free_rows: Sequence[int],
+    board_load: Sequence[float],
+    min_shard_rows: int = 1,
+) -> List[Tuple[int, int, int]]:
+    """Split ONE table's row space across boards when no board holds it
+    whole: contiguous row ranges, handed out head-first (under the Zipf
+    streams the profiled row frequencies describe, low row ids carry the
+    mass, so the head range is the densest) to the least-loaded board
+    with room — the same greedy currency as `access_density_order`, one
+    granularity down.
+
+    `row_freq` (length `n_rows`) prices each range's access mass; None
+    means uniform. `free_rows` is each board's remaining capacity in THIS
+    table's rows. Returns [(board, row_lo, row_hi)] covering [0, n_rows)
+    exactly; raises ValueError — the loud-failure contract of
+    `place_tables` — only when a range of `min_shard_rows` (or the whole
+    remainder, if smaller) fits on no board.
+    """
+    if n_rows < 1:
+        raise ValueError(f"n_rows must be >= 1, got {n_rows}")
+    if min_shard_rows < 1:
+        raise ValueError(f"min_shard_rows must be >= 1, got {min_shard_rows}")
+    freq = (np.ones(n_rows, np.float64) if row_freq is None
+            else np.asarray(row_freq, np.float64))
+    if len(freq) != n_rows:
+        raise ValueError(f"row_freq must have {n_rows} entries, "
+                        f"got {len(freq)}")
+    free = [int(f) for f in free_rows]
+    load = [float(l) for l in board_load]
+    cum = np.concatenate([[0.0], np.cumsum(freq)])
+    out: List[Tuple[int, int, int]] = []
+    lo = 0
+    while lo < n_rows:
+        rem = n_rows - lo
+        need = min(min_shard_rows, rem)
+        fits = [b for b in range(len(free)) if free[b] >= need]
+        if not fits:
+            raise ValueError(
+                f"no board fits a row range of {need} rows "
+                f"({sum(free)} rows free across {len(free)} boards)")
+        # hottest remaining range to the least accumulated access mass;
+        # free space then board id break ties -> deterministic in inputs
+        b = min(fits, key=lambda i: (load[i], -free[i], i))
+        take = min(rem, free[b])
+        out.append((b, lo, lo + take))
+        load[b] += float(cum[lo + take] - cum[lo])
+        free[b] -= take
+        lo += take
+    return out
+
+
 def place_tables(
     cfg: DLRMConfig,
     access_freq: Sequence[float],

@@ -1,23 +1,37 @@
-"""repro.fabric — cross-board sharded serving.
+"""repro.fabric — cross-board sharded serving, row-range granular.
 
 A `ShardedFleet` is N boards that TOGETHER hold one partitioned table
-set (vs `repro.cluster`'s N full copies): `partition_tables` extends the
-planner's greedy access-density placement to board ownership with
-capacity accounting, `FabricExchange` routes lookups to owner boards and
-meters the modeled fabric link (latency + bandwidth + topology,
+set (vs `repro.cluster`'s N full copies). Ownership is a `ShardMap` of
+row-range shards — `partition_rows` extends the planner's greedy
+access-density placement to board ownership with per-byte capacity
+accounting, splitting a table no single board fits into contiguous row
+ranges (whole-table ownership is the trivial one-shard case;
+`partition_tables` keeps that granularity for feasibility probes).
+`FabricExchange` routes lookups to row owners and meters the modeled
+fabric link (latency + bandwidth + topology,
 `perf_model.fabric_exchange_time`), and each board's `RemoteRowCache`
-(LFU over remote hot rows, CacheEmbedding-style) turns most cross-board
-lookups into local ones under Zipf traffic. Served values are
-bit-identical to a single full board in every configuration.
+(LFU over remote hot rows keyed by global (table, row),
+CacheEmbedding-style) turns most cross-board lookups into local ones
+under Zipf traffic. `fabric.elastic` re-partitions LIVE: `expand_map` /
+`shrink_map` grow or shrink the fleet and `plan_migration` schedules the
+minimal row movement, so an `SLAAutoscaler`-driven fleet breathes with
+load mid-trace. Served values are bit-identical to a single full board
+in every configuration, before/during/after every re-partition.
 """
 from repro.fabric.cache import RemoteRowCache
+from repro.fabric.elastic import (MigrationPlan, RowMove, expand_map,
+                                  plan_migration, shrink_map)
 from repro.fabric.exchange import ExchangeTraffic, FabricExchange
 from repro.fabric.fleet import FabricBoard, FabricReport, ShardedFleet
-from repro.fabric.partition import (PartitionMap, fits_one_board,
+from repro.fabric.partition import (PartitionMap, Shard, ShardMap,
+                                    fits_one_board, partition_rows,
                                     partition_tables)
 
 __all__ = [
     "ShardedFleet", "FabricBoard", "FabricReport",
-    "PartitionMap", "partition_tables", "fits_one_board",
+    "ShardMap", "Shard", "PartitionMap",
+    "partition_rows", "partition_tables", "fits_one_board",
     "FabricExchange", "ExchangeTraffic", "RemoteRowCache",
+    "MigrationPlan", "RowMove", "expand_map", "shrink_map",
+    "plan_migration",
 ]

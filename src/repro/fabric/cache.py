@@ -7,22 +7,30 @@ hpcaitech/CacheEmbedding's observation is that a small software-managed
 cache of the hot rows recovers most of it, because recommendation
 streams are Zipfian — a few percent of rows take most of the accesses.
 
-`RemoteRowCache` is that cache for one board, over the tables the board
-does NOT own. It reuses the tiered-embedding machinery's statistics
-currency (`tiered_embedding.accumulate_row_freq` counts, LFU election by
-count) and the hit-ratio monitor's drift discipline
-(`cluster/monitor.py`): a sliding window of per-query remote-hit ratios,
-a two-phase drift trigger that resets the counts when the windowed ratio
-erodes below `refresh_threshold x baseline`, and a cooldown before the
-re-election fires — so a `zipf_drift` rotation degrades gracefully and
-recovers instead of serving a stale hot set forever.
+`RemoteRowCache` is that cache for one board, over the rows the board
+does NOT own. Since the row-range refactor (PR 6) it is keyed by global
+`(table, row)` — granularity-agnostic: whether the board misses a whole
+table or only the tail half of a split one, the cache sees the same
+currency, a boolean (T, R) remote mask. That also makes it ELASTIC: a
+live re-partition calls `update_ownership(new_remote_mask)` and only
+rows whose remote-status actually changed are invalidated — counts and
+cached copies of untouched rows survive the migration.
+
+It reuses the tiered-embedding machinery's statistics currency
+(`tiered_embedding.accumulate_row_freq` counts, LFU election by count)
+and the hit-ratio monitor's drift discipline (`cluster/monitor.py`): a
+sliding window of per-query remote-hit ratios, a two-phase drift
+trigger that resets the counts when the windowed ratio erodes below
+`refresh_threshold x baseline`, and a cooldown before the re-election
+fires — so a `zipf_drift` rotation degrades gracefully and recovers
+instead of serving a stale hot set forever.
 
 Serving is frozen (no online updates in this subsystem), so a cached row
 is an exact copy of the owner's row: the cache changes which lookups pay
 fabric bytes/latency, never the served values — the fleet's equivalence
 invariant (tests/test_fabric.py) holds with the cache on or off.
 Capacity is budgeted in ROWS (`capacity_rows` = bytes / row bytes),
-elected globally across all remote tables, true-LFU.
+elected globally across all remote rows, true-LFU.
 """
 from __future__ import annotations
 
@@ -35,33 +43,48 @@ from repro.configs.base import DLRMConfig
 
 
 class RemoteRowCache:
-    """LFU row cache over one board's REMOTE tables; see module docstring."""
+    """LFU cache over one board's REMOTE rows; see module docstring.
 
-    def __init__(self, cfg: DLRMConfig, remote_tables: Sequence[int], *,
+    `remote` is the board's remote-row space: a (T, R) bool mask, or (for
+    the whole-table convenience the PR-5 call sites used) a sequence of
+    remote table ids.
+    """
+
+    def __init__(self, cfg: DLRMConfig, remote, *,
                  capacity_rows: int, window: int = 24,
                  refresh_threshold: float = 0.6,
                  cooldown_queries: int = 24, enabled: bool = True):
         self.cfg = cfg
-        self.remote_tables = tuple(sorted(int(t) for t in remote_tables))
         self.capacity_rows = max(0, int(capacity_rows))
         self.enabled = bool(enabled) and self.capacity_rows > 0
         self.refresh_threshold = float(refresh_threshold)
         self.cooldown_queries = int(cooldown_queries)
-        self._remote_mask = np.zeros(cfg.num_tables, bool)
-        self._remote_mask[list(self.remote_tables)] = True
-        self._rt = np.asarray(self.remote_tables, np.int64)
-        # stats live at REMOTE-table granularity only — a board must not
-        # carry per-row state for the whole model it explicitly cannot hold
-        # (rows: (n_remote_tables, R); slot order == self.remote_tables)
-        n_remote = len(self.remote_tables)
-        self._counts = np.zeros((n_remote, cfg.rows_per_table), np.int64)
-        self._cached = np.zeros((n_remote, cfg.rows_per_table), bool)
+        self._remote = self._as_mask(remote)
+        # stats are keyed by global (table, row): granularity-agnostic, so
+        # whole-table and row-range-split ownership look identical here
+        self._counts = np.zeros((cfg.num_tables, cfg.rows_per_table),
+                                np.int64)
+        self._cached = np.zeros((cfg.num_tables, cfg.rows_per_table), bool)
         self.baseline = 0.0
         self._window: Deque[float] = deque(maxlen=int(window))
         self._seen = 0
         self._degraded_at: Optional[int] = None
         self.refreshes: List[float] = []
         self.history: List[Tuple[float, float]] = []   # (t, per-query hit)
+
+    def _as_mask(self, remote) -> np.ndarray:
+        arr = np.asarray(remote)
+        shape = (self.cfg.num_tables, self.cfg.rows_per_table)
+        if arr.dtype == bool and arr.shape == shape:
+            return arr.copy()
+        mask = np.zeros(shape, bool)
+        mask[np.asarray(sorted(int(t) for t in remote), np.int64)] = True
+        return mask
+
+    @property
+    def remote_tables(self) -> Tuple[int, ...]:
+        """Tables with at least one remote row (fully or partially)."""
+        return tuple(np.flatnonzero(self._remote.any(axis=1)).tolist())
 
     @property
     def cached_rows(self) -> int:
@@ -70,15 +93,14 @@ class RemoteRowCache:
     # -- election ------------------------------------------------------------
     def _elect(self, counts: np.ndarray) -> None:
         """Install the `capacity_rows` most-accessed remote rows. Global
-        LFU across tables (a very hot table may take more slots than a
-        cool one); stable tie-break by (table, row) id so the election is
-        deterministic in the counts. `counts` is in compact remote-slot
-        order, like every internal stat."""
+        LFU across all remote rows (a very hot table may take more slots
+        than a cool one); stable tie-break by (table, row) id so the
+        election is deterministic in the counts."""
         self._cached[:] = False
-        if not self.enabled or not self.remote_tables:
+        if not self.enabled or not self._remote.any():
             return
-        flat = counts.reshape(-1)
-        k = min(self.capacity_rows, flat.size)
+        flat = np.where(self._remote, counts, 0).reshape(-1)
+        k = min(self.capacity_rows, int(self._remote.sum()))
         hot = np.argsort(-flat, kind="stable")[:k]
         hot = hot[flat[hot] > 0]               # never cache never-seen rows
         self._cached[hot // self.cfg.rows_per_table,
@@ -88,24 +110,37 @@ class RemoteRowCache:
         """Elect from a profiled frequency snapshot (the same (T, R)
         profile the partition used) and set the expected-hit baseline the
         drift trigger judges against. Returns the baseline."""
-        freq = np.asarray(row_freq, np.float64)[self._rt]
+        freq = np.where(self._remote, np.asarray(row_freq, np.float64), 0.0)
         self._elect(freq)
         mass = float(freq.sum())
         self.baseline = (float(freq[self._cached].sum()) / mass
                          if mass > 0 else 0.0)
         return self.baseline
 
+    # -- elastic ownership ----------------------------------------------------
+    def update_ownership(self, remote) -> int:
+        """Swap in a new remote mask after a live re-partition. Only rows
+        whose remote-status CHANGED are invalidated (counts zeroed, cached
+        copy dropped) — a migrated row's cached bytes are stale (newly
+        local rows need no cache; newly remote rows were never counted),
+        but every untouched row keeps its stats and its cached copy.
+        Returns the number of invalidated rows (the bench's
+        cache_invalidated_rows meter)."""
+        new = self._as_mask(remote)
+        changed = new != self._remote
+        n = int(changed.sum())
+        self._counts[changed] = 0
+        self._cached[changed] = False
+        self._remote = new
+        return n
+
     # -- lookup-path queries --------------------------------------------------
     def hit_mask(self, indices) -> np.ndarray:
         """(B, T, L) bool: remote lookups this cache serves locally. Local
-        tables are False — they never needed the cache."""
+        rows are False — they never needed the cache."""
         idx = np.asarray(indices)
-        hits = np.zeros(idx.shape, bool)
-        if self._rt.size:
-            idx_r = idx[:, self._rt, :]        # (B, n_remote, L)
-            hits[:, self._rt, :] = self._cached[
-                np.arange(self._rt.size)[None, :, None], idx_r]
-        return hits
+        t_ix = np.arange(self.cfg.num_tables)[None, :, None]
+        return self._cached[t_ix, idx] & self._remote[t_ix, idx]
 
     def observe(self, indices, now: float,
                 hit: Optional[np.ndarray] = None) -> float:
@@ -116,13 +151,13 @@ class RemoteRowCache:
         `hit_mask(indices)` (the fleet shares one mask per flush between
         scoring and wire accounting)."""
         idx = np.asarray(indices)
-        if self._rt.size == 0:
+        t_ix = np.arange(self.cfg.num_tables)[None, :, None]
+        remote = self._remote[t_ix, idx]       # (B, T, L)
+        n_remote = int(remote.sum())
+        if n_remote == 0:
             return 1.0
-        idx_r = idx[:, self._rt, :]
-        slot_ix = np.arange(self._rt.size)[None, :, None]
         np.add.at(self._counts,
-                  (np.broadcast_to(slot_ix, idx_r.shape), idx_r), 1)
-        n_remote = idx_r.size
+                  (np.broadcast_to(t_ix, idx.shape)[remote], idx[remote]), 1)
         if hit is None:
             hit = self.hit_mask(idx)
         h = float(hit.sum()) / n_remote

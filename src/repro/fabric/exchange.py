@@ -2,19 +2,27 @@
 
 One flushed batch on a dense-owner board plays Alg. 1 across BOARDS:
 
-  1. split the (B, T, L) index stream by the partition map's table
-     ownership; the slice for each owner board is one bag call on that
-     board's stacked owned tables (`FabricBoard.lookup` — the same
-     Pallas-backed `kernels.ops.embedding_bag` every other serving path
-     uses), producing pooled (B, T_o, d) parts;
+  1. split the (B, T, L) index stream by the shard map's ROW-RANGE
+     ownership (`owner_cuts`: row r of table t belongs to the board whose
+     range covers it); for whole (single-shard) tables the owner's slice
+     is one bag call on that board's stacked owned tables
+     (`FabricBoard.lookup` — the same Pallas-backed
+     `kernels.ops.embedding_bag` every other serving path uses),
+     producing pooled (B, T_o, d) parts; a row-range SPLIT table is
+     gathered per owner as masked raw rows and summed on the dense owner
+     (pooling a row-sliced bag remotely would change fp summation order
+     and break bit-identity);
   2. re-stitch the parts into original table order (the
-     `parallel.exchange.planned_forward` inverse-permutation idiom);
+     `parallel.exchange.planned_forward` inverse-permutation idiom),
+     whole tables grouped by owner first, split tables after;
   3. account the wire traffic the remote slices imply — index bytes out
      for every remote lookup the dense owner's `RemoteRowCache` does NOT
-     hold, one partially-pooled d-vector back per (sample, table) bag
-     with at least one miss (the partial-pool wire format of
-     `core/perf_model.py`: owners pool what they can before shipping) —
-     and price it with `perf_model.fabric_exchange_time`
+     hold; coming back, one partially-pooled d-vector per (sample, table)
+     bag with at least one miss for whole tables (the partial-pool wire
+     format of `core/perf_model.py`: owners pool what they can before
+     shipping), but one d-vector per miss ROW for split tables (a
+     row-sliced bag cannot be pooled remotely without changing the sum
+     order) — and price it with `perf_model.fabric_exchange_time`
      (latency + bandwidth + topology).
 
 The VALUES never depend on the cache or the link (cached rows are exact
@@ -25,7 +33,7 @@ real fabric would carry.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -33,7 +41,9 @@ from repro.configs.base import DLRMConfig
 from repro.core.collectives import Interconnect
 from repro.core.perf_model import fabric_exchange_time
 from repro.fabric.cache import RemoteRowCache
-from repro.fabric.partition import PartitionMap
+from repro.fabric.partition import ShardMap
+
+PartitionMap = ShardMap  # wire-level alias, same as fabric.partition
 
 
 @dataclass(frozen=True)
@@ -46,7 +56,7 @@ class ExchangeTraffic:
     miss_rows: int            # row fetches that actually cross the fabric
     miss_bags: int            # (sample, table) bags with >= 1 miss
     bytes_out: float          # index payload to the owner boards
-    bytes_in: float           # partially-pooled vectors coming back
+    bytes_in: float           # vectors coming back (pooled or raw rows)
     t_link_s: float           # modeled fabric time for the round
 
     @property
@@ -61,14 +71,14 @@ class ExchangeTraffic:
 
 
 class FabricExchange:
-    """Partition-aware exchange accounting for a sharded fleet.
+    """Shard-map-aware routing + exchange accounting for a sharded fleet.
 
     index_bytes / elem_bytes follow the perf model's wire conventions
     (4 B indices, fp16 embeddings on the wire) so the fabric numbers
     compose with the chip-level CC model's.
     """
 
-    def __init__(self, cfg: DLRMConfig, partition: PartitionMap,
+    def __init__(self, cfg: DLRMConfig, partition: ShardMap,
                  link: Interconnect, *, index_bytes: int = 4,
                  elem_bytes: int = 2):
         self.cfg = cfg
@@ -76,16 +86,37 @@ class FabricExchange:
         self.link = link
         self.index_bytes = int(index_bytes)
         self.elem_bytes = int(elem_bytes)
-        owner = np.asarray(partition.owner)
-        # per-board table-id slices + the inverse permutation that restores
-        # original table order after concatenating the owners' pooled parts
+        T, R = partition.num_tables, partition.rows_per_table
+        self.split_tables = np.asarray(partition.split_tables, np.int32)
+        self._split_mask = np.zeros(T, bool)
+        self._split_mask[self.split_tables] = True
+        # row -> owning board for every (table, row): the two-level routing
+        # table. Dense (T, R) int8/16 is fine at fleet scale (R is the
+        # per-table row count, boards < 2^15).
+        owner_grid = np.zeros((T, R), np.int16)
+        for s in partition.shards:
+            owner_grid[s.table, s.row_lo:s.row_hi] = s.board
+        self._owner_grid = owner_grid
+        # whole tables: per-board table-id slices + the inverse permutation
+        # that restores original table order after concatenating [owners'
+        # pooled parts in board order] + [split tables in id order]
+        whole_owner = {s.table: s.board for s in partition.shards
+                       if not self._split_mask[s.table]}
         self.tables_by_board: Tuple[np.ndarray, ...] = tuple(
-            np.flatnonzero(owner == b).astype(np.int32)
-            for b in range(partition.n_boards))
+            np.asarray(sorted(t for t, b in whole_owner.items() if b == bd),
+                       np.int32)
+            for bd in range(partition.n_boards))
         concat_order = np.concatenate(
             [t for t in self.tables_by_board if t.size]
+            + [self.split_tables]
             or [np.zeros(0, np.int32)])
         self.inv_perm = np.argsort(concat_order).astype(np.int32)
+
+    def lookup_owners(self, indices) -> np.ndarray:
+        """(B, T, L) owning board id per lookup — routing by row offset."""
+        idx = np.asarray(indices)
+        t_ix = np.arange(self.cfg.num_tables)[None, :, None]
+        return self._owner_grid[t_ix, idx]
 
     def account(self, board_id: int, indices,
                 cache: Optional[RemoteRowCache] = None,
@@ -95,19 +126,26 @@ class FabricExchange:
         reuses a mask the caller already computed for this batch."""
         idx = np.asarray(indices)
         B, T, L = idx.shape
-        remote_tables = np.asarray(self.partition.owner) != board_id
-        remote_lookups = int(remote_tables.sum()) * B * L
+        remote = self.lookup_owners(idx) != board_id        # (B, T, L)
+        remote_lookups = int(remote.sum())
         if remote_lookups == 0:
             return ExchangeTraffic(B, 0, 0, 0, 0, 0.0, 0.0, 0.0)
         if hit is None:
             hit = (cache.hit_mask(idx) if cache is not None
                    else np.zeros_like(idx, bool))
-        miss = remote_tables[None, :, None] & ~hit
+        miss = remote & ~hit
         miss_rows = int(miss.sum())
         miss_bags = int(miss.any(axis=2).sum())
         cache_hits = remote_lookups - miss_rows
         bytes_out = miss_rows * self.index_bytes
-        bytes_in = miss_bags * self.cfg.embed_dim * self.elem_bytes
+        # whole tables ship one partially-pooled vector per missing bag;
+        # split tables ship raw rows (one vector per miss) — remote pooling
+        # of a row slice would break the bit-identity invariant
+        split = self._split_mask[None, :, None]
+        pooled_bags = int((miss & ~split).any(axis=2).sum())
+        raw_rows = int((miss & split).sum())
+        bytes_in = (pooled_bags + raw_rows) * self.cfg.embed_dim \
+            * self.elem_bytes
         t_link = fabric_exchange_time(bytes_out, bytes_in,
                                       self.partition.n_boards, self.link)
         return ExchangeTraffic(B, remote_lookups, cache_hits, miss_rows,

@@ -3,40 +3,59 @@ single board.
 
 `repro.cluster.Cluster` replicates — every board a full copy, so the
 fleet's servable model is capped by ONE board's memory. `ShardedFleet`
-partitions: each board owns a slice of the table set (plus a replicated
-copy of the small dense MLPs), and a query is served by two-level
+partitions: each board owns a slice of the ROW SPACE (whole tables, plus
+row ranges of tables too big for any board, per the `ShardMap`) and a
+replicated copy of the small dense MLPs. A query is served by two-level
 routing on the cluster's virtual-clock discipline:
 
   query  -> dense-owner board   (the existing Router policies:
                                  round_robin / jsq / p2c)
-  lookup -> table-owner boards  (the PartitionMap; owners run their
-                                 local Pallas bag reduction, pooled
-                                 vectors return over the modeled fabric)
+  lookup -> row-owner boards    (the ShardMap: whole-table owners run
+                                 their local Pallas bag reduction and
+                                 ship pooled vectors; owners of a SPLIT
+                                 table ship masked raw rows — pooling a
+                                 row slice remotely would change the fp
+                                 sum order — which the dense owner sums
+                                 and pools with the SAME bag kernel)
 
 One flushed batch's timeline on the virtual clock:
 
   start       = max(trigger, dense_owner.free)
-  parts ready = max over owners of (max(start, owner.free) + t_lookup)
-                -- owners look up in parallel, but a busy owner queues
+  parts ready = max over owners of (max(start, owner.free) + t_owner)
+                -- owners look up / gather in parallel, but a busy
+                owner queues
   done        = parts_ready + t_link(modeled: latency + bytes/bw +
                 topology, misses only -- the RemoteRowCache serves hot
-                remote rows locally) + t_dense (measured on the owner)
+                remote rows locally) + t_pool (split tables only)
+                + t_dense (measured on the owner)
 
 Lookup and dense SERVICE times are real device executions on each
 board's sub-mesh, exactly like `Replica.flush`; only the fabric term is
 modeled (CPU test boards share a host — there is no real inter-board
 wire to measure). Served values are bit-identical to one full board
-regardless of partition, cache state, or link (tests/test_fabric.py).
+regardless of partition, split granularity, cache state, or link
+(tests/test_fabric.py): every flush is padded to the capacity shape and
+the split-table path reuses the bag kernel on a (T_s, B*L, d)
+"fake table" of gathered rows, so the per-(sample, table) accumulation
+order is EXACTLY the reference kernel's.
 
-The run folds into a `FabricReport` — `ClusterReport`-compatible, plus
-cross-board bytes/query, the remote-row-cache hit ratio trajectory, and
-the share of service time stalled on the fabric link.
+An optional `SLAAutoscaler` makes the fleet ELASTIC: on sustained p99
+violation/slack it grows/shrinks the board count MID-TRACE via
+`fabric/elastic.expand_map` / `shrink_map`, executing the
+`MigrationPlan` (row ranges stream between boards; the virtual clock
+stalls `perf_model.repartition_time`; each surviving cache invalidates
+ONLY migrated rows). The bit-identity invariant holds across every
+re-partition because residency changes never change values.
+
+The run folds into a `FabricReport` — the shared `FleetReport` surface,
+plus cross-board bytes/query, the remote-row-cache hit trajectory, the
+link-stall share, and the migration ledger.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import ClassVar, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -48,21 +67,25 @@ from repro.core import dlrm as dlrm_lib
 from repro.core import perf_model
 from repro.core import tiered_embedding as te
 from repro.core.collectives import Interconnect
-from repro.cluster.cluster import ClusterReport
+from repro.cluster.autoscale import ScaleEvent, SLAAutoscaler
+from repro.cluster.cluster import FleetReport
 from repro.cluster.replica import slice_devices, submesh
 from repro.cluster.router import Router, make_router
 from repro.engine.batching import MicroBatcher, QueryFuture
 from repro.fabric.cache import RemoteRowCache
+from repro.fabric.elastic import expand_map, plan_migration, shrink_map
 from repro.fabric.exchange import ExchangeTraffic, FabricExchange
 from repro.core.planner import default_table_bytes
-from repro.fabric.partition import PartitionMap, partition_tables
+from repro.fabric.partition import ShardMap, partition_rows
 from repro.kernels import ops
 from repro.traffic.scenarios import QueryEvent, materialize_query
 
+RowRanges = Dict[int, List[Tuple[int, int]]]   # table -> [(row_lo, row_hi)]
+
 
 @dataclass(frozen=True)
-class FabricReport(ClusterReport):
-    """ClusterReport + the fabric-specific telemetry."""
+class FabricReport(FleetReport):
+    """FleetReport + the sharded fleet's telemetry."""
 
     n_boards: int = 0
     board_capacity_bytes: int = 0
@@ -75,6 +98,14 @@ class FabricReport(ClusterReport):
     remote_hit_last: Optional[float] = None
     link_stall_share: float = 0.0       # fabric seconds / service seconds
     cache_refreshes: int = 0
+    # elastic ledger: live re-partitions executed during the run
+    scale_events: Tuple[ScaleEvent, ...] = ()
+    migrations: int = 0
+    migrated_bytes: int = 0
+    migration_s: float = 0.0            # virtual seconds stalled migrating
+    cache_invalidated_rows: int = 0
+
+    tag: ClassVar[str] = "fabric"
 
     def summary(self) -> str:
         lines = [super().summary()]
@@ -92,36 +123,50 @@ class FabricReport(ClusterReport):
         lines.append(
             f"[fabric] {self.bytes_per_query:.0f} B/query on the wire, "
             f"link-stall {self.link_stall_share:.1%} of service;{hit}")
+        if self.migrations:
+            lines.append(
+                f"[fabric] elastic: {self.migrations} re-partitions, "
+                f"{self.migrated_bytes / 2**20:.2f} MiB migrated in "
+                f"{self.migration_s * 1e3:.2f}ms stall, "
+                f"{self.cache_invalidated_rows} cached rows invalidated")
+        for e in self.scale_events:
+            lines.append(
+                f"[fabric] scale {e.action} at t={e.t_s:.3f}s -> "
+                f"{e.n_replicas} boards (window p99 "
+                f"{e.window_p99_ms:.2f}ms, moved {e.remesh})")
         return "\n".join(lines)
 
 
 class FabricBoard:
-    """One board of a sharded fleet: its slice of the tables + a full
+    """One board of a sharded fleet: its slice of the row space + a full
     copy of the dense MLPs, on its own sub-mesh. Speaks the same
     queue-state protocol routers see on `cluster.Replica` (rid /
-    expected_wait_s / backlog / enqueue / deadline)."""
+    expected_wait_s / backlog / enqueue / deadline). Residency is
+    re-settable (`set_residency`) so a live re-partition can move row
+    ranges without rebuilding the board."""
 
     def __init__(self, rid: int, cfg: DLRMConfig, devices: Sequence,
-                 table_ids: Sequence[int], params, *,
+                 whole_tids: Sequence[int], split_ranges: RowRanges,
+                 params, tables_host: np.ndarray, *,
                  model_axis: int = 1, max_batch_queries: int = 4,
                  max_wait_ms: float = 2.0, service_scale: float = 1.0):
         self.rid = rid
         self.cfg = cfg
         self.devices = list(devices)
         self.mesh = submesh(self.devices, model_axis)
-        self.table_ids = np.asarray(sorted(table_ids), np.int32)
         self.service_scale = float(service_scale)
         sharding = jax.sharding.NamedSharding(
             self.mesh, jax.sharding.PartitionSpec())
+        self._sharding = sharding
         put = lambda x: jax.device_put(x, sharding)
-        # the board's resident state: ONLY its owned tables (the capacity
-        # claim) + the small dense params every board replicates
-        self.tables = put(params["tables"][self.table_ids])
+        self._put = put
         self.dense_params = jax.tree_util.tree_map(
             put, {"bot_mlp": params["bot_mlp"],
                   "top_mlp": params["top_mlp"]})
-        self._sharding = sharding
         self._lookup = jax.jit(ops.embedding_bag)
+        self._gather = jax.jit(
+            lambda rows, pos, mask: jnp.take(rows, pos, axis=0)
+            * mask[..., None].astype(rows.dtype))
         self._dense = jax.jit(
             lambda p, dense, pooled: jax.nn.sigmoid(
                 dlrm_lib.dlrm_forward_from_pooled(p, dense, pooled)))
@@ -130,9 +175,45 @@ class FabricBoard:
         self.busy_s = 0.0            # occupied window (incl. link stalls)
         self.lookup_busy_s = 0.0     # time spent serving OTHERS' lookups
         self.served = 0
+        self.spawned_at = 0.0        # virtual time this board came up
+        self.retired_at: Optional[float] = None
         self.batch_sizes: List[int] = []
         self._svc_ewma = 0.0
         self._compiled: set = set()
+        self.set_residency(whole_tids, split_ranges, tables_host)
+
+    # -- residency (re-settable: live re-partition moves row ranges) ---------
+    def set_residency(self, whole_tids: Sequence[int],
+                      split_ranges: RowRanges,
+                      tables_host: np.ndarray) -> None:
+        """Install this board's owned slice of the row space: whole tables
+        stacked (T_own, R, d) for the pooled bag path, split-table row
+        ranges as compact (n_owned, d) slices + their global row ids for
+        the masked-gather path. Only OWNED rows live on the board — the
+        capacity claim is real."""
+        R, d = tables_host.shape[1], tables_host.shape[2]
+        self.table_ids = np.asarray(sorted(int(t) for t in whole_tids),
+                                    np.int32)
+        self.tables = self._put(tables_host[self.table_ids]
+                                if self.table_ids.size
+                                else np.zeros((0, R, d), tables_host.dtype))
+        # table -> (sorted global row ids (n,), resident rows (n, d))
+        self.split_rows: Dict[int, Tuple[np.ndarray, jax.Array]] = {}
+        for t, ranges in sorted(split_ranges.items()):
+            row_ids = np.concatenate(
+                [np.arange(lo, hi, dtype=np.int64)
+                 for lo, hi in sorted(ranges)])
+            self.split_rows[int(t)] = (
+                row_ids, self._put(tables_host[int(t)][row_ids]))
+
+    @property
+    def resident_rows(self) -> int:
+        return (int(self.table_ids.size) * self.cfg.rows_per_table
+                + sum(len(ids) for ids, _ in self.split_rows.values()))
+
+    def resident_bytes(self, row_bytes: int) -> int:
+        """Embedding bytes on this board at the accounting precision."""
+        return self.resident_rows * row_bytes
 
     # -- queue state (what routers see) -------------------------------------
     def backlog(self, now: float) -> int:
@@ -149,14 +230,54 @@ class FabricBoard:
         return self.batcher.deadline()
 
     # -- real device executions ---------------------------------------------
-    def lookup(self, indices_local: jax.Array) -> Tuple[jax.Array, float]:
-        """Bag-reduce this board's owned tables for a batch slice:
+    def lookup(self, indices_local) -> Tuple[jax.Array, float]:
+        """Bag-reduce this board's whole owned tables for a batch slice:
         (B, T_own, L) indices already translated to owned-table order ->
         ((B, T_own, d) pooled part, measured seconds x service_scale)."""
+        indices_local = jnp.asarray(indices_local)
         key = ("lookup", indices_local.shape)
         args = (self.tables, jax.device_put(indices_local, self._sharding))
         if key not in self._compiled:
             self._lookup(*args).block_until_ready()   # compile untimed
+            self._compiled.add(key)
+        t0 = time.perf_counter()
+        pooled = self._lookup(*args)
+        pooled.block_until_ready()
+        return pooled, (time.perf_counter() - t0) * self.service_scale
+
+    def gather_rows(self, table: int, idx_bl: np.ndarray
+                    ) -> Tuple[jax.Array, float]:
+        """Masked gather of this board's resident rows of a SPLIT table:
+        (B, L) global row ids -> ((B, L, d) rows, seconds). Rows this
+        board does not own come back as exact 0.0 (value x 0.0) so the
+        dense owner's cross-owner sum reconstructs every row bit-exactly
+        (x + 0.0 == x); pooling happens there, in kernel order."""
+        row_ids, rows = self.split_rows[int(table)]
+        pos = np.searchsorted(row_ids, idx_bl)
+        pos_c = np.clip(pos, 0, len(row_ids) - 1)
+        mask = row_ids[pos_c] == idx_bl
+        key = ("gather", int(table), idx_bl.shape, len(row_ids))
+        args = (rows, self._put(pos_c.astype(np.int32)),
+                self._put(mask))
+        if key not in self._compiled:
+            self._gather(*args).block_until_ready()
+            self._compiled.add(key)
+        t0 = time.perf_counter()
+        out = self._gather(*args)
+        out.block_until_ready()
+        return out, (time.perf_counter() - t0) * self.service_scale
+
+    def pool_rows(self, fake_tables: np.ndarray, fake_idx: np.ndarray
+                  ) -> Tuple[jax.Array, float]:
+        """Pool reassembled split-table rows with the SAME bag kernel the
+        reference path runs: fake_tables (T_s, B*L, d) are the summed
+        gathered rows, fake_idx[b, s, l] = b*L + l, so the per-(b, t)
+        accumulation order (l = 0..L-1) is identical to a single full
+        board's — the bit-identity mechanism for split tables."""
+        key = ("pool", fake_tables.shape, fake_idx.shape)
+        args = (self._put(fake_tables), self._put(fake_idx))
+        if key not in self._compiled:
+            self._lookup(*args).block_until_ready()
             self._compiled.add(key)
         t0 = time.perf_counter()
         pooled = self._lookup(*args)
@@ -181,8 +302,8 @@ class FabricBoard:
 
     def pull(self, x) -> jax.Array:
         """Land an array on THIS board's devices — the executable face of
-        the fabric transfer (remote owners' pooled parts must live on the
-        dense owner's sub-mesh before it can reassemble and compute)."""
+        the fabric transfer (remote owners' parts must live on the dense
+        owner's sub-mesh before it can reassemble and compute)."""
         return jax.device_put(np.asarray(x), self._sharding)
 
     def note_service(self, window_s: float, n_queries: int) -> None:
@@ -208,9 +329,10 @@ class FabricBoard:
 
 
 class ShardedFleet:
-    """N boards collectively owning one partitioned table set; peer of
-    `cluster.Cluster` (same event loop, router policies, and report
-    shape) for the sharded axis of scale-in. See module docstring."""
+    """N boards collectively owning one row-range-partitioned table set;
+    peer of `cluster.Cluster` (same event loop, router policies, and
+    report surface) for the sharded axis of scale-in. Optionally elastic
+    via an `SLAAutoscaler`. See module docstring."""
 
     def __init__(self, cfg: DLRMConfig, *, n_boards: int = 2,
                  devices: Optional[Sequence] = None,
@@ -228,6 +350,8 @@ class ShardedFleet:
                  max_batch_queries: int = 4, max_wait_ms: float = 2.0,
                  query_size: Optional[int] = None,
                  router: Union[str, Router] = "round_robin",
+                 autoscaler: Optional[SLAAutoscaler] = None,
+                 min_shard_rows: int = 1,
                  service_scales: Optional[Sequence[float]] = None,
                  verbose: bool = False):
         if n_boards < 1:
@@ -242,70 +366,186 @@ class ShardedFleet:
         self.alpha = float(alpha)
         self.seed = int(seed)
         self.link = link if link is not None else perf_model.fabric_link()
+        self.min_shard_rows = int(min_shard_rows)
 
-        # -- partition: profiled access stats -> board ownership ------------
+        # -- partition: profiled access stats -> row-range ownership ---------
         self.row_freq = te.measure_row_freq(cfg, alpha, seed,
                                             n_batches=profile_batches)
-        table_freq = np.asarray(self.row_freq.sum(axis=1), np.float64)
         total_bytes = sum(default_table_bytes(cfg))
         if board_capacity_bytes is None:
             # tightest sensible default: the fair share + 25% headroom for
             # imbalance (callers proving the too-big-for-one-board claim
             # pass an explicit budget)
             board_capacity_bytes = int(np.ceil(1.25 * total_bytes / n_boards))
-        self.partition: PartitionMap = partition_tables(
-            cfg, table_freq, n_boards, board_capacity_bytes)
+        self.partition: ShardMap = partition_rows(
+            cfg, self.row_freq, n_boards, board_capacity_bytes,
+            min_shard_rows=self.min_shard_rows)
         if verbose:
             print(self.partition.summary())
         self.exchange = FabricExchange(cfg, self.partition, self.link)
 
         # -- boards: shared-seed params, sliced by ownership -----------------
-        params = dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg)
-        pool = list(devices) if devices is not None else list(jax.devices())
-        dpb = devices_per_board or max(
-            model_axis, model_axis * (len(pool) // (model_axis * n_boards)))
+        self._params = dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg)
+        self._tables_host = np.asarray(self._params["tables"])
+        self._pool = (list(devices) if devices is not None
+                      else list(jax.devices()))
+        self._dpb = devices_per_board or max(
+            model_axis,
+            model_axis * (len(self._pool) // (model_axis * n_boards)))
+        self._board_kw = dict(model_axis=model_axis,
+                              max_batch_queries=max_batch_queries,
+                              max_wait_ms=max_wait_ms)
         self.boards: List[FabricBoard] = [
-            FabricBoard(b, cfg, slice_devices(pool, b, dpb),
-                        self.partition.tables_of(b), params,
-                        model_axis=model_axis,
-                        max_batch_queries=max_batch_queries,
-                        max_wait_ms=max_wait_ms,
+            FabricBoard(b, cfg, slice_devices(self._pool, b, self._dpb),
+                        *self._residency_of(self.partition, b),
+                        self._params, self._tables_host,
                         service_scale=(service_scales[b]
-                                       if service_scales is not None else 1.0))
+                                       if service_scales is not None
+                                       else 1.0),
+                        **self._board_kw)
             for b in range(n_boards)]
 
         # -- per-board LFU caches of remote hot rows -------------------------
-        self.caches: List[RemoteRowCache] = []
-        for b in range(n_boards):
-            remote = [t for t in range(cfg.num_tables)
-                      if self.partition.owner[t] != b]
-            # default budget: ~10% of the row space the board does NOT own
-            # — small next to its owned slice, large next to the Zipf head
-            cap = (cache_rows if cache_rows is not None
-                   else int(np.ceil(0.1 * len(remote) * cfg.rows_per_table)))
-            cache = RemoteRowCache(
-                cfg, remote, capacity_rows=cap, enabled=cache_enabled,
-                window=cache_window,
-                refresh_threshold=cache_refresh_threshold,
-                cooldown_queries=cache_cooldown)
-            cache.warm(self.row_freq)
-            self.caches.append(cache)
+        self._cache_kw = dict(window=cache_window,
+                              refresh_threshold=cache_refresh_threshold,
+                              cooldown_queries=cache_cooldown)
+        self._cache_rows = cache_rows
+        self._cache_enabled_arg = bool(cache_enabled)
+        self.caches: List[RemoteRowCache] = [
+            self._make_cache(b, self.partition) for b in range(n_boards)]
         self.cache_enabled = bool(cache_enabled) and any(
             c.enabled for c in self.caches)
 
         self.router: Router = (router if isinstance(router, Router)
                                else make_router(router, seed))
+        self.autoscaler = autoscaler
         self.completed: Dict[int, QueryFuture] = {}
+        self.scale_events: List[ScaleEvent] = []
+        self._retired: List[FabricBoard] = []
+        self._migrated_bytes = 0
+        self._migration_s = 0.0
+        self._cache_invalidated = 0
 
     @property
     def n_boards(self) -> int:
         return len(self.boards)
 
+    # -- residency + cache plumbing ------------------------------------------
+    @staticmethod
+    def _residency_of(pm: ShardMap, rid: int
+                      ) -> Tuple[List[int], RowRanges]:
+        """(whole table ids, split-table row ranges) board `rid` owns."""
+        split = set(pm.split_tables)
+        whole = [t for t in pm.tables_of(rid) if t not in split]
+        ranges: RowRanges = {}
+        for t in split:
+            rr = [(s.row_lo, s.row_hi) for s in pm.table_shards(t)
+                  if s.board == rid]
+            if rr:
+                ranges[t] = sorted(rr)
+        return whole, ranges
+
+    def _make_cache(self, rid: int, pm: ShardMap) -> RemoteRowCache:
+        remote = ~pm.owned_mask(rid)
+        # default budget: ~10% of the row space the board does NOT own —
+        # small next to its owned slice, large next to the Zipf head
+        cap = (self._cache_rows if self._cache_rows is not None
+               else int(np.ceil(0.1 * int(remote.sum()))))
+        cache = RemoteRowCache(self.cfg, remote, capacity_rows=cap,
+                               enabled=self._cache_enabled_arg,
+                               **self._cache_kw)
+        cache.warm(self.row_freq)
+        return cache
+
+    # -- elastic re-partitioning ---------------------------------------------
+    def _board_seconds(self, now: float) -> float:
+        """Boards x live time so far (live boards since spawn + retired
+        boards' full spawn->retirement windows) — the cost axis the
+        elastic bench trades against SLA."""
+        live = sum(max(now - b.spawned_at, 0.0) for b in self.boards)
+        gone = sum(max((b.retired_at or now) - b.spawned_at, 0.0)
+                   for b in self._retired)
+        return live + gone
+
+    def _apply_map(self, new_map: ShardMap, now: float, action: str,
+                   window_p99: float) -> float:
+        """Execute the migration from self.partition to new_map on the
+        virtual clock: all boards quiesce, rows stream for
+        `repartition_time`, residency and caches update (invalidating
+        only migrated rows). Returns the migration end time."""
+        plan = plan_migration(self.partition, new_map)
+        stall = plan.time_s(self.link)
+        start = max([now] + [b.free for b in self.boards])
+        end = start + stall
+        invalidated = 0
+        for b in self.boards:
+            b.free = max(b.free, end)
+            b.busy_s += stall
+        self.partition = new_map
+        self.exchange = FabricExchange(self.cfg, new_map, self.link)
+        for b in self.boards:
+            whole, ranges = self._residency_of(new_map, b.rid)
+            b.set_residency(whole, ranges, self._tables_host)
+            invalidated += self.caches[b.rid].update_ownership(
+                ~new_map.owned_mask(b.rid))
+        cost = self._board_seconds(end)
+        if self.autoscaler is not None:
+            self.autoscaler.record_cost(end, cost)
+            self.autoscaler.record_migration(end, plan.bytes_moved, stall)
+        self.scale_events.append(ScaleEvent(
+            t_s=now, action=action, n_replicas=new_map.n_boards,
+            window_p99_ms=window_p99,
+            remesh={"moves": len(plan.moves),
+                    "rows_moved": plan.rows_moved,
+                    "bytes_moved": plan.bytes_moved,
+                    "cache_invalidated_rows": invalidated},
+            board_seconds=cost))
+        self._migrated_bytes += plan.bytes_moved
+        self._migration_s += stall
+        self._cache_invalidated += invalidated
+        if self.verbose:
+            print(f"[fabric] t={now:.3f}s scale {action.upper()} -> "
+                  f"{new_map.n_boards} boards: {plan.summary()[10:]} "
+                  f"stall {stall * 1e3:.2f}ms")
+        return end
+
+    def _scale_up(self, now: float, window_p99: float) -> None:
+        new_map = expand_map(self.partition, self.row_freq,
+                             min_shard_rows=self.min_shard_rows)
+        rid = len(self.boards)
+        board = FabricBoard(
+            rid, self.cfg, slice_devices(self._pool, rid, self._dpb),
+            [], {}, self._params, self._tables_host, **self._board_kw)
+        board.free = board.spawned_at = now
+        self.boards.append(board)
+        self.caches.append(self._make_cache(rid, new_map))
+        self._apply_map(new_map, now, "up", window_p99)
+
+    def _scale_down(self, now: float, window_p99: float) -> None:
+        # the victim is ALWAYS the last board (shrink_map retires the
+        # highest id so survivors keep their ids and resident rows);
+        # drain its queue before its rows leave
+        victim = self.boards[-1]
+        self._flush(victim, now)
+        try:
+            new_map = shrink_map(self.partition, self.row_freq,
+                                 min_shard_rows=self.min_shard_rows)
+        except ValueError:
+            return          # survivors can't absorb the rows; stay put
+        end = self._apply_map(new_map, max(now, victim.free), "down",
+                              window_p99)
+        victim.retired_at = end
+        self.boards.pop()
+        self.caches.pop()
+        self.router.replica_removed(self.boards)
+        self._retired.append(victim)
+
     def measure_service_time(self, n_queries: int = 1, repeats: int = 3,
                              ) -> float:
         """Median seconds of one capacity-shaped service round on board 0
-        (parallel owner lookups + dense forward; no link/cache terms) —
-        the per-batch service floor benches calibrate offered load from."""
+        (parallel owner lookups/gathers + split pooling + dense forward;
+        no link/cache terms) — the per-batch service floor benches
+        calibrate offered load from."""
         from repro.data import make_recsys_batch
         qs = [make_recsys_batch(self.cfg, s, self.seed, self.alpha,
                                 batch_size=self.query_size)
@@ -314,23 +554,58 @@ class ShardedFleet:
         while len(qs) < self.boards[0].batcher.capacity:
             qs.append(qs[0])
         dense = jnp.concatenate([q["dense"] for q in qs], axis=0)
-        idx = jnp.concatenate([q["indices"] for q in qs], axis=0)
+        idx = np.concatenate([np.asarray(q["indices"]) for q in qs], axis=0)
         times = []
         for _ in range(repeats):
-            t_owners = 0.0
-            parts = []
-            for o, tids in enumerate(self.exchange.tables_by_board):
-                if tids.size == 0:
-                    continue
-                pooled_o, t_o = self.boards[o].lookup(idx[:, tids, :])
-                parts.append(self.boards[0].pull(pooled_o))
-                t_owners = max(t_owners, t_o)
-            pooled = jnp.concatenate(parts, axis=1)[:, self.exchange.inv_perm, :]
+            pooled, owner_s, pool_s = self._owner_parts(self.boards[0], idx)
             _, t_dense = self.boards[0].dense_forward(dense, pooled)
-            times.append(t_owners + t_dense)
+            times.append(max(owner_s.values()) + pool_s + t_dense)
         return float(np.median(times))
 
     # -- one flushed batch ---------------------------------------------------
+    def _owner_parts(self, board: FabricBoard, idx: np.ndarray
+                     ) -> Tuple[jax.Array, Dict[int, float], float]:
+        """Run every owner's share of one capacity-shaped batch and
+        reassemble the (B, T, d) pooled tensor on `board`. Returns
+        (pooled, {owner rid: measured seconds}, split-pool seconds on
+        `board`). Virtual-clock composition is the caller's job."""
+        B, T, L = idx.shape
+        d = self.cfg.embed_dim
+        owner_s: Dict[int, float] = {}
+        parts: List[jax.Array] = []
+        for o, tids in enumerate(self.exchange.tables_by_board):
+            if tids.size == 0:
+                continue
+            pooled_o, t_o = self.boards[o].lookup(idx[:, tids, :])
+            parts.append(pooled_o if o == board.rid else board.pull(pooled_o))
+            owner_s[o] = owner_s.get(o, 0.0) + t_o
+        pool_s = 0.0
+        split_tids = self.exchange.split_tables
+        if split_tids.size:
+            fake_rows = []
+            for t in split_tids:
+                t = int(t)
+                # each owner contributes its resident rows, exact zeros
+                # elsewhere; x + 0.0 reconstructs every row bit-exactly
+                acc: Optional[np.ndarray] = None
+                owners = sorted({s.board for s in
+                                 self.partition.table_shards(t)})
+                for o in owners:
+                    part, t_g = self.boards[o].gather_rows(t, idx[:, t, :])
+                    owner_s[o] = owner_s.get(o, 0.0) + t_g
+                    pn = np.asarray(part)
+                    acc = pn if acc is None else acc + pn
+                fake_rows.append(acc.reshape(B * L, d))
+            fake_tables = np.stack(fake_rows)            # (T_s, B*L, d)
+            fake_idx = np.broadcast_to(
+                (np.arange(B, dtype=np.int32)[:, None, None] * L
+                 + np.arange(L, dtype=np.int32)[None, None, :]),
+                (B, len(split_tids), L)).copy()
+            pooled_split, pool_s = board.pool_rows(fake_tables, fake_idx)
+            parts.append(pooled_split)
+        pooled = jnp.concatenate(parts, axis=1)[:, self.exchange.inv_perm, :]
+        return pooled, owner_s, pool_s
+
     def _flush(self, board: FabricBoard, trigger: float) -> List[QueryFuture]:
         futs = board.batcher.drain()
         if not futs:
@@ -345,7 +620,8 @@ class ShardedFleet:
         while len(parts_q) < board.batcher.capacity:
             parts_q.append(parts_q[0])
         dense = jnp.concatenate([q["dense"] for q in parts_q], axis=0)
-        idx = jnp.concatenate([q["indices"] for q in parts_q], axis=0)
+        idx_np = np.concatenate([np.asarray(q["indices"]) for q in parts_q],
+                                axis=0)
 
         # one hit mask per query, shared between LFU scoring and wire
         # accounting (the election cannot change between the two — refresh
@@ -360,27 +636,22 @@ class ShardedFleet:
             hit=np.concatenate(hits, axis=0))
         cache.maybe_refresh(trigger)
 
-        # owners bag-reduce their slices (board.rid's own slice included);
-        # a busy owner queues the request behind its horizon
+        # owners bag-reduce / gather their slices (board.rid's own share
+        # included); a busy owner queues the request behind its horizon
         start = max(trigger, board.free)
-        parts: List[jax.Array] = []
+        pooled, owner_s, pool_s = self._owner_parts(board, idx_np)
         parts_ready = start
-        for o, tids in enumerate(self.exchange.tables_by_board):
-            if tids.size == 0:
-                continue
+        for o, t_o in owner_s.items():
             owner = self.boards[o]
-            pooled_o, t_o = owner.lookup(idx[:, tids, :])
-            parts.append(pooled_o if o == board.rid else board.pull(pooled_o))
             begin = start if o == board.rid else max(start, owner.free)
             done_o = begin + t_o
             parts_ready = max(parts_ready, done_o)
             if o != board.rid:
                 owner.free = max(owner.free, done_o)
                 owner.lookup_busy_s += t_o
-        pooled = jnp.concatenate(parts, axis=1)[:, self.exchange.inv_perm, :]
 
         probs, t_dense = board.dense_forward(dense, pooled)
-        done = parts_ready + traffic.t_link_s + t_dense
+        done = parts_ready + traffic.t_link_s + pool_s + t_dense
         window = done - start
         board.free = done
         board.busy_s += window
@@ -399,6 +670,17 @@ class ShardedFleet:
             f.complete(p, done)
             self.completed[f.qid] = f
             self._lat_ms.append(f.latency_ms)
+
+        if self.autoscaler is not None:
+            decision = self.autoscaler.observe(
+                [f.latency_ms for f in futs], now=done,
+                n_replicas=len(self.boards))
+            if decision is not None:
+                action, p99 = decision
+                if action == "up":
+                    self._scale_up(done, p99)
+                else:
+                    self._scale_down(done, p99)
         return futs
 
     # -- event loop ----------------------------------------------------------
@@ -406,7 +688,8 @@ class ShardedFleet:
             percentile: float = 99.0, scenario: str = "trace"
             ) -> FabricReport:
         """Serve one event stream to completion on the merged virtual
-        clock — the cluster event loop with two-level routing."""
+        clock — the cluster event loop with two-level routing (and, when
+        an autoscaler is wired, live re-partitioning)."""
         if not events:
             raise ValueError("fleet run needs at least one event")
         self._lat_ms: List[float] = []
@@ -416,6 +699,12 @@ class ShardedFleet:
         self._link_s = 0.0
         self._last_done = 0.0
         self.completed = {}
+        self.scale_events = []
+        self._retired = []
+        self._migrated_bytes = 0
+        self._migration_s = 0.0
+        self._cache_invalidated = 0
+        n_start = len(self.boards)
         i = 0
         while i < len(events) or any(b.batcher.queue for b in self.boards):
             next_arr = events[i].arrival_s if i < len(events) else float("inf")
@@ -452,19 +741,20 @@ class ShardedFleet:
             hit_last = float(np.mean(hs[-k:]))
         return FabricReport(
             scenario=scenario, router=self.router.name,
-            n_queries=len(events), n_replicas_start=self.n_boards,
-            n_replicas_end=self.n_boards, offered_qps=offered,
+            n_queries=len(events), n_replicas_start=n_start,
+            n_replicas_end=len(self.boards), offered_qps=offered,
             achieved_qps=len(events) / makespan,
             p50_ms=p50, p90_ms=p90, p99_ms=p99, percentile=percentile,
             ppf_ms=ppf, sla_ms=sla_ms, ok=ppf <= sla_ms,
             mean_batch_queries=(float(np.mean(self._batch_sizes))
                                 if self._batch_sizes else 0.0),
             makespan_s=makespan,
-            replicas=tuple(b.stats(makespan) for b in self.boards),
+            replicas=tuple(b.stats(makespan)
+                           for b in self.boards + self._retired),
             predicted_qps=None,
-            board_seconds=self.n_boards * makespan,
+            board_seconds=self._board_seconds(makespan),
             sla_violations=int((lat > sla_ms).sum()),
-            n_boards=self.n_boards,
+            n_boards=len(self.boards),
             board_capacity_bytes=self.partition.board_capacity_bytes,
             model_bytes=self.partition.total_bytes,
             fits_one_board=(self.partition.total_bytes
@@ -477,4 +767,9 @@ class ShardedFleet:
             remote_hit_first=hit_first, remote_hit_last=hit_last,
             link_stall_share=(self._link_s / self._service_s
                               if self._service_s > 0 else 0.0),
-            cache_refreshes=sum(len(c.refreshes) for c in self.caches))
+            cache_refreshes=sum(len(c.refreshes) for c in self.caches),
+            scale_events=tuple(self.scale_events),
+            migrations=len(self.scale_events),
+            migrated_bytes=self._migrated_bytes,
+            migration_s=self._migration_s,
+            cache_invalidated_rows=self._cache_invalidated)

@@ -100,10 +100,19 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--router", default="round_robin",
                     help="routing policy: round_robin, jsq, p2c")
     ap.add_argument("--autoscale", action="store_true",
-                    help="SLA-driven autoscaling: add replicas on sustained "
-                         "p99 violation (params re-placed via remesh_tree), "
-                         "drop them on sustained slack")
+                    help="SLA-driven autoscaling: add boards on sustained "
+                         "p99 violation, drop them on sustained slack. "
+                         "Replicated fleets re-place params via remesh_tree; "
+                         "sharded fleets re-partition row ranges LIVE "
+                         "(fabric.elastic MigrationPlan)")
+    ap.add_argument("--autoscale-sla-ms", type=float, default=None,
+                    help="p99 threshold the autoscaler reacts to; default "
+                         "--sla-ms (set lower to scale before the report "
+                         "SLA is at risk)")
     ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--min-replicas", type=int, default=1,
+                    help="autoscaler floor (sharded fleets shrink by "
+                         "retiring boards down to this)")
     ap.add_argument("--record-trace", default=None, metavar="PATH",
                     help="write the generated scenario events as a JSONL "
                          "trace before serving")
@@ -145,17 +154,13 @@ def main(argv: Optional[list] = None) -> int:
 def _fabric_main(args, cfg) -> int:
     """Sharded-fleet path: one partitioned model over --replicas boards,
     lookups routed to owners over the modeled fabric (repro.fabric)."""
+    from repro.cluster import SLAAutoscaler
     from repro.core.perf_model import fabric_link
     from repro.fabric import fits_one_board
     from repro.traffic import load_trace, make_scenario, record_trace
 
     if args.replicas < 1:
         raise SystemExit("--replicas must be >= 1")
-    if args.autoscale:
-        raise SystemExit(
-            "--autoscale is a replicated-fleet feature; growing a sharded "
-            "fleet means re-partitioning live tables across boards "
-            "(ROADMAP: sharded fleet autoscaling)")
     cap = (int(args.board_capacity_mb * 2 ** 20)
            if args.board_capacity_mb is not None else None)
     # resolve the scenario BEFORE building the fleet (the _cluster_main
@@ -180,6 +185,13 @@ def _fabric_main(args, cfg) -> int:
         args.alpha = 1.05
         print("[serve] zipf_drift with --alpha 0: using alpha=1.05 "
               "(uniform streams have no hot rows to drift)")
+    autoscaler = None
+    if args.autoscale:
+        # the elastic threshold may sit BELOW the report SLA: scale when
+        # latency degrades, not only once the SLA is already violated
+        autoscaler = SLAAutoscaler(
+            args.autoscale_sla_ms or args.sla_ms,
+            min_replicas=args.min_replicas, max_replicas=args.max_replicas)
     engine = Engine(cfg, seed=args.seed, alpha=args.alpha, verbose=True)
     fleet = engine.sharded_fleet(
         n_boards=args.replicas, board_capacity_bytes=cap,
@@ -189,7 +201,7 @@ def _fabric_main(args, cfg) -> int:
                        or args.fabric_cache_rows > 0),
         max_batch_queries=args.max_batch_queries,
         max_wait_ms=args.max_wait_ms, router=args.router,
-        model_axis=args.model_axis)
+        model_axis=args.model_axis, autoscaler=autoscaler)
     if not fits_one_board(cfg, fleet.partition.board_capacity_bytes):
         print(f"[serve] table set "
               f"({fleet.partition.total_bytes / 2**20:.2f} MiB) exceeds one "
@@ -251,7 +263,9 @@ def _cluster_main(args, cfg, full_cfg) -> int:
         # drift erodes the frequency-elected fast tier; monitor + refresh
         monitor = HitRatioMonitor(cfg, alpha=args.alpha, seed=args.seed,
                                   model_cfg=full_cfg)
-    autoscaler = (SLAAutoscaler(args.sla_ms, max_replicas=args.max_replicas)
+    autoscaler = (SLAAutoscaler(args.autoscale_sla_ms or args.sla_ms,
+                                min_replicas=args.min_replicas,
+                                max_replicas=args.max_replicas)
                   if args.autoscale else None)
     cluster = Cluster(
         cfg, n_replicas=args.replicas, model_axis=args.model_axis,

@@ -1,0 +1,391 @@
+"""repro.fabric row-range sharding + live elastic re-partitioning.
+
+The invariants this PR's layer must hold:
+
+  * a table LARGER than any board — unservable at whole-table
+    granularity — splits into row ranges and the fleet serves it
+    bit-identically to a hypothetical single board big enough to hold
+    it, cache on and off (THE acceptance criterion);
+  * `expand_map` / `shrink_map` produce balanced covering maps;
+    `plan_migration` moves exactly the changed-owner rows (bytes_moved
+    is the provable floor) and prices the stall via
+    `perf_model.repartition_time`;
+  * `RemoteRowCache.update_ownership` invalidates ONLY rows whose
+    remote-status changed — a re-partition must not cold-start the
+    whole cache;
+  * an `SLAAutoscaler`-driven fleet grows mid-trace under a flash
+    crowd and shrinks under slack (victim = last board, drained,
+    retired with a timestamp, board-seconds stop accruing) with ZERO
+    output drift in either direction.
+"""
+import dataclasses
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_dlrm
+from repro.traffic import make_scenario
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cfg(**kw):
+    return dataclasses.replace(
+        get_dlrm("dlrm-rm2-small-unsharded").reduced(), batch_size=8, **kw)
+
+
+def _covers(pm):
+    """Every table's [0, R) covered exactly once by pm.shards."""
+    for t in range(pm.num_tables):
+        ts = sorted(pm.table_shards(t), key=lambda s: s.row_lo)
+        assert ts[0].row_lo == 0 and ts[-1].row_hi == pm.rows_per_table
+        for a, b in zip(ts, ts[1:]):
+            assert a.row_hi == b.row_lo, (t, a, b)
+
+
+# ---------------------------------------------------------------------------
+# Row-range partition (unit)
+# ---------------------------------------------------------------------------
+def test_partition_rows_splits_oversized_table():
+    from repro.fabric import partition_rows, partition_tables
+
+    cfg = _cfg(num_tables=1, rows_per_table=768)
+    cap = 512 * cfg.embed_dim * 2            # table is 1.5x one board
+    with pytest.raises(ValueError, match="does not fit the fleet"):
+        partition_tables(cfg, np.ones(1), 2, cap)
+    pm = partition_rows(cfg, np.ones(1), 2, cap)
+    _covers(pm)
+    assert pm.split_tables == (0,) and pm.whole_tables == ()
+    assert max(pm.board_bytes) <= cap
+    assert sum(pm.board_bytes) == pm.total_bytes == cfg.embedding_bytes
+    # per-table owner is undefined for a split map — routing goes by row
+    with pytest.raises(ValueError, match="row-range split"):
+        pm.owner
+    cuts, owners = pm.owner_cuts(0)
+    assert cuts[0] == 0 and len(cuts) == len(owners) == 2
+    assert pm.owner_of(0, 0) != pm.owner_of(0, 767)
+    masks = [pm.owned_mask(b) for b in range(2)]
+    assert (masks[0] ^ masks[1]).all()       # exact 2-coloring of the rows
+    # the true floor: raise only when a min_shard_rows range fits nowhere
+    with pytest.raises(ValueError, match="row-range split"):
+        partition_rows(cfg, np.ones(1), 2, cap, min_shard_rows=600)
+
+
+def test_partition_rows_per_row_freq_prices_shards():
+    from repro.fabric import partition_rows
+
+    cfg = _cfg(num_tables=1, rows_per_table=768)
+    cap = 512 * cfg.embed_dim * 2
+    freq = np.zeros((1, 768))
+    freq[0, :100] = 1.0                      # all mass in the head
+    pm = partition_rows(cfg, freq, 2, cap)
+    head = pm.owner_of(0, 0)
+    assert pm.board_load[head] == pytest.approx(100.0)
+    other = 1 - head
+    assert pm.board_load[other] == pytest.approx(0.0)
+
+
+def test_shard_map_summary_warns_near_capacity():
+    from repro.fabric import partition_rows
+
+    cfg = _cfg(num_tables=1, rows_per_table=768)
+    row_b = cfg.embed_dim * 2
+    cap = 400 * row_b                        # peak fill 768/2/400 = 96%
+    pm = partition_rows(cfg, np.ones(1), 2, cap)
+    fill, board = pm.peak_fill()
+    assert fill > 0.95
+    with pytest.warns(RuntimeWarning, match="overflow"):
+        s = pm.summary()
+    assert "WARNING" in s and f"b{board}" in s
+    # a comfortable map stays quiet
+    import warnings as _w
+    roomy = partition_rows(cfg, np.ones(1), 2, 2 * 768 * row_b)
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        assert "WARNING" not in roomy.summary()
+
+
+# ---------------------------------------------------------------------------
+# Elastic transforms (unit, deterministic)
+# ---------------------------------------------------------------------------
+def _zipf_pm(n_boards=2, num_tables=8, cap_boards=None):
+    """(cfg, per-row Zipf freq, map); capacity sized for `cap_boards`
+    boards (default n_boards) so shrink tests leave survivor headroom."""
+    from repro.fabric import partition_rows
+
+    cfg = _cfg(num_tables=num_tables)
+    rank = np.arange(1, cfg.rows_per_table + 1, dtype=np.float64)
+    freq = np.broadcast_to(rank ** -1.05, (num_tables, cfg.rows_per_table))
+    freq = freq / freq.sum()
+    cap = int(np.ceil(1.25 * cfg.embedding_bytes
+                      / (cap_boards or n_boards)))
+    return cfg, freq, partition_rows(cfg, freq, n_boards, cap)
+
+
+def test_expand_map_balances_onto_new_board():
+    from repro.fabric import expand_map
+
+    cfg, freq, pm = _zipf_pm(n_boards=2)
+    grown = expand_map(pm, freq)
+    _covers(grown)
+    assert grown.n_boards == 3
+    # the new board carries a real share and nobody is stripped bare
+    total = sum(grown.board_load)
+    assert grown.board_load[2] > 0.15 * total
+    assert all(l > 0 for l in grown.board_load)
+    assert grown.load_balance() < 1.5
+    assert all(b <= pm.board_capacity_bytes for b in grown.board_bytes)
+    # byte accounting still exact
+    assert sum(grown.board_bytes) == pm.total_bytes
+
+
+def test_shrink_map_retires_last_board_only():
+    from repro.fabric import expand_map, shrink_map
+
+    cfg, freq, pm = _zipf_pm(n_boards=3, cap_boards=2)
+    shrunk = shrink_map(pm, freq)
+    _covers(shrunk)
+    assert shrunk.n_boards == 2
+    assert all(s.board < 2 for s in shrunk.shards)
+    # survivors keep every row they had: only the victim's rows moved
+    from repro.fabric import plan_migration
+    plan = plan_migration(pm, shrunk)
+    assert all(m.src == 2 for m in plan.moves)
+    assert plan.rows_moved == sum(s.n_rows for s in pm.shards_of(2))
+    # and it refuses when the survivors genuinely cannot absorb the rows
+    cfg1 = _cfg(num_tables=1, rows_per_table=768)
+    from repro.fabric import partition_rows
+    tight = partition_rows(cfg1, np.ones(1), 2, 512 * cfg1.embed_dim * 2)
+    with pytest.raises(ValueError, match="cannot shrink"):
+        shrink_map(tight)
+    with pytest.raises(ValueError, match="1-board"):
+        shrink_map(partition_rows(cfg1, np.ones(1), 1,
+                                  cfg1.embedding_bytes))
+    # round trip: expand then shrink lands back on 2 covering boards
+    back = shrink_map(expand_map(pm, freq), freq)
+    _covers(back)
+    assert back.n_boards == 3 - 1 + 1 - 1 + 1 == pm.n_boards
+
+
+def test_plan_migration_moves_exactly_changed_rows():
+    from repro.fabric import expand_map, plan_migration
+    from repro.fabric.elastic import owner_grid
+
+    cfg, freq, pm = _zipf_pm(n_boards=2)
+    grown = expand_map(pm, freq)
+    plan = plan_migration(pm, grown)
+    g_old, g_new = owner_grid(pm), owner_grid(grown)
+    changed = int((g_old != g_new).sum())
+    assert plan.rows_moved == changed > 0
+    # bytes_moved == bytes of changed-owner rows, the bench's bound
+    assert plan.bytes_moved == changed * cfg.embed_dim * 2
+    # moves are disjoint, land where the new map says, send==recv totals
+    seen = set()
+    for m in plan.moves:
+        for r in range(m.row_lo, m.row_hi):
+            assert (m.table, r) not in seen
+            seen.add((m.table, r))
+            assert g_old[m.table, r] == m.src != m.dst == g_new[m.table, r]
+    assert sum(plan.per_board_send_bytes) == plan.bytes_moved
+    assert sum(plan.per_board_recv_bytes) == plan.bytes_moved
+    # everything streams INTO the new board on an expand
+    assert plan.per_board_recv_bytes[2] == plan.bytes_moved
+    # identical maps -> empty plan, zero time
+    from repro.core.perf_model import fabric_link
+    null = plan_migration(pm, pm)
+    assert null.moves == () and null.bytes_moved == 0
+    assert null.time_s(fabric_link()) == 0.0
+    assert "2->3 boards" in plan.summary()
+    with pytest.raises(ValueError, match="different models"):
+        plan_migration(pm, _zipf_pm(num_tables=4)[2])
+
+
+def test_repartition_time_terms():
+    from repro.core.perf_model import fabric_link, repartition_time
+
+    link = fabric_link(2.0, 50.0)            # 2us, 50 GB/s
+    # busiest endpoint (send+recv through one port) + one latency round
+    t = repartition_time([1e6, 0.0], [0.0, 1e6], link)
+    assert t == pytest.approx(2 * 2e-6 + 1e6 / 50e9)
+    # a port both sending and receiving serializes its two streams
+    assert repartition_time([1e6, 0.0], [5e5, 5e5], link) \
+        == pytest.approx(2 * 2e-6 + 1.5e6 / 50e9)
+    # streams at distinct endpoints overlap: busiest-port time only
+    assert repartition_time([1e6, 0.0, 0.0], [0.0, 5e5, 5e5], link) \
+        == pytest.approx(2 * 2e-6 + 1e6 / 50e9)
+    assert repartition_time([0.0], [0.0], link) == 0.0
+    with pytest.raises(ValueError):
+        repartition_time([1.0], [1.0, 2.0], link)
+
+
+def test_cache_update_ownership_invalidates_only_changed_rows():
+    from repro.core import tiered_embedding as te
+    from repro.fabric import RemoteRowCache
+
+    cfg = _cfg()
+    freq = te.measure_row_freq(cfg, alpha=1.2, seed=0, n_batches=4)
+    remote = np.zeros((cfg.num_tables, cfg.rows_per_table), bool)
+    remote[:4] = True
+    cache = RemoteRowCache(cfg, remote, capacity_rows=64)
+    cache.warm(freq)
+    cached_before = cache._cached.copy()
+    assert cached_before.any()
+
+    # migration: table 0's rows become local, table 4's become remote
+    new_remote = remote.copy()
+    new_remote[0] = False
+    new_remote[4] = True
+    n = cache.update_ownership(new_remote)
+    assert n == 2 * cfg.rows_per_table
+    # untouched tables keep their cached rows — no fleet-wide cold start
+    np.testing.assert_array_equal(cache._cached[1:4], cached_before[1:4])
+    assert not cache._cached[0].any() and not cache._cached[4].any()
+    assert cache.remote_tables == (1, 2, 3, 4)
+    # no-op ownership change invalidates nothing
+    assert cache.update_ownership(new_remote) == 0
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance criterion: an unservable table, served bit-identically
+# ---------------------------------------------------------------------------
+def test_split_table_serving_bit_identical_to_full_board():
+    """One table 1.5x a board's capacity: `partition_tables` proves it
+    unservable at whole-table granularity, then a 2-board row-range
+    fleet serves it BIT-IDENTICALLY to a single board big enough to
+    hold the whole model — remote cache on and off."""
+    from repro.fabric import ShardedFleet, partition_tables
+
+    cfg = _cfg(num_tables=1, rows_per_table=768)
+    cap = 512 * cfg.embed_dim * 2
+    with pytest.raises(ValueError, match="does not fit the fleet"):
+        partition_tables(cfg, np.ones(1), 2, cap)
+
+    events = make_scenario("stationary", alpha=1.05).events(
+        20, qps=1000.0, seed=3)
+    ref = ShardedFleet(cfg, n_boards=1, alpha=1.05,
+                       board_capacity_bytes=cfg.embedding_bytes,
+                       max_batch_queries=2)
+    ref.run(events, sla_ms=1e6)
+
+    wire = {}
+    for cache_on in (True, False):
+        fleet = ShardedFleet(cfg, n_boards=2, alpha=1.05,
+                             board_capacity_bytes=cap, max_batch_queries=2,
+                             cache_enabled=cache_on)
+        assert fleet.partition.split_tables == (0,)
+        assert max(fleet.partition.board_bytes) <= cap
+        for b in fleet.boards:               # the capacity claim is real
+            assert b.resident_bytes(cfg.embed_dim * 2) <= cap
+        r = fleet.run(events, sla_ms=1e6)
+        assert not r.fits_one_board and r.bytes_per_query > 0
+        wire[cache_on] = r.bytes_per_query
+        for ev in events:
+            got = fleet.completed[ev.qid].probs
+            want = ref.completed[ev.qid].probs
+            assert np.array_equal(got, want), (
+                f"qid={ev.qid} cache={cache_on} "
+                f"max|d|={np.max(np.abs(got - want))}")
+    assert wire[True] < wire[False]          # the cache still saves wire
+
+
+# ---------------------------------------------------------------------------
+# Live elastic re-partitioning, end to end
+# ---------------------------------------------------------------------------
+def test_elastic_scale_up_bit_identical_under_flash_crowd():
+    """Flash crowd drives the autoscaler: the fleet grows mid-trace via
+    MigrationPlan (bytes metered = changed-owner rows exactly) and every
+    served value matches the static fleet bit for bit."""
+    from repro.cluster.autoscale import SLAAutoscaler
+    from repro.fabric import ShardedFleet
+
+    cfg = _cfg()
+    events = make_scenario("flash_crowd", alpha=1.05).events(
+        80, qps=800.0, seed=5)
+    ref = ShardedFleet(cfg, n_boards=2, alpha=1.05, max_batch_queries=2)
+    ref.run(events, sla_ms=1e6)
+
+    auto = SLAAutoscaler(0.5, min_replicas=2, max_replicas=4, window=8,
+                         patience=1, cooldown_s=0.005)
+    fleet = ShardedFleet(cfg, n_boards=2, alpha=1.05, max_batch_queries=2,
+                         autoscaler=auto)
+    r = fleet.run(events, sla_ms=1e6, scenario="flash_crowd")
+    assert r.migrations == len(r.scale_events) > 0, "autoscaler never fired"
+    assert any(e.action == "up" for e in r.scale_events)
+    assert r.n_replicas_end > r.n_replicas_start == 2
+    assert r.migrated_bytes > 0 and r.migration_s > 0
+    row_b = cfg.embed_dim * 2
+    for e in r.scale_events:                 # minimal-movement bound
+        assert e.remesh["bytes_moved"] == e.remesh["rows_moved"] * row_b
+    assert r.migrated_bytes == sum(
+        e.remesh["bytes_moved"] for e in r.scale_events)
+    # the policy object kept the ledger the economics plots read
+    assert len(auto.migration_log) == r.migrations
+    assert sum(b for _, b, _ in auto.migration_log) == r.migrated_bytes
+    assert "re-partitions" in r.summary()
+    for ev in events:                        # zero output drift
+        np.testing.assert_array_equal(
+            fleet.completed[ev.qid].probs, ref.completed[ev.qid].probs,
+            err_msg=f"qid={ev.qid}")
+
+
+def test_elastic_scale_down_retires_board_and_saves_board_seconds():
+    """Sustained slack shrinks the fleet: the LAST board drains, its rows
+    re-deal to survivors, it retires with a timestamp — board-seconds
+    stop accruing — and outputs still match the static fleet exactly."""
+    from repro.cluster.autoscale import SLAAutoscaler
+    from repro.fabric import ShardedFleet
+
+    cfg = _cfg()
+    events = make_scenario("stationary", alpha=1.05).events(
+        60, qps=500.0, seed=5)
+    ref = ShardedFleet(cfg, n_boards=2, alpha=1.05, max_batch_queries=2,
+                       board_capacity_bytes=cfg.embedding_bytes)
+    ref.run(events, sla_ms=1e6)
+
+    auto = SLAAutoscaler(1e6, min_replicas=1, max_replicas=2, window=8,
+                         patience=1, cooldown_s=0.005)
+    fleet = ShardedFleet(cfg, n_boards=2, alpha=1.05, max_batch_queries=2,
+                         board_capacity_bytes=cfg.embedding_bytes,
+                         autoscaler=auto)
+    r = fleet.run(events, sla_ms=1e6)
+    assert any(e.action == "down" for e in r.scale_events)
+    assert r.n_replicas_end == 1
+    assert len(fleet.boards) == 1 and fleet.boards[0].rid == 0
+    assert fleet._retired and fleet._retired[0].retired_at is not None
+    assert r.board_seconds < 2 * r.makespan_s
+    # the retired board still appears in the report's replica stats
+    assert len(r.replicas) == 2
+    for ev in events:
+        np.testing.assert_array_equal(
+            fleet.completed[ev.qid].probs, ref.completed[ev.qid].probs,
+            err_msg=f"qid={ev.qid}")
+
+
+# ---------------------------------------------------------------------------
+# Shared report surface (satellite: one FleetReport base)
+# ---------------------------------------------------------------------------
+def test_fleet_report_base_is_shared():
+    from repro.cluster.cluster import ClusterReport, FleetReport
+    from repro.fabric import FabricReport
+
+    assert issubclass(ClusterReport, FleetReport)
+    assert issubclass(FabricReport, FleetReport)
+    assert ClusterReport.tag == "cluster" and FabricReport.tag == "fabric"
+    r = FleetReport(scenario="s", router="rr", n_queries=1,
+                    n_replicas_start=1, n_replicas_end=1, offered_qps=1.0,
+                    achieved_qps=1.0, p50_ms=1.0, p90_ms=1.0, p99_ms=1.0,
+                    percentile=99.0, ppf_ms=1.0, sla_ms=50.0, ok=True,
+                    mean_batch_queries=1.0, makespan_s=1.0, replicas=(),
+                    predicted_qps=None, board_seconds=2.0, sla_violations=0)
+    s = r.summary()
+    assert "[fleet]" in s and "board-seconds" in s
+
+
+def test_bench_elastic_registered():
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    from benchmarks import run as bench_run
+
+    assert "elastic" in {name for name, _ in bench_run.SECTIONS}

@@ -96,9 +96,11 @@ def test_remote_row_cache_lfu_and_drift_refresh():
                            refresh_threshold=0.7, cooldown_queries=10)
     base = cache.warm(freq)
     assert 0.0 < base <= 1.0 and 0 < cache.cached_rows <= 64
-    # stats are compact: one row of state per REMOTE table, none for the
-    # tables the board owns — and hit_mask never claims a local lookup
-    assert cache._cached.shape == (4, cfg.rows_per_table)
+    # stats are keyed by global (table, row) — granularity-agnostic since
+    # the row-range refactor — and hit_mask never claims a local lookup
+    assert cache._cached.shape == (cfg.num_tables, cfg.rows_per_table)
+    assert not cache._cached[4:].any()   # only remote rows ever cached
+    assert cache.remote_tables == (0, 1, 2, 3)
     every_row = np.broadcast_to(
         np.arange(cfg.rows_per_table)[None, None, :],
         (1, cfg.num_tables, cfg.rows_per_table)).astype(np.int32)
