@@ -1,0 +1,50 @@
+"""Benchmark artifact emission: `BENCH_<name>.json` at the repo root.
+
+Every benchmark section that supports `--emit-json` funnels through
+`write_bench_json`: the claims it judged (name / ok / detail), the scalar
+measurements behind them, and the git revision that produced the numbers.
+The artifact is the bench's committable receipt — CI and the README point
+at it instead of re-quoting numbers that drift.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+from typing import Any, Dict, List, Optional, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (name, ok, detail) — detail is the WIN / FAILED CLAIM line's substance
+Claim = Tuple[str, bool, str]
+
+
+def git_rev() -> str:
+    """The current commit hash, or "unknown" outside a git checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or "unknown"
+    except OSError:
+        return "unknown"
+
+
+def write_bench_json(name: str, claims: List[Claim],
+                     scalars: Dict[str, Any],
+                     out_dir: Optional[str] = None) -> str:
+    """Write `BENCH_<name>.json` and return its path."""
+    payload = {
+        "bench": name,
+        "git_rev": git_rev(),
+        "ok": all(ok for _, ok, _ in claims),
+        "claims": [{"name": n, "ok": ok, "detail": d}
+                   for n, ok, d in claims],
+        "scalars": scalars,
+    }
+    path = os.path.join(out_dir or REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[{name}] wrote {path}")
+    return path

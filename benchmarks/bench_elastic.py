@@ -67,6 +67,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="k: the fleet breathes between k and 2k boards")
     ap.add_argument("--trace-dir", default=None,
                     help="where the JSONL trace lands (default: a tmp dir)")
+    ap.add_argument("--emit-json", action="store_true",
+                    help="write BENCH_elastic.json at the repo root")
     args = ap.parse_args(argv)
 
     n = 120 if args.tiny else args.queries
@@ -122,53 +124,79 @@ def main(argv: Optional[List[str]] = None) -> int:
     r = fleet.run(events, sla_ms=1e6, scenario="diurnal")
     print(r.summary())
 
+    claims = []
+
     # ---- (a) breathing -----------------------------------------------------
     ups = [e for e in r.scale_events if e.action == "up"]
     downs = [e for e in r.scale_events if e.action == "down"]
-    if ups and downs:
-        print(f"WIN breathing: {len(ups)} scale-up(s) + {len(downs)} "
-              f"scale-down(s), peak fleet "
-              f"{max(e.n_replicas for e in r.scale_events)} boards, "
-              f"{r.migrated_bytes} B migrated in "
-              f"{r.migration_s * 1e3:.2f} ms of stall")
+    ok = bool(ups and downs)
+    detail = (f"{len(ups)} scale-up(s) + {len(downs)} scale-down(s), "
+              f"peak fleet "
+              f"{max((e.n_replicas for e in r.scale_events), default=k)} "
+              f"boards, {r.migrated_bytes} B migrated in "
+              f"{r.migration_s * 1e3:.2f} ms of stall" if ok else
+              f"{len(ups)} ups / {len(downs)} downs (need >= 1 of each)")
+    claims.append(("breathing", ok, detail))
+    if ok:
+        print(f"WIN breathing: {detail}")
     else:
-        failures.append(f"breathing: {len(ups)} ups / {len(downs)} downs "
-                        f"(need >= 1 of each)")
+        failures.append(f"breathing: {detail}")
 
     # ---- (b) board-seconds economics --------------------------------------
-    if r.board_seconds < r_static.board_seconds:
-        print(f"WIN economics: elastic {r.board_seconds:.3f} vs static "
+    ok = r.board_seconds < r_static.board_seconds
+    detail = (f"elastic {r.board_seconds:.3f} vs static "
               f"{r_static.board_seconds:.3f} board-seconds "
               f"({r_static.board_seconds / max(r.board_seconds, 1e-12):.2f}x"
               f" cheaper) at elastic p99 {r.p99_ms:.2f} ms "
               f"(static {r_static.p99_ms:.2f} ms)")
+    claims.append(("economics", ok, detail))
+    if ok:
+        print(f"WIN economics: {detail}")
     else:
-        failures.append(f"economics: elastic {r.board_seconds:.3f} >= "
-                        f"static {r_static.board_seconds:.3f} board-seconds")
+        failures.append(f"economics: {detail}")
 
     # ---- (c) zero output drift --------------------------------------------
     drift = [ev.qid for ev in events
              if not np.array_equal(fleet.completed[ev.qid].probs,
                                    static.completed[ev.qid].probs)]
-    if not drift:
-        print(f"WIN zero-drift: all {len(events)} queries bit-identical to "
-              f"the static {2 * k}-board fleet across "
-              f"{len(r.scale_events)} live re-partitions")
+    ok = not drift
+    detail = (f"all {len(events)} queries bit-identical to the static "
+              f"{2 * k}-board fleet across {len(r.scale_events)} live "
+              f"re-partitions" if ok else
+              f"{len(drift)} queries diverged (first qid={drift[0]})")
+    claims.append(("zero_drift", ok, detail))
+    if ok:
+        print(f"WIN zero-drift: {detail}")
     else:
-        failures.append(f"drift: {len(drift)} queries diverged "
-                        f"(first qid={drift[0]})")
+        failures.append(f"drift: {detail}")
 
     # ---- (d) minimal movement ---------------------------------------------
     bad = [e for e in r.scale_events
            if e.remesh["bytes_moved"] != e.remesh["rows_moved"] * row_b]
     moved = sum(e.remesh["bytes_moved"] for e in r.scale_events)
-    if not bad and moved == r.migrated_bytes:
-        print(f"WIN minimal-movement: every migration moved exactly its "
-              f"changed-owner rows ({moved} B total, "
-              f"{r.cache_invalidated_rows} cached rows invalidated)")
+    ok = not bad and moved == r.migrated_bytes
+    detail = (f"every migration moved exactly its changed-owner rows "
+              f"({moved} B total, {r.cache_invalidated_rows} cached rows "
+              f"invalidated)" if ok else
+              "migrated bytes != changed-owner row bytes in some event")
+    claims.append(("minimal_movement", ok, detail))
+    if ok:
+        print(f"WIN minimal-movement: {detail}")
     else:
-        failures.append("movement: migrated bytes != changed-owner row "
-                        "bytes in some event")
+        failures.append(f"movement: {detail}")
+
+    if args.emit_json:
+        from benchmarks._artifacts import write_bench_json
+        write_bench_json("elastic", claims, {
+            "queries": len(events), "boards_min": k, "boards_max": 2 * k,
+            "mean_qps": qps, "day_s": period_s,
+            "board_seconds_elastic": r.board_seconds,
+            "board_seconds_static": r_static.board_seconds,
+            "p99_ms_elastic": r.p99_ms, "p99_ms_static": r_static.p99_ms,
+            "scale_ups": len(ups), "scale_downs": len(downs),
+            "migrated_bytes": r.migrated_bytes,
+            "migration_ms": r.migration_s * 1e3,
+        })
 
     print(f"\ntrace: {tdir}")
     if failures:

@@ -5,10 +5,11 @@ import sys
 import time
 
 from benchmarks import (bench_cluster, bench_elastic, bench_engine_serve,
-                        bench_fabric, bench_pipeline, bench_tiered_embedding,
-                        fig6_membw, fig8_inference, fig9_latency,
-                        fig10_sharding, fig11_training, fig12_13_phases,
-                        kernel_bench, roofline, table16_17_upper_bounds)
+                        bench_fabric, bench_hoststore, bench_pipeline,
+                        bench_tiered_embedding, fig6_membw, fig8_inference,
+                        fig9_latency, fig10_sharding, fig11_training,
+                        fig12_13_phases, kernel_bench, roofline,
+                        table16_17_upper_bounds)
 
 SECTIONS = [
     ("fig6", fig6_membw.main),
@@ -24,9 +25,13 @@ SECTIONS = [
     ("pipeline", lambda: bench_pipeline.main(["--tiny"])),
     ("cluster", lambda: bench_cluster.main(["--tiny"])),
     ("fabric", lambda: bench_fabric.main(["--tiny"])),
-    ("elastic", lambda: bench_elastic.main(["--tiny"])),
+    ("elastic", lambda extra=(): bench_elastic.main(["--tiny", *extra])),
+    ("hoststore", lambda extra=(): bench_hoststore.main(["--tiny", *extra])),
     ("roofline", roofline.main),
 ]
+
+# sections that can write a BENCH_<name>.json artifact (benchmarks/_artifacts)
+EMITS_JSON = {"elastic", "hoststore"}
 
 
 def main(argv=None) -> int:
@@ -35,6 +40,9 @@ def main(argv=None) -> int:
                    choices=[n for n, _ in SECTIONS], metavar="SECTION",
                    help="run a single section; one of: "
                         + ", ".join(n for n, _ in SECTIONS))
+    p.add_argument("--emit-json", action="store_true",
+                   help="sections that support it write their claims + "
+                        "scalars as BENCH_<section>.json at the repo root")
     args = p.parse_args(argv)
     failed = []
     for name, fn in SECTIONS:
@@ -42,7 +50,8 @@ def main(argv=None) -> int:
             continue
         t0 = time.time()
         print(f"{'='*72}\n== {name}\n{'='*72}")
-        rc = fn()
+        rc = (fn(("--emit-json",)) if args.emit_json and name in EMITS_JSON
+              else fn())
         # sections signal a failed headline claim with a nonzero return
         if rc:
             failed.append(name)

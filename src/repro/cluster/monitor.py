@@ -29,6 +29,7 @@ regime the paper's Sec. VII-A hybrid targets).
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional, Tuple, Union
 
@@ -61,7 +62,8 @@ class HitRatioMonitor:
                  model_cfg: Optional[DLRMConfig] = None,
                  n_chips: int = 1, enabled: bool = True,
                  service_multiplier: Optional[
-                     Union[float, Callable[[float], float]]] = None):
+                     Union[float, Callable[[float], float],
+                           str, os.PathLike]] = None):
         self.cfg = cfg
         self.enabled = enabled
         self.hot_per_table = max(1, int(hot_fraction * cfg.rows_per_table))
@@ -90,13 +92,24 @@ class HitRatioMonitor:
         self._system = dataclasses.replace(
             perf_model.recspeed_hybrid_system(), n_chips=max(1, int(n_chips)))
         self._t_step_cache: Dict[float, float] = {}
+        if isinstance(service_multiplier, (str, os.PathLike)):
+            # a measured calibration artifact (JSON path): the
+            # real-hardware hook — load its service_multiplier curve
+            from repro.core.calibration import service_multiplier_from
+            try:
+                service_multiplier = service_multiplier_from(
+                    service_multiplier)
+            except OSError as e:
+                raise ValueError(
+                    f"service_multiplier string must be a calibration-"
+                    f"artifact JSON path: {e}") from e
         if service_multiplier is not None and not (
                 callable(service_multiplier)
                 or isinstance(service_multiplier, (int, float))):
             raise ValueError(
-                "service_multiplier must be a number (constant retiming) or "
-                f"a callable hit_ratio -> multiplier, got "
-                f"{type(service_multiplier).__name__}")
+                "service_multiplier must be a number (constant retiming), "
+                f"a callable hit_ratio -> multiplier, or a calibration-"
+                f"artifact path, got {type(service_multiplier).__name__}")
         self._multiplier_override = service_multiplier
 
     # -- observation ---------------------------------------------------------

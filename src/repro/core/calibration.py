@@ -1,0 +1,64 @@
+"""Measured-hardware calibration artifacts (ROADMAP debt item).
+
+Three quantities in the repo are modeled and want measurement when real
+hardware is available: the monitor's HBM+DDR4 `service_multiplier` curve,
+the host<->device PCIe link, and the inter-board fabric link. Each ships
+as a small JSON artifact this module loads; models accept the artifact
+(path or dict) and override their defaults with whatever it carries:
+
+    {
+      "host_link": {"latency_us": 12.3, "bandwidth_gbs": 13.8},
+      "service_multiplier": {"hit_ratio": [0.0, 0.5, 1.0],
+                             "multiplier": [3.1, 1.9, 1.0]}
+    }
+
+`service_multiplier` may also be a plain number (a constant multiplier).
+The piecewise-linear curve form is interpolated with `np.interp` — flat
+beyond its endpoints, so a sparse measurement sweep is safe to ship.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable, Dict, Union
+
+import numpy as np
+
+Calibration = Union[str, os.PathLike, Dict[str, Any]]
+
+
+def load_calibration(source: Calibration) -> Dict[str, Any]:
+    """A calibration dict from a JSON file path (or an already-loaded
+    dict, passed through so callers can forward either form)."""
+    if isinstance(source, dict):
+        return source
+    with open(os.fspath(source)) as f:
+        data = json.load(f)
+    if not isinstance(data, dict):
+        raise ValueError(
+            f"calibration file {source} must hold a JSON object, "
+            f"got {type(data).__name__}")
+    return data
+
+
+def service_multiplier_from(source: Calibration
+                            ) -> Callable[[float], float]:
+    """The monitor's hit-ratio -> service-time multiplier, from a
+    calibration artifact: either a constant or a measured
+    {"hit_ratio": [...], "multiplier": [...]} curve."""
+    data = load_calibration(source)
+    sm = data.get("service_multiplier")
+    if sm is None:
+        raise ValueError(
+            "calibration artifact has no 'service_multiplier' entry")
+    if isinstance(sm, (int, float)):
+        return lambda h, _m=float(sm): _m
+    xs = np.asarray(sm["hit_ratio"], float)
+    ys = np.asarray(sm["multiplier"], float)
+    if xs.ndim != 1 or xs.shape != ys.shape or xs.size < 2:
+        raise ValueError(
+            f"service_multiplier curve needs matching 1-D hit_ratio/"
+            f"multiplier arrays of >= 2 points, got {xs.shape}/{ys.shape}")
+    if (np.diff(xs) <= 0).any():
+        raise ValueError("service_multiplier hit_ratio must be increasing")
+    return lambda h: float(np.interp(h, xs, ys))

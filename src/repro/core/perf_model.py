@@ -499,6 +499,121 @@ def sharded_query_bound(cfg: DLRMConfig, sys: SystemConfig, n_boards: int,
     return bd
 
 
+# ---------------------------------------------------------------------------
+# Host chunk tier model (repro.hoststore): the paper's memory-system
+# analysis extended one level DOWN — PCIe/host-DRAM terms for weights that
+# do not fit device memory at all (Gupta et al.'s DGX-2 host-spill cliff)
+# ---------------------------------------------------------------------------
+def host_link(latency_us: float = 10.0, bandwidth_gbs: float = 16.0,
+              calibration=None) -> Interconnect:
+    """The host<->device (PCIe) link in bench/CLI units. Defaults model a
+    PCIe 4.0 x16 port (~16 GB/s effective, ~10 us DMA setup). `calibration`
+    is an optional measured-artifact override — a path to (or dict from) a
+    calibration JSON whose "host_link" entry carries measured
+    latency_us / bandwidth_gbs (the ROADMAP real-hardware hook)."""
+    if calibration is not None:
+        from repro.core.calibration import load_calibration
+        hl = load_calibration(calibration).get("host_link", {})
+        latency_us = float(hl.get("latency_us", latency_us))
+        bandwidth_gbs = float(hl.get("bandwidth_gbs", bandwidth_gbs))
+    return Interconnect(bandwidth_gbs * 1e9, latency_us * 1e-6,
+                        Topology.QUADRATIC)
+
+
+def host_swap_time(bytes_moved: float, link: Interconnect,
+                   n_transfers: int = 1) -> float:
+    """Seconds to move `bytes_moved` of chunk traffic over the host link as
+    `n_transfers` DMA descriptors (one per faulted/written-back chunk: the
+    per-chunk setup latency is what makes tiny chunks lose even though
+    their bytes are minimal)."""
+    if bytes_moved <= 0:
+        return 0.0
+    return max(1, int(n_transfers)) * link.latency \
+        + float(bytes_moved) / link.bandwidth
+
+
+def hoststore_query_bound(cfg: DLRMConfig, sys: SystemConfig,
+                          link: Interconnect, device_hit_ratio: float,
+                          chunk_rows: int, pipeline_depth: int = 1,
+                          chunks_per_query: Optional[float] = None,
+                          ) -> StepBreakdown:
+    """Upper-bound step time for one query served through the host chunk
+    tier: the single-board inference breakdown plus the swap stall left
+    after `pipeline_depth`-deep overlap (micro-batch i+1's chunk faults
+    hide under micro-batch i's compute window; micro-batch 0's never do).
+
+    `device_hit_ratio` is the fraction of lookups resolved on device (hot
+    slab + already-resident chunks); the rest fault `chunks_per_query`
+    chunks (default: one chunk per cold lookup, capped at the table set's
+    total chunk count — the cold-start worst case). Strictly monotone in
+    link bandwidth while any bytes move: the PCIe cliff the bench sweeps."""
+    bd = inference_breakdown(cfg, sys, hit_ratio=device_hit_ratio)
+    b, t, l = cfg.batch_size, cfg.num_tables, cfg.lookups_per_table
+    h = min(max(float(device_hit_ratio), 0.0), 1.0)
+    cr = max(1, int(chunk_rows))
+    if chunks_per_query is None:
+        chunks_per_query = (1.0 - h) * b * t * l
+    max_chunks = t * math.ceil(cfg.rows_per_table / cr)
+    chunks = min(float(chunks_per_query), float(max_chunks))
+    swap_bytes = chunks * cr * cfg.embed_dim * sys.elem_bytes
+    t_swap = host_swap_time(swap_bytes, link,
+                            n_transfers=max(1, int(math.ceil(chunks))))
+    k = max(1, int(pipeline_depth))
+    per_mb = t_swap / k
+    window = bd.t_fwd / k
+    stall = per_mb + (k - 1) * max(0.0, per_mb - window)
+    bd.notes.update({
+        "t_host_swap": t_swap,
+        "host_stall_s": stall,
+        "host_swap_bytes": swap_bytes,
+        "host_chunks_per_query": chunks,
+        "host_pipeline_depth": float(k),
+    })
+    bd.t_step = bd.t_fwd + stall
+    return bd
+
+
+HOSTSTORE_CHUNK_GRID: Tuple[int, ...] = (4, 8, 16, 32, 64)
+
+
+def choose_hoststore_config(cfg: DLRMConfig, link: Interconnect,
+                            cache_budget_bytes: int,
+                            sys: Optional[SystemConfig] = None,
+                            chunk_rows_grid: Iterable[int] = HOSTSTORE_CHUNK_GRID,
+                            device_hit_ratio: float = 0.5,
+                            pipeline_depth: int = 2,
+                            ) -> Tuple[int, Dict[int, float]]:
+    """Planner-side chunk-size pick: sweep `hoststore_query_bound` over the
+    chunk grid and return (best_chunk_rows, {chunk_rows: t_step}).
+
+    The tradeoff the sweep resolves: small chunks move few bytes but pay a
+    DMA-setup latency per fault; large chunks amortize setup but drag whole
+    neighborhoods across PCIe and cut the slot count the budget affords. A
+    grid point is infeasible when the modeled per-query chunk working set
+    exceeds the slots the cache budget buys at that chunk size."""
+    sys = sys if sys is not None else recspeed_system()
+    b, t, l = cfg.batch_size, cfg.num_tables, cfg.lookups_per_table
+    h = min(max(float(device_hit_ratio), 0.0), 1.0)
+    row_bytes = cfg.embed_dim * sys.elem_bytes
+    sweep: Dict[int, float] = {}
+    for cr in chunk_rows_grid:
+        cr = max(1, min(int(cr), cfg.rows_per_table))
+        slots = cache_budget_bytes // (cr * row_bytes)
+        working_set = min((1.0 - h) * b * t * l,
+                          t * math.ceil(cfg.rows_per_table / cr))
+        if slots < max(1.0, working_set):
+            continue   # one batch's chunks would not fit the cache
+        sweep[cr] = hoststore_query_bound(
+            cfg, sys, link, h, cr, pipeline_depth).t_step
+    if not sweep:
+        # nothing feasible at this budget: smallest chunks minimize the
+        # forced overcommit and the runtime working-set check will report
+        fallback = max(1, min(int(c) for c in chunk_rows_grid))
+        return fallback, {}
+    best = min(sweep, key=sweep.get)
+    return best, sweep
+
+
 PIPELINE_DEPTHS: Tuple[int, ...] = (1, 2, 4, 8)
 
 

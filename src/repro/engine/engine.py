@@ -69,6 +69,19 @@ class Engine:
                  plan="auto", else 1.
     compress_grads : int8 error-feedback compression of the dense-grad
                  all-reduce in DLRM train steps.
+    host_capacity_mb : device-memory budget (MiB) that turns the HOST
+                 CHUNK TIER on: sessions serve/train through
+                 `repro.hoststore.HostTieredExchange` — full weights in
+                 host memory, an HBM hot slab + device chunk cache inside
+                 the budget, chunks swapping in ahead of compute. Models
+                 BIGGER than the budget serve fine; that is the point.
+                 Single-board, plan="none", SGD-only.
+    host_chunk_rows : rows per swap chunk (default: perf-model pick).
+    host_hot_fraction : budget share for the HBM hot slab (default 0.5).
+    host_link  : a `perf_model.host_link(...)` Interconnect pricing the
+                 host<->device swaps (default PCIe 4.0 x16).
+    calibration : path to (or dict of) a measured calibration artifact
+                 (repro.core.calibration); overrides the host link terms.
     verbose    : print the plan summary when a plan is built.
     """
 
@@ -81,6 +94,10 @@ class Engine:
                  fast_mb: Optional[float] = None,
                  pipeline_depth: Optional[int] = None,
                  compress_grads: bool = False,
+                 host_capacity_mb: Optional[float] = None,
+                 host_chunk_rows: Optional[int] = None,
+                 host_hot_fraction: float = 0.5,
+                 host_link=None, calibration=None,
                  profile_batches: int = 4, verbose: bool = False):
         self.cfg = cfg
         self.mesh = mesh if mesh is not None else make_host_mesh(model=model_axis)
@@ -130,6 +147,32 @@ class Engine:
                     f"dp_axes + axis = {self.dp_axes + ax} cover {covered} "
                     f"devices but the mesh has {self.mesh.devices.size}; "
                     f"the batch must shard over the whole mesh")
+        self.host_capacity_mb = host_capacity_mb
+        self.host_chunk_rows = host_chunk_rows
+        self.host_hot_fraction = host_hot_fraction
+        self.host_link = host_link
+        self.calibration = calibration
+        if host_capacity_mb is not None:
+            if not self.is_dlrm:
+                raise ValueError("host_capacity_mb (the host chunk tier) "
+                                 "is DLRM-only")
+            if host_capacity_mb <= 0:
+                raise ValueError(f"host_capacity_mb must be > 0, got "
+                                 f"{host_capacity_mb}")
+            if plan not in (None, "none"):
+                raise ValueError(
+                    "host_capacity_mb composes the memory tiers itself "
+                    "(hot slab + chunk cache + host store); it requires "
+                    "plan='none'")
+            if self.dp_axes or self.n_devices != 1:
+                raise ValueError(
+                    f"the host chunk tier is single-board (1 device); mesh "
+                    f"has {self.n_devices} devices. Scale out by giving "
+                    f"each fabric board its own Engine/host tier")
+            if optimizer != "sgd":
+                raise ValueError(
+                    "host-tier training is SGD-only (AdaGrad accumulators "
+                    "would need their own chunked host tier)")
         self._plan_arg: PlanArg = plan
         self._reports: Dict[str, PlanReport] = {}
 
@@ -171,8 +214,26 @@ class Engine:
         return self._reports.get(mode)
 
     def _plan_and_exchange(self, mode: str):
+        if self.host_capacity_mb is not None:
+            # host chunk tier: a FRESH exchange per session — each session
+            # owns its own host weights, hot slab, and chunk-cache state
+            return None, self._host_exchange()
         plan = self.build_plan(mode)
         return plan, (plan.exchange if plan is not None else self.exchange)
+
+    def _host_exchange(self):
+        from repro.core import perf_model
+        from repro.hoststore import build_host_exchange
+        link = self.host_link
+        if link is None:
+            link = perf_model.host_link(calibration=self.calibration)
+        return build_host_exchange(
+            self.cfg,
+            device_capacity_bytes=int(self.host_capacity_mb * 2**20),
+            alpha=self.alpha, seed=self.seed,
+            chunk_rows=self.host_chunk_rows,
+            hot_fraction=self.host_hot_fraction, link=link,
+            profile_batches=max(1, self.profile_batches))
 
     def resolve_pipeline_depth(self, mode: str,
                                local_batch_samples: int) -> int:
@@ -228,7 +289,11 @@ class Engine:
             raise ValueError("serve_session is DLRM-only")
         plan, exchange = self._plan_and_exchange("inference")
         qs = int(query_size or self.cfg.batch_size)
-        if self.pipeline_depth is None:
+        if self.host_capacity_mb is not None and self.pipeline_depth is None:
+            # host tier without an explicit depth: depth 1 (synchronous
+            # faulting); pass pipeline_depth explicitly to overlap swaps
+            depth, resolver = 1, None
+        elif self.pipeline_depth is None:
             # planner depth PER COMPILED BATCH SHAPE: flushed batches vary
             # with load, and the winning depth varies with them
             depth, resolver = None, self.make_depth_resolver("inference")

@@ -91,7 +91,7 @@ class ServeSession:
 
     def __init__(self, cfg: DLRMConfig, mesh, axis, *,
                  plan: Optional[ShardingPlan] = None,
-                 exchange: str = "partial_pool",
+                 exchange="partial_pool",
                  max_batch_queries: int = 8,
                  max_wait_ms: float = 2.0,
                  query_size: Optional[int] = None,
@@ -133,11 +133,16 @@ class ServeSession:
         self._n_embed = parallel.axis_size(mesh, axis)
         self._axis = axis
         self._exchange = exchange
+        # an EmbeddingExchange INSTANCE may own session state beyond the
+        # device params (the hoststore's host weights + chunk cache); its
+        # begin/end-batch hooks bracket every execution below
+        self._exchange_inst = (exchange if isinstance(
+            exchange, parallel.EmbeddingExchange) else None)
         self._steps: Dict[int, Callable] = {}
         self._depth_by_samples: Dict[int, int] = {}
         if params is None:
             params = dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg)
-        elif "tables" not in params:
+        elif self._exchange_inst is None and "tables" not in params:
             # plan-split params (e.g. TrainSession.params under plan=auto):
             # only accepted when the split matches THIS session's plan
             # groups, otherwise tables would land in the wrong tier.
@@ -155,8 +160,11 @@ class ServeSession:
                     f"plan-split params (fast,bulk)={got} do not match this "
                     f"session's plan groups {want}; re-stack them with "
                     f"merge_dlrm_params_by_plan under their own plan first")
-        self.params = parallel.shard_dlrm_params(params, cfg, mesh, axis,
-                                            plan=plan)
+        prepared = (self._exchange_inst.init_session_params(params, mesh)
+                    if self._exchange_inst is not None else None)
+        self.params = (prepared if prepared is not None else
+                       parallel.shard_dlrm_params(params, cfg, mesh, axis,
+                                                  plan=plan))
         self.batcher = MicroBatcher(self.max_batch_queries, max_wait_ms / 1e3)
         self._qid = 0
         self._compiled: set = set()
@@ -240,11 +248,23 @@ class ServeSession:
             parts.append(queries[0])
         dense = jnp.concatenate([p["dense"] for p in parts], axis=0)
         idx = jnp.concatenate([p["indices"] for p in parts], axis=0)
-        step = self._get_step(self.depth_for_samples(k * self.query_size))
+        depth = self.depth_for_samples(k * self.query_size)
+        step = self._get_step(depth)
+        plan = None
+        if self._exchange_inst is not None:
+            # fault the batch's cold chunks in BEFORE the step launches
+            # (micro-batch by micro-batch, so i+1's swap-in can overlap
+            # i's compute on the virtual clock below)
+            self.params, plan = self._exchange_inst.begin_batch(
+                self.params, np.asarray(idx), depth)
         t0 = time.perf_counter()
         probs = step(self.params, dense, idx)
         probs.block_until_ready()
         service = time.perf_counter() - t0
+        if plan is not None:
+            # modeled swap stall composes with the MEASURED compute time —
+            # the bench_pipeline measured+modeled discipline
+            service += self._exchange_inst.stall_seconds(plan, service)
         out = np.asarray(probs).reshape(k, self.query_size)
         return out[:len(queries)], service
 

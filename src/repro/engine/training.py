@@ -12,6 +12,7 @@ from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
+import numpy as np
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
@@ -77,7 +78,7 @@ class TrainSession(_SessionBase):
 
     def __init__(self, cfg: DLRMConfig, mesh, axis, *,
                  plan: Optional[ShardingPlan] = None,
-                 exchange: str = "partial_pool", optimizer: str = "sgd",
+                 exchange="partial_pool", optimizer: str = "sgd",
                  lr: float = 0.01, seed: int = 0, alpha: float = 0.0,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
                  ckpt_keep: int = 3, pipeline_depth: int = 1,
@@ -96,16 +97,33 @@ class TrainSession(_SessionBase):
             pipeline_depth=self.pipeline_depth,
             compress_grads=compress_grads)
         params = dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg)
-        params = parallel.shard_dlrm_params(params, cfg, mesh, axis,
-                                            plan=plan)
+        # an EmbeddingExchange instance with session state (hoststore):
+        # its hooks own param placement and bracket every step below
+        exch_inst = self.exchange_inst = (
+            exchange if isinstance(exchange, parallel.EmbeddingExchange)
+            else None)
+        prepared = (exch_inst.init_session_params(params, mesh)
+                    if exch_inst is not None else None)
+        params = (prepared if prepared is not None else
+                  parallel.shard_dlrm_params(params, cfg, mesh, axis,
+                                             plan=plan))
         opt_state = parallel.init_dlrm_opt_state(
             cfg, optimizer, plan, n_embed, compress_grads=compress_grads,
             n_devices=n_full)
+        depth = self.pipeline_depth
 
         def loop_step(state, batch):
             p, o = state
+            if exch_inst is not None:
+                # fault this batch's cold chunks in (and mark them dirty)
+                # before the step; re-attach the DONATED device arrays
+                # from the returned params afterwards
+                p, _ = exch_inst.begin_batch(
+                    p, np.asarray(batch["indices"]), depth, train=True)
             p, o, loss = step_fn(p, o, batch["dense"], batch["indices"],
                                  batch["labels"])
+            if exch_inst is not None:
+                p = exch_inst.end_batch(p)
             return (p, o), {"loss": loss}
 
         loop = TrainLoop(

@@ -170,6 +170,26 @@ class ShardMap:
         b = int(np.argmax(self.board_bytes))
         return (self.board_bytes[b] / max(self.board_capacity_bytes, 1), b)
 
+    def overfull_message(self) -> Optional[str]:
+        """The >95%-fill warning text, or None while there is headroom."""
+        used, fullest = self.peak_fill()
+        if used <= 0.95:
+            return None
+        return (f"board b{fullest} at {used:.0%} of capacity "
+                f"({self.board_bytes[fullest]} of "
+                f"{self.board_capacity_bytes} B) — within 5% of overflow")
+
+    def warn_if_overfull(self, stacklevel: int = 3) -> Optional[str]:
+        """Warn loudly, like the planner's overflow errors: a board this
+        full has no headroom for re-partition staging or profile error.
+        Fired at PLAN time by the partitioners AND from summary(), so an
+        over-full placement is loud whether or not anyone prints it."""
+        msg = self.overfull_message()
+        if msg is not None:
+            warnings.warn(f"[partition] {msg}", RuntimeWarning,
+                          stacklevel=stacklevel)
+        return msg
+
     def summary(self) -> str:
         used, fullest = self.peak_fill()
         loads = " ".join(f"b{i}={l:.2f}" for i, l in enumerate(
@@ -183,13 +203,8 @@ class ShardMap:
             f"boards @ {self.board_capacity_bytes / 2**20:.2f} MiB "
             f"(peak board fill {used:.0%} on b{fullest}); "
             f"load share {loads}"]
-        if used > 0.95:
-            # loud, like the planner's overflow errors: a board this full
-            # has no headroom for re-partition staging or profile error
-            msg = (f"board b{fullest} at {used:.0%} of capacity "
-                   f"({self.board_bytes[fullest]} of "
-                   f"{self.board_capacity_bytes} B) — within 5% of overflow")
-            warnings.warn(f"[partition] {msg}", RuntimeWarning, stacklevel=2)
+        msg = self.warn_if_overfull(stacklevel=3)
+        if msg is not None:
             lines.append(f"[partition] WARNING: {msg}")
         return "\n".join(lines)
 
@@ -305,13 +320,15 @@ def partition_rows(
             mass = (float(rf[lo:hi].sum()) if rf is not None
                     else float(table_freq[t]) * (hi - lo) / R)
             load[b] += mass
-    return ShardMap(
+    smap = ShardMap(
         config=cfg.name, n_boards=n_boards,
         board_capacity_bytes=int(board_capacity_bytes),
         shards=tuple(sorted(shards)),
         num_tables=cfg.num_tables, rows_per_table=R,
         row_bytes=tuple(row_bytes),
         board_bytes=tuple(bytes_used), board_load=tuple(load))
+    smap.warn_if_overfull()   # loud at PLAN time, not first summary()
+    return smap
 
 
 def partition_tables(

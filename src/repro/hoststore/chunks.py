@@ -1,0 +1,335 @@
+"""ChunkParamMgr: host-resident chunked embedding weights + device chunk cache.
+
+The third memory tier (ROADMAP headline direction 1, the
+hpcaitech/CacheEmbedding `ChunkParamMgr` idiom ported to jax):
+
+  host  (T, R, d) numpy : the CANONICAL full table weights, partitioned
+                          into fixed-size row chunks — chunk j of table t
+                          covers rows [j*chunk_rows, min((j+1)*chunk_rows, R)).
+  cache (C*K + 1, d)    : device-resident flat chunk cache (C = cache_slots,
+                          K = chunk_rows); slot s holds one chunk's rows at
+                          flat positions [s*K, s*K + n_rows). The LAST row is
+                          an all-zeros pad every non-resident (or hot-slab)
+                          lookup is pointed at.
+  pos   (T, R) int32    : device indirection table, global row -> flat cache
+                          position (pad for non-resident rows). Rebuilt
+                          incrementally by `ensure` — the in-jit lookup path
+                          only ever gathers, it NEVER faults.
+
+`ensure(t_idx, r_idx)` is the batched fault interface: called OUTSIDE jit
+(before a step runs) with every row the step will touch, it swaps the
+missing chunks in — evicting cold chunks by CLOCK (default) or LFU, writing
+DIRTY victims back to host first — and returns the byte/fault accounting the
+swap scheduler (`hoststore.swap`) prices on the virtual clock.
+
+Training marks faulted chunks dirty (`mark_dirty`); `flush()` writes every
+dirty resident chunk back and returns the full host weights — the
+round-trip the hoststore exactness tests assert on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+@dataclass
+class EnsureStats:
+    """Accounting for one `ensure` call (one micro-batch's faults)."""
+
+    requested_rows: int = 0
+    needed_chunks: int = 0       # unique chunks the batch touches
+    hit_chunks: int = 0          # already resident
+    faulted_chunks: int = 0      # swapped in host -> device
+    evicted_chunks: int = 0
+    writebacks: int = 0          # dirty evictions written device -> host
+    bytes_in: int = 0            # host -> device (faulted chunk rows)
+    bytes_out: int = 0           # device -> host (dirty writebacks)
+
+    @property
+    def bytes_moved(self) -> int:
+        return self.bytes_in + self.bytes_out
+
+
+@dataclass
+class SwapStats:
+    """Lifetime counters across every `ensure` call."""
+
+    ensures: int = 0
+    requested_rows: int = 0
+    needed_chunks: int = 0
+    hit_chunks: int = 0
+    faulted_chunks: int = 0
+    evicted_chunks: int = 0
+    writebacks: int = 0
+    bytes_in: int = 0
+    bytes_out: int = 0
+    history: List[EnsureStats] = field(default_factory=list)
+
+    def fold(self, e: EnsureStats) -> None:
+        self.ensures += 1
+        self.requested_rows += e.requested_rows
+        self.needed_chunks += e.needed_chunks
+        self.hit_chunks += e.hit_chunks
+        self.faulted_chunks += e.faulted_chunks
+        self.evicted_chunks += e.evicted_chunks
+        self.writebacks += e.writebacks
+        self.bytes_in += e.bytes_in
+        self.bytes_out += e.bytes_out
+        self.history.append(e)
+
+    @property
+    def chunk_hit_ratio(self) -> float:
+        return (self.hit_chunks / self.needed_chunks
+                if self.needed_chunks else 1.0)
+
+
+class ChunkParamMgr:
+    """Host chunk store + device chunk cache with batched faulting.
+
+    Parameters
+    ----------
+    tables      : (T, R, d) stacked table weights; COPIED to host memory
+                  (the numpy stand-in for a pinned host buffer).
+    chunk_rows  : rows per chunk (the swap granularity).
+    cache_slots : device cache capacity in chunks.
+    policy      : "clock" (second-chance, default) or "lfu" eviction.
+    """
+
+    def __init__(self, tables, chunk_rows: int, cache_slots: int, *,
+                 policy: str = "clock"):
+        host = np.array(np.asarray(tables), copy=True)
+        if host.ndim != 3:
+            raise ValueError(f"tables must be (T, R, d), got {host.shape}")
+        if chunk_rows < 1:
+            raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
+        if cache_slots < 1:
+            raise ValueError(f"cache_slots must be >= 1, got {cache_slots}")
+        if policy not in ("clock", "lfu"):
+            raise ValueError(f"unknown eviction policy {policy!r}")
+        self.host = host
+        self.T, self.R, self.d = host.shape
+        self.chunk_rows = int(chunk_rows)
+        self.cache_slots = int(cache_slots)
+        self.policy = policy
+        self.chunks_per_table = -(-self.R // self.chunk_rows)   # ceil
+        self.n_chunks = self.T * self.chunks_per_table
+        self.row_bytes = self.d * host.dtype.itemsize
+        self.chunk_bytes = self.chunk_rows * self.row_bytes
+
+        self.pad_pos = self.cache_slots * self.chunk_rows
+        self._chunk_slot = np.full(self.n_chunks, -1, np.int32)
+        self._slot_chunk = np.full(self.cache_slots, -1, np.int64)
+        self._dirty = np.zeros(self.n_chunks, bool)
+        self._freq = np.zeros(self.n_chunks, np.int64)
+        self._ref = np.zeros(self.cache_slots, bool)   # CLOCK reference bits
+        self._hand = 0
+        self._pos_np = np.full((self.T, self.R), self.pad_pos, np.int32)
+        self.device_cache = jnp.zeros((self.pad_pos + 1, self.d),
+                                      host.dtype)
+        self.device_pos = jnp.asarray(self._pos_np)
+        self.stats = SwapStats()
+
+    # -- chunk geometry ------------------------------------------------------
+    def chunk_of(self, t, r):
+        """Global chunk id(s) of rows (t, r) — vectorized."""
+        return np.asarray(t, np.int64) * self.chunks_per_table \
+            + np.asarray(r, np.int64) // self.chunk_rows
+
+    def chunk_range(self, c: int) -> Tuple[int, int, int]:
+        """Chunk id -> (table, row_lo, row_hi) — exclusive hi, ragged tail."""
+        t, j = divmod(int(c), self.chunks_per_table)
+        lo = j * self.chunk_rows
+        return t, lo, min(lo + self.chunk_rows, self.R)
+
+    def is_resident(self, t: int, r: int) -> bool:
+        return self._chunk_slot[self.chunk_of(t, r)] >= 0
+
+    @property
+    def resident_chunks(self) -> np.ndarray:
+        return np.flatnonzero(self._chunk_slot >= 0)
+
+    @property
+    def host_pos(self) -> np.ndarray:
+        """Host mirror of the device indirection table (read-only view)."""
+        return self._pos_np
+
+    # -- eviction ------------------------------------------------------------
+    def _pick_victim(self, pinned: np.ndarray) -> int:
+        """A resident, unpinned slot to evict (CLOCK or LFU)."""
+        candidates = [s for s in range(self.cache_slots)
+                      if self._slot_chunk[s] >= 0
+                      and self._slot_chunk[s] not in pinned]
+        if not candidates:
+            raise ValueError(
+                f"device chunk cache too small: one batch needs more than "
+                f"{self.cache_slots} chunks of {self.chunk_rows} rows "
+                f"resident at once; raise cache_slots or chunk_rows")
+        if self.policy == "lfu":
+            return min(candidates,
+                       key=lambda s: (self._freq[self._slot_chunk[s]], s))
+        cand = set(candidates)
+        for _ in range(2 * self.cache_slots + 1):
+            s = self._hand
+            self._hand = (self._hand + 1) % self.cache_slots
+            if s not in cand:
+                continue
+            if self._ref[s]:
+                self._ref[s] = False       # second chance
+                continue
+            return s
+        return candidates[0]               # all referenced: degrade to FIFO
+
+    def _evict(self, slot: int, st: EnsureStats) -> Tuple[int, int, int]:
+        c = int(self._slot_chunk[slot])
+        t, lo, hi = self.chunk_range(c)
+        if self._dirty[c]:
+            # dirty chunk NEVER dropped: stream its live device rows back
+            flat0 = slot * self.chunk_rows
+            rows = np.asarray(self.device_cache[flat0:flat0 + (hi - lo)])
+            self.host[t, lo:hi] = rows
+            self._dirty[c] = False
+            st.writebacks += 1
+            st.bytes_out += (hi - lo) * self.row_bytes
+        self._chunk_slot[c] = -1
+        self._slot_chunk[slot] = -1
+        self._ref[slot] = False
+        st.evicted_chunks += 1
+        return t, lo, hi
+
+    # -- the batched fault interface ----------------------------------------
+    def ensure(self, t_idx, r_idx, pin=None) -> EnsureStats:
+        """Make every row (t_idx[i], r_idx[i]) resident in the device cache.
+
+        Runs OUTSIDE jit. Swaps missing chunks in (evicting by policy,
+        writing dirty victims back first) and updates `device_cache` /
+        `device_pos` functionally. Chunks needed by THIS call are pinned —
+        they are never chosen as victims — and `pin` (chunk ids) extends
+        the protection: a pipelined step's swap plan faults micro-batch by
+        micro-batch but the step executes on ONE cache snapshot, so every
+        micro-batch's chunks must survive until the step runs (the plan
+        pins the step's full working set). Raises if pinned chunks exceed
+        `cache_slots`.
+        """
+        t_arr = np.asarray(t_idx, np.int64).ravel()
+        r_arr = np.asarray(r_idx, np.int64).ravel()
+        if t_arr.shape != r_arr.shape:
+            raise ValueError(f"t_idx/r_idx must align, got {t_arr.shape} "
+                             f"vs {r_arr.shape}")
+        st = EnsureStats(requested_rows=int(t_arr.size))
+        if t_arr.size == 0:
+            self.stats.fold(st)
+            return st
+        if (r_arr < 0).any() or (r_arr >= self.R).any():
+            raise ValueError("row index out of range")
+        chunks_acc = self.chunk_of(t_arr, r_arr)
+        needed, counts = np.unique(chunks_acc, return_counts=True)
+        st.needed_chunks = int(needed.size)
+        if needed.size > self.cache_slots:
+            raise ValueError(
+                f"device chunk cache too small: batch working set is "
+                f"{needed.size} chunks but cache_slots={self.cache_slots}")
+        self._freq[needed] += counts                  # LFU currency
+        pinned = set(int(c) for c in needed)
+        if pin is not None:
+            pinned |= set(int(c) for c in np.asarray(pin, np.int64).ravel())
+
+        missing = needed[self._chunk_slot[needed] < 0]
+        st.hit_chunks = st.needed_chunks - int(missing.size)
+        resident_slots = [int(self._chunk_slot[c])
+                          for c in needed if self._chunk_slot[c] >= 0]
+        self._ref[resident_slots] = True              # CLOCK reference bits
+
+        if missing.size:
+            pos_t: List[np.ndarray] = []
+            pos_r: List[np.ndarray] = []
+            pos_v: List[np.ndarray] = []
+            free = list(np.flatnonzero(self._slot_chunk < 0))
+            while len(free) < missing.size:
+                victim = self._pick_victim(np.asarray(sorted(pinned)))
+                ev_t, ev_lo, ev_hi = self._evict(victim, st)
+                # evicted rows point back at the pad: a stale position must
+                # never alias the slot's NEW occupant
+                pos_t.append(np.full(ev_hi - ev_lo, ev_t, np.int64))
+                pos_r.append(np.arange(ev_lo, ev_hi, dtype=np.int64))
+                pos_v.append(np.full(ev_hi - ev_lo, self.pad_pos, np.int32))
+                free.append(victim)
+            # one batched host->device transfer + one scatter for all faults
+            k = int(missing.size)
+            buf = np.zeros((k, self.chunk_rows, self.d), self.host.dtype)
+            flat_targets = np.empty(k * self.chunk_rows, np.int64)
+            for i, c in enumerate(missing):
+                c = int(c)
+                slot = int(free[i])
+                t, lo, hi = self.chunk_range(c)
+                n = hi - lo
+                buf[i, :n] = self.host[t, lo:hi]
+                flat0 = slot * self.chunk_rows
+                flat_targets[i * self.chunk_rows:(i + 1) * self.chunk_rows] \
+                    = np.arange(flat0, flat0 + self.chunk_rows)
+                self._chunk_slot[c] = slot
+                self._slot_chunk[slot] = c
+                self._ref[slot] = True
+                pos_t.append(np.full(n, t, np.int64))
+                pos_r.append(np.arange(lo, hi, dtype=np.int64))
+                pos_v.append(np.arange(flat0, flat0 + n, dtype=np.int32))
+                st.faulted_chunks += 1
+                st.bytes_in += n * self.row_bytes
+            self.device_cache = self.device_cache.at[
+                jnp.asarray(flat_targets)].set(
+                jnp.asarray(buf.reshape(k * self.chunk_rows, self.d)))
+            tt = np.concatenate(pos_t)
+            rr = np.concatenate(pos_r)
+            vv = np.concatenate(pos_v)
+            self._pos_np[tt, rr] = vv
+            self.device_pos = self.device_pos.at[
+                jnp.asarray(tt), jnp.asarray(rr)].set(jnp.asarray(vv))
+        self.stats.fold(st)
+        return st
+
+    # -- training integration ------------------------------------------------
+    def attach_cache(self, device_cache) -> None:
+        """Point the manager at the step's UPDATED cache array (the train
+        step donates its inputs; writebacks must read the live values)."""
+        if device_cache.shape != (self.pad_pos + 1, self.d):
+            raise ValueError(
+                f"cache shape {device_cache.shape} != "
+                f"{(self.pad_pos + 1, self.d)}")
+        self.device_cache = device_cache
+
+    def mark_dirty(self, t_idx, r_idx) -> None:
+        """Mark the (resident) chunks holding these rows dirty — call after
+        a train step scatter-updates their cached rows."""
+        t_arr = np.asarray(t_idx, np.int64).ravel()
+        r_arr = np.asarray(r_idx, np.int64).ravel()
+        if t_arr.size == 0:
+            return
+        chunks = np.unique(self.chunk_of(t_arr, r_arr))
+        if (self._chunk_slot[chunks] < 0).any():
+            missing = chunks[self._chunk_slot[chunks] < 0]
+            raise ValueError(
+                f"mark_dirty on non-resident chunk(s) {missing.tolist()}: "
+                f"ensure() the batch before the step updates it")
+        self._dirty[chunks] = True
+
+    @property
+    def dirty_chunks(self) -> np.ndarray:
+        return np.flatnonzero(self._dirty)
+
+    def flush(self) -> np.ndarray:
+        """Write every dirty resident chunk back to host; return the full
+        host weights (T, R, d). The eviction path keeps the invariant that
+        only RESIDENT chunks are ever dirty."""
+        for c in np.flatnonzero(self._dirty):
+            c = int(c)
+            slot = int(self._chunk_slot[c])
+            assert slot >= 0, f"dirty non-resident chunk {c}"
+            t, lo, hi = self.chunk_range(c)
+            flat0 = slot * self.chunk_rows
+            self.host[t, lo:hi] = np.asarray(
+                self.device_cache[flat0:flat0 + (hi - lo)])
+            self._dirty[c] = False
+        return self.host.copy()

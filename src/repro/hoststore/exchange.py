@@ -1,0 +1,298 @@
+"""HostTieredExchange: the full three-tier memory hierarchy behind the
+standard `EmbeddingExchange` interface.
+
+  HBM hot slab   params["hs_hot"]   (T, S+1, d)  — top-S freq-elected rows
+                                                   per table + a zeros miss
+                                                   slot (PR 1's hot tier).
+  device cache   params["hs_cache"] (C*K + 1, d) — ChunkParamMgr's chunk
+                                                   cache + a zeros pad row.
+  host chunks    mgr.host           (T, R, d)    — the CANONICAL weights in
+                                                   host numpy memory.
+
+Lookup maps     params["hs_hot_map"] (T, R) row -> hot slot or -1
+                params["hs_pos"]     (T, R) row -> flat cache pos or pad
+
+Every lookup resolves to exactly one real row: hot rows gather their slab
+slot (cache side reads the zeros pad), cold rows gather their cache
+position (slab side reads the zeros miss slot), and the two gathers sum.
+Structured to mirror `dlrm_lib.embedding_bag`'s per-table
+gather-then-`sum(axis=1)` exactly, the pooled output is BIT-IDENTICAL to
+the all-in-device reference — the fabric-grade correctness bar. (The
+Pallas cached-bag kernel accumulates in a different order, so it is an
+opt-in `pool_mode="cached_bag"` with allclose-level agreement only.)
+
+`parallel.build_step` composes this exchange unchanged; the session hooks
+(`begin_batch`/`end_batch`, base-class no-ops for every other exchange) are
+where chunks fault in ahead of the step and donated cache arrays re-attach
+after it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DLRMConfig
+from repro.core import perf_model
+from repro.core.tiered_embedding import measure_row_freq
+from repro.kernels import ops
+from repro.parallel.exchange import Axis, EmbeddingExchange, Tables
+
+from .chunks import ChunkParamMgr
+from .swap import SwapPlan, overlap_stall, plan_swaps
+
+
+class HostTieredExchange(EmbeddingExchange):
+    """Embedding exchange whose cold tier pages in from host memory.
+
+    Single-board only (n == 1): the fabric composes host tiers per board
+    by giving each `ShardedFleet` member its own Engine, not by sharding
+    one host store over an axis.
+    """
+
+    table_keys = ("hs_hot", "hs_cache", "hs_hot_map", "hs_pos")
+
+    def __init__(self, cfg: DLRMConfig, axis: Axis, n: int, *,
+                 mgr: ChunkParamMgr, hot_rows: np.ndarray,
+                 link: Optional["perf_model.Interconnect"] = None,
+                 pool_mode: str = "paired"):
+        super().__init__(cfg, axis, n)
+        if n != 1:
+            raise ValueError(
+                f"HostTieredExchange is single-board (n=1), got n={n}; "
+                f"scale out by sharding boards (repro.fabric), each with "
+                f"its own host tier")
+        if pool_mode not in ("paired", "cached_bag"):
+            raise ValueError(f"unknown pool_mode {pool_mode!r}")
+        if mgr.T != cfg.num_tables or mgr.R != cfg.rows_per_table \
+                or mgr.d != cfg.embed_dim:
+            raise ValueError(
+                f"ChunkParamMgr shape ({mgr.T}, {mgr.R}, {mgr.d}) != cfg "
+                f"({cfg.num_tables}, {cfg.rows_per_table}, {cfg.embed_dim})")
+        self.mgr = mgr
+        self.link = link if link is not None else perf_model.host_link()
+        self.pool_mode = pool_mode
+
+        hot_rows = np.asarray(hot_rows, np.int64)
+        if hot_rows.ndim != 2 or hot_rows.shape[0] != cfg.num_tables:
+            raise ValueError(f"hot_rows must be (T, S), got {hot_rows.shape}")
+        self.hot_slots = int(hot_rows.shape[1])
+        self._hot_rows = hot_rows                      # (T, S) global row ids
+        hot_map = np.full((mgr.T, mgr.R), -1, np.int32)
+        for t in range(mgr.T):
+            hot_map[t, hot_rows[t]] = np.arange(self.hot_slots,
+                                                dtype=np.int32)
+        self._hot_map_np = hot_map
+        # hot slab: elected rows + a zeros miss slot at index S
+        slab = np.zeros((mgr.T, self.hot_slots + 1, mgr.d), mgr.host.dtype)
+        for t in range(mgr.T):
+            slab[t, :self.hot_slots] = mgr.host[t, hot_rows[t]]
+        self._hot_init = slab
+        self._device_hot = None       # latest device slab (tracks training)
+        self._last_plan: Optional[SwapPlan] = None
+
+    # -- layout --------------------------------------------------------------
+    def table_specs(self) -> Dict[str, P]:
+        return {k: P() for k in self.table_keys}
+
+    def acc_specs(self) -> Dict[str, P]:
+        raise NotImplementedError(
+            "hoststore training is SGD-only: AdaGrad's per-row accumulator "
+            "would need its own chunked host tier (not implemented)")
+
+    def expand_grads(self, tables, ctx, g_pooled):
+        raise NotImplementedError(
+            "HostTieredExchange applies updates in place (sparse_apply); "
+            "flat grad expansion is only needed by stateful optimizers, "
+            "which the host tier does not support")
+
+    # -- session hooks -------------------------------------------------------
+    def init_session_params(self, params: Tables, mesh) -> Tables:
+        """Replace the dense (T, R, d) "tables" param with the three-tier
+        layout. The full weights stay HOST-side in the ChunkParamMgr; only
+        the hot slab, chunk cache, and int maps go to device."""
+        if "tables" in params:
+            params = {k: v for k, v in params.items() if k != "tables"}
+        out = {"bot_mlp": params["bot_mlp"], "top_mlp": params["top_mlp"],
+               "hs_hot": jnp.asarray(self._hot_init),
+               "hs_cache": self.mgr.device_cache,
+               "hs_hot_map": jnp.asarray(self._hot_map_np),
+               "hs_pos": self.mgr.device_pos}
+        sharding = NamedSharding(mesh, P())
+        out = {k: jax.device_put(v, sharding) if k.startswith("hs_")
+               else jax.tree_util.tree_map(
+                   lambda x: jax.device_put(x, sharding), v)
+               for k, v in out.items()}
+        self._device_hot = out["hs_hot"]
+        self.mgr.attach_cache(out["hs_cache"])
+        self.mgr.device_pos = out["hs_pos"]
+        return out
+
+    def begin_batch(self, params: Tables, indices, depth: int,
+                    train: bool = False) -> Tuple[Tables, SwapPlan]:
+        """Fault the step's cold rows in, micro-batch by micro-batch, and
+        splice the (functionally) updated cache + indirection arrays into
+        the params the step will consume."""
+        idx = np.asarray(indices)
+        t_of = np.broadcast_to(
+            np.arange(idx.shape[1])[None, :, None], idx.shape)
+        cold = self._hot_map_np[t_of, idx] < 0
+        plan = plan_swaps(self.mgr, idx, depth, self.link, cold_mask=cold)
+        if train and cold.any():
+            # the step's scatter-add will touch every cold row's cached
+            # chunk — mark them dirty so eviction/flush writes them back
+            self.mgr.mark_dirty(t_of[cold], idx[cold])
+        out = dict(params)
+        out["hs_cache"] = self.mgr.device_cache
+        out["hs_pos"] = self.mgr.device_pos
+        self._last_plan = plan
+        return out, plan
+
+    def stall_seconds(self, plan: Optional[SwapPlan],
+                      service_s: float) -> float:
+        if plan is None:
+            return 0.0
+        return overlap_stall(plan.swap_s, service_s, plan.depth)
+
+    def end_batch(self, params: Tables) -> Tables:
+        """Re-attach the train step's RETURNED device arrays (the step
+        donates its inputs, so the manager's old cache buffer is dead)."""
+        self.mgr.attach_cache(params["hs_cache"])
+        self.mgr.device_pos = params["hs_pos"]
+        self._device_hot = params["hs_hot"]
+        return params
+
+    # -- Alg. 1 / Alg. 2 -----------------------------------------------------
+    def forward(self, tables: Tables, indices):
+        fast = tables["hs_hot"]                       # (T, S+1, d)
+        cache = tables["hs_cache"]                    # (C*K+1, d)
+        S = fast.shape[1] - 1
+        pad = cache.shape[0] - 1
+        slot = jax.vmap(lambda m, i: m[i], in_axes=(0, 1), out_axes=1)(
+            tables["hs_hot_map"], indices)            # (B, T, L)
+        hot = slot >= 0
+        fast_idx = jnp.where(hot, slot, S).astype(jnp.int32)
+        pos = jax.vmap(lambda m, i: m[i], in_axes=(0, 1), out_axes=1)(
+            tables["hs_pos"], indices)
+        pos = jnp.where(hot, pad, pos).astype(jnp.int32)
+        if self.pool_mode == "cached_bag":
+            pooled = self._cached_bag_pool(fast, cache, fast_idx, pos)
+        else:
+            # per-table paired gather + sum, mirroring the structure of
+            # dlrm_lib.embedding_bag exactly (each side of the add reads a
+            # zeros row when the other tier owns the lookup) — this is
+            # what makes host-tiered pooling bit-identical to the
+            # all-in-device reference
+            def one_table(f, fi, p):                  # (S+1,d), (B,L), (B,L)
+                rows = jnp.take(f, fi, axis=0) + jnp.take(cache, p, axis=0)
+                return rows.sum(axis=1)               # (B, d)
+            pooled = jax.vmap(one_table, in_axes=(0, 1, 1), out_axes=1)(
+                fast, fast_idx, pos)
+        return pooled, (fast_idx, pos)
+
+    def _cached_bag_pool(self, fast, cache, fast_idx, pos):
+        """Opt-in Pallas path: pool through the PR-1 cached-bag kernel by
+        re-shaping the cache gathers into a per-table fake bulk slab (the
+        fabric's re-pool idiom). Accumulation order differs from the jnp
+        reference, so this mode is allclose-equal, not bit-equal."""
+        b, t, l = fast_idx.shape
+        cold_rows = jnp.take(cache, pos, axis=0)      # (B, T, L, d)
+        fake = cold_rows.transpose(1, 0, 2, 3).reshape(t, b * l, -1)
+        fake_idx = jnp.broadcast_to(
+            (jnp.arange(b)[:, None, None] * l
+             + jnp.arange(l)[None, None, :]).astype(jnp.int32), (b, t, l))
+        return ops.cached_embedding_bag(fast, fake, fast_idx, fake_idx)
+
+    def sparse_apply(self, tables: Tables, ctx, g_pooled, update_fn):
+        """Split SGD scatter-add: hot rows into the slab, cold rows into the
+        flat chunk cache. Each side's "other tier" rows land on its zeros
+        pad, which is re-zeroed after the update — the combined effect is
+        bit-identical to the reference per-table scatter (each real row
+        receives exactly its batch's grads, in the same b-major order as
+        `table_wise_expand_grads`)."""
+        fast_idx, pos = ctx                           # (B, T, L) each
+        b, t, l = fast_idx.shape
+        d = g_pooled.shape[-1]
+        g_rows = jnp.broadcast_to(g_pooled[:, :, None, :], (b, t, l, d))
+        fi = fast_idx.transpose(1, 0, 2).reshape(t, b * l)
+        g_t = g_rows.transpose(1, 0, 2, 3).reshape(t, b * l, d)
+        out = dict(tables)
+        new_fast = update_fn(tables["hs_hot"], fi, g_t)
+        out["hs_hot"] = new_fast.at[:, -1].set(0.0)   # re-zero the miss slot
+        p_flat = pos.transpose(1, 0, 2).reshape(1, t * b * l)
+        g_flat = g_t.reshape(1, t * b * l, d)
+        new_cache = update_fn(tables["hs_cache"][None], p_flat, g_flat)[0]
+        out["hs_cache"] = new_cache.at[-1].set(0.0)   # re-zero the pad row
+        return out
+
+    # -- host round-trip -----------------------------------------------------
+    def flush_host_weights(self) -> np.ndarray:
+        """Full (T, R, d) weights with every training update folded in:
+        dirty chunks written back first, then the hot slab overwrites its
+        rows (the slab is canonical for hot rows — their chunk copies are
+        stale by design, since forward/backward never touch them)."""
+        host = self.mgr.flush()
+        if self._device_hot is not None and self.hot_slots:
+            slab = np.asarray(self._device_hot)
+            for tt in range(self.mgr.T):
+                host[tt, self._hot_rows[tt]] = slab[tt, :self.hot_slots]
+        return host
+
+
+def build_host_exchange(
+    cfg: DLRMConfig, *,
+    device_capacity_bytes: int,
+    alpha: float = 0.0,
+    seed: int = 0,
+    tables: Optional[Any] = None,
+    chunk_rows: Optional[int] = None,
+    cache_slots: Optional[int] = None,
+    hot_fraction: float = 0.5,
+    link: Optional["perf_model.Interconnect"] = None,
+    policy: str = "clock",
+    pool_mode: str = "paired",
+    profile_batches: int = 8,
+) -> HostTieredExchange:
+    """Size + build the host tier for a device-memory budget.
+
+    The budget splits `hot_fraction` to the HBM hot slab (top rows per
+    table by measured frequency — deterministic in (cfg, alpha, seed), the
+    same profile serving will see) and the rest to the device chunk cache.
+    `chunk_rows` defaults to the perf model's pick
+    (`perf_model.choose_hoststore_config`) over the PCIe `link`.
+    """
+    if device_capacity_bytes <= 0:
+        raise ValueError(
+            f"device_capacity_bytes must be > 0, got {device_capacity_bytes}")
+    if not 0.0 <= hot_fraction < 1.0:
+        raise ValueError(f"hot_fraction must be in [0, 1), got {hot_fraction}")
+    if tables is None:
+        from repro.core.dlrm import init_dlrm
+        tables = init_dlrm(jax.random.PRNGKey(seed), cfg)["tables"]
+    host = np.asarray(tables)
+    t_n, r_n, d = host.shape
+    row_bytes = d * host.dtype.itemsize
+    link = link if link is not None else perf_model.host_link()
+
+    hot_budget = int(hot_fraction * device_capacity_bytes)
+    hot_per_table = min(r_n, hot_budget // max(1, t_n * row_bytes))
+    freq = np.asarray(measure_row_freq(cfg, alpha=alpha, seed=seed,
+                                       n_batches=profile_batches))
+    # stable argsort on -freq: deterministic election, ties by row id
+    hot_rows = np.stack([np.argsort(-freq[t], kind="stable")[:hot_per_table]
+                         for t in range(t_n)])
+
+    cache_budget = device_capacity_bytes - hot_per_table * t_n * row_bytes
+    if chunk_rows is None:
+        chunk_rows, _ = perf_model.choose_hoststore_config(
+            cfg, link, cache_budget)
+    chunk_rows = max(1, min(int(chunk_rows), r_n))
+    if cache_slots is None:
+        cache_slots = max(1, cache_budget // (chunk_rows * row_bytes))
+    mgr = ChunkParamMgr(host, chunk_rows, int(cache_slots), policy=policy)
+    return HostTieredExchange(cfg, None, 1, mgr=mgr, hot_rows=hot_rows,
+                              link=link, pool_mode=pool_mode)

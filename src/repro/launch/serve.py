@@ -68,6 +68,23 @@ def main(argv: Optional[list] = None) -> int:
                          "(overlaps embedding exchange with MLP compute); "
                          "0 = auto (planner-resolved per compiled batch "
                          "shape under the engine's plan)")
+    ap.add_argument("--host-capacity-mb", type=float, default=None,
+                    help="device embedding budget (MiB): tables beyond it "
+                         "serve through the pinned-host chunk tier "
+                         "(repro.hoststore) with async swap-in; "
+                         "single-board path only")
+    ap.add_argument("--host-chunk-rows", type=int, default=None,
+                    help="rows per host-tier chunk (default: perf-model "
+                         "pick over the PCIe link)")
+    ap.add_argument("--host-hot-fraction", type=float, default=0.5,
+                    help="share of the device budget spent on the HBM hot "
+                         "slab (the rest is the chunk cache — lower it if "
+                         "a step's working set overflows the cache)")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="measured-hardware calibration JSON "
+                         "(repro.core.calibration): host_link overrides "
+                         "the PCIe model, service_multiplier the "
+                         "hit-ratio monitor's retiming curve")
     # -- fleet / scenario flags (repro.cluster path) -----------------------
     ap.add_argument("--replicas", type=int, default=1,
                     help=">1 serves a fleet of replica sub-meshes behind "
@@ -126,16 +143,31 @@ def main(argv: Optional[list] = None) -> int:
     if args.smoke:
         cfg = cfg.reduced()
 
+    fleet_path = (args.fleet_mode == "sharded" or args.replicas > 1
+                  or args.scenario or args.autoscale or args.record_trace
+                  or args.replay_trace)
+    if args.host_capacity_mb is not None and fleet_path:
+        raise SystemExit(
+            "--host-capacity-mb is single-board only: give each fleet "
+            "board its own Engine/host tier instead")
     if args.fleet_mode == "sharded":
         return _fabric_main(args, cfg)
-    if (args.replicas > 1 or args.scenario or args.autoscale
-            or args.record_trace or args.replay_trace):
+    if fleet_path:
         return _cluster_main(args, cfg, full_cfg)
 
     engine = Engine(cfg, model_axis=args.model_axis, plan=args.plan,
                     exchange=args.exchange, alpha=args.alpha,
                     seed=args.seed, fast_mb=args.fast_mb,
-                    pipeline_depth=args.pipeline_depth or None, verbose=True)
+                    pipeline_depth=args.pipeline_depth or None,
+                    host_capacity_mb=args.host_capacity_mb,
+                    host_chunk_rows=args.host_chunk_rows,
+                    host_hot_fraction=args.host_hot_fraction,
+                    calibration=args.calibration, verbose=True)
+    if args.host_capacity_mb is not None:
+        tbl_mb = cfg.num_tables * cfg.rows_per_table * cfg.embed_dim \
+            * 4 / 2 ** 20
+        print(f"[serve] host chunk tier: tables {tbl_mb:.3f} MiB vs device "
+              f"budget {args.host_capacity_mb:.3f} MiB")
     session = engine.serve_session(max_batch_queries=args.max_batch_queries,
                                    max_wait_ms=args.max_wait_ms)
     if args.qps > 0:
@@ -260,9 +292,12 @@ def _cluster_main(args, cfg, full_cfg) -> int:
 
     monitor = None
     if scen_name == "zipf_drift":
-        # drift erodes the frequency-elected fast tier; monitor + refresh
+        # drift erodes the frequency-elected fast tier; monitor + refresh;
+        # a --calibration artifact replaces the modeled hybrid-memory
+        # retiming curve with the measured one
         monitor = HitRatioMonitor(cfg, alpha=args.alpha, seed=args.seed,
-                                  model_cfg=full_cfg)
+                                  model_cfg=full_cfg,
+                                  service_multiplier=args.calibration)
     autoscaler = (SLAAutoscaler(args.autoscale_sla_ms or args.sla_ms,
                                 min_replicas=args.min_replicas,
                                 max_replicas=args.max_replicas)

@@ -50,6 +50,22 @@ def main(argv: Optional[list] = None) -> int:
     p.add_argument("--compress-grads", action="store_true",
                    help="int8 block-quantized dense-grad all-reduce with "
                         "error feedback (optim/compression.py)")
+    p.add_argument("--host-capacity-mb", type=float, default=None,
+                   help="device embedding budget (MiB): tables beyond it "
+                        "train through the pinned-host chunk tier "
+                        "(repro.hoststore; SGD only, dirty chunks write "
+                        "back to host)")
+    p.add_argument("--host-chunk-rows", type=int, default=None,
+                   help="rows per host-tier chunk (default: perf-model "
+                        "pick over the PCIe link)")
+    p.add_argument("--host-hot-fraction", type=float, default=0.5,
+                   help="share of the device budget spent on the HBM hot "
+                        "slab (the rest is the chunk cache — lower it if "
+                        "a step's working set overflows the cache)")
+    p.add_argument("--calibration", default=None, metavar="PATH",
+                   help="measured-hardware calibration JSON "
+                        "(repro.core.calibration): host_link overrides "
+                        "the PCIe model")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=50)
     args = p.parse_args(argv)
@@ -66,6 +82,10 @@ def main(argv: Optional[list] = None) -> int:
             print("[train] --pipeline-depth/--compress-grads are DLRM-only; "
                   "ignoring them for the lm workload")
             args.pipeline_depth, args.compress_grads = 0, False
+        if args.host_capacity_mb is not None:
+            print("[train] --host-capacity-mb is DLRM-only; ignoring it "
+                  "for the lm workload")
+            args.host_capacity_mb = None
     if args.smoke:
         cfg = cfg.reduced()
 
@@ -74,7 +94,11 @@ def main(argv: Optional[list] = None) -> int:
                     lr=args.lr, alpha=args.alpha, seed=args.seed,
                     fast_mb=args.fast_mb,
                     pipeline_depth=args.pipeline_depth or None,
-                    compress_grads=args.compress_grads, verbose=True)
+                    compress_grads=args.compress_grads,
+                    host_capacity_mb=args.host_capacity_mb,
+                    host_chunk_rows=args.host_chunk_rows,
+                    host_hot_fraction=args.host_hot_fraction,
+                    calibration=args.calibration, verbose=True)
     session = engine.train_session(ckpt_dir=args.ckpt_dir,
                                    ckpt_every=args.ckpt_every,
                                    batch=args.batch, seq=args.seq,

@@ -87,6 +87,35 @@ class EmbeddingExchange:
             out[k] = update_fn(tables[k], fi, fg)
         return out
 
+    # -- host-tier session hooks (no-ops for device-resident exchanges) ----
+    # An exchange whose tables do NOT entirely live on device (the
+    # hoststore's `HostTieredExchange`) needs to see the session's params
+    # and every step's indices OUTSIDE jit: to build its param layout, to
+    # fault chunks in before the step launches, and to re-attach the
+    # donated cache arrays afterwards. Sessions call these hooks
+    # unconditionally; device-resident exchanges inherit the no-ops.
+    def init_session_params(self, params: Tables, mesh) -> Optional[Tables]:
+        """Build + device-place this exchange's param layout from freshly
+        initialized params. None means "not handled": the session falls
+        back to the standard `shard_dlrm_params` placement."""
+        return None
+
+    def begin_batch(self, params: Tables, indices, depth: int,
+                    train: bool = False) -> Tuple[Tables, Any]:
+        """Called with a step's host-side indices BEFORE the step runs.
+        Returns (possibly updated params, an opaque swap plan or None)."""
+        return params, None
+
+    def stall_seconds(self, plan, service_s: float) -> float:
+        """Modeled seconds of swap stall the step exposes (virtual clock),
+        given the plan from `begin_batch` and the measured compute time."""
+        return 0.0
+
+    def end_batch(self, params: Tables) -> Tables:
+        """Called with the step's RETURNED params (train steps donate their
+        inputs — any state the exchange mirrors must re-attach here)."""
+        return params
+
 
 class TableWiseExchange(EmbeddingExchange):
     """Paper "unsharded": each processor owns T/n whole tables; pooled-row

@@ -324,3 +324,28 @@ def test_bench_fabric_registered():
     from benchmarks import run as bench_run
 
     assert "fabric" in {name for name, _ in bench_run.SECTIONS}
+
+
+def test_partition_warns_at_plan_time_near_capacity():
+    """Regression: the >95%-fill warning must fire from partition_rows at
+    PLAN time, not only when someone later prints summary()."""
+    import warnings
+
+    from repro.fabric import partition_tables
+
+    cfg = _cfg()
+    tbytes = cfg.rows_per_table * cfg.embed_dim * 2
+    freq = np.ones(cfg.num_tables)
+    # 2 equal boards of 4 equal tables: capacity 2% above the exact fill
+    # puts every board at ~98% — inside the 5%-of-overflow band
+    per_board = (cfg.num_tables // 2) * tbytes
+    with pytest.warns(RuntimeWarning, match="within 5% of overflow"):
+        pm = partition_tables(cfg, freq, 2, int(per_board * 1.02))
+    assert pm.overfull_message() is not None
+    # the message also lands in summary() output
+    assert "WARNING" in pm.summary()
+    # generous capacity: plan time stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        pm2 = partition_tables(cfg, freq, 2, cfg.embedding_bytes)
+    assert pm2.overfull_message() is None

@@ -1,0 +1,534 @@
+"""repro.hoststore: the pinned-host chunked embedding tier.
+
+The invariants the subsystem must hold:
+
+  * ChunkParamMgr: every requested row is resident after ensure(), hits
+    and faults are accounted exactly, eviction writes dirty chunks back
+    before reuse, flush() round-trips every update, and the step-level
+    pin keeps a whole batch's working set resident simultaneously;
+  * the swap scheduler slices micro-batches exactly like the parallel
+    step and exposes only the un-hidable stall at depth > 1;
+  * forward pooling and the split SGD scatter are BIT-IDENTICAL to the
+    all-in-device reference (`dlrm_lib.embedding_bag` + per-table
+    scatter-add);
+  * THE hoststore equivalence invariant (subprocess): a model ~1.6x too
+    big for the device budget, served through Engine.serve_session(),
+    returns bit-identical outputs to the unconstrained reference on a
+    recorded zipf_drift trace — cold cache and warm; training round-trips
+    dirty chunks exactly (post-train host weights == reference weights);
+  * calibration artifacts load, validate, and override the host link and
+    the monitor's service multiplier;
+  * the perf-model terms behave (swap time scaling, query-bound
+    monotonicity in link bandwidth, feasible chunk-size choice);
+  * the bench is registered in benchmarks/run.py.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_dlrm
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cfg(**kw):
+    return dataclasses.replace(
+        get_dlrm("dlrm-rm2-small-unsharded").reduced(), batch_size=8, **kw)
+
+
+def _tables(t=2, r=13, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(t, r, d)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# ChunkParamMgr (unit)
+# ---------------------------------------------------------------------------
+def test_chunk_coverage_exact_and_disjoint():
+    from repro.hoststore import ChunkParamMgr
+
+    for chunk_rows in (1, 2, 4, 5, 13):
+        mgr = ChunkParamMgr(_tables(), chunk_rows, 4)
+        seen = np.zeros((mgr.T, mgr.R), int)
+        for c in range(mgr.n_chunks):
+            t, lo, hi = mgr.chunk_range(c)
+            assert 0 < hi - lo <= chunk_rows
+            seen[t, lo:hi] += 1
+        # every (table, row) covered by EXACTLY one chunk
+        assert (seen == 1).all()
+        # chunk_of agrees with chunk_range
+        for t in range(mgr.T):
+            for r in range(mgr.R):
+                c = int(mgr.chunk_of(t, r))
+                ct, lo, hi = mgr.chunk_range(c)
+                assert ct == t and lo <= r < hi
+
+
+def test_ensure_makes_rows_resident_and_accounts():
+    from repro.hoststore import ChunkParamMgr
+
+    tables = _tables()
+    mgr = ChunkParamMgr(tables, 2, 4)
+    st = mgr.ensure(np.array([0, 0, 1]), np.array([0, 1, 5]))
+    # rows 0,1 share one chunk; row 5 of table 1 is another
+    assert st.needed_chunks == 2 and st.faulted_chunks == 2
+    assert st.hit_chunks == 0 and st.requested_rows == 3
+    assert st.bytes_in == 2 * mgr.chunk_bytes and st.bytes_out == 0
+    assert mgr.is_resident(np.array([0, 0, 1]), np.array([0, 1, 5])).all()
+    # the device cache holds the right values at the mapped positions
+    cache = np.asarray(mgr.device_cache)
+    pos = mgr.host_pos
+    for t, r in [(0, 0), (0, 1), (1, 5)]:
+        assert np.array_equal(cache[pos[t, r]], tables[t, r])
+    # repeat: pure hit, no traffic
+    st2 = mgr.ensure(np.array([0]), np.array([1]))
+    assert st2.hit_chunks == 1 and st2.faulted_chunks == 0
+    assert st2.bytes_moved == 0
+    # pad row stays zero, non-resident rows map to pad
+    assert not cache[mgr.pad_pos].any()
+    assert pos[1, 12] == mgr.pad_pos
+
+
+def test_ensure_rejects_oversized_request_and_validates():
+    from repro.hoststore import ChunkParamMgr
+
+    mgr = ChunkParamMgr(_tables(), 1, 3)
+    with pytest.raises(ValueError, match="chunk cache"):
+        mgr.ensure(np.zeros(4, int), np.arange(4))
+    with pytest.raises(ValueError):
+        ChunkParamMgr(_tables(), 0, 4)
+    with pytest.raises(ValueError):
+        ChunkParamMgr(_tables(), 2, 0)
+    with pytest.raises(ValueError):
+        ChunkParamMgr(_tables(), 2, 4, policy="rand")
+    with pytest.raises(ValueError):
+        mgr.attach_cache(jnp.zeros((2, 2)))
+
+
+def test_eviction_writes_dirty_chunks_back():
+    from repro.hoststore import ChunkParamMgr
+
+    tables = _tables()
+    for policy in ("clock", "lfu"):
+        mgr = ChunkParamMgr(tables, 2, 2, policy=policy)
+        mgr.ensure(np.array([0, 0]), np.array([0, 2]))       # chunks 0, 1
+        # simulate a device update to row (0, 0) then mark its chunk dirty
+        pos = mgr.host_pos
+        mgr.device_cache = mgr.device_cache.at[pos[0, 0]].add(1.0)
+        mgr.mark_dirty(np.array([0]), np.array([0]))
+        assert len(mgr.dirty_chunks) == 1
+        # force both slots to turn over -> the dirty chunk writes back
+        st = mgr.ensure(np.array([1, 1]), np.array([0, 2]))
+        assert st.evicted_chunks == 2 and st.writebacks == 1
+        assert st.bytes_out == mgr.chunk_bytes
+        assert np.array_equal(mgr.host[0, 0], tables[0, 0] + 1.0)
+        assert mgr.dirty_chunks.size == 0
+        # un-dirtied neighbor row came back untouched
+        assert np.array_equal(mgr.host[0, 1], tables[0, 1])
+
+
+def test_mark_dirty_requires_residency():
+    from repro.hoststore import ChunkParamMgr
+
+    mgr = ChunkParamMgr(_tables(), 2, 4)
+    with pytest.raises(ValueError, match="non-resident"):
+        mgr.mark_dirty(np.array([0]), np.array([0]))
+
+
+def test_flush_round_trips_all_dirty_chunks():
+    from repro.hoststore import ChunkParamMgr
+
+    tables = _tables()
+    mgr = ChunkParamMgr(tables, 3, 4)
+    mgr.ensure(np.array([0, 1, 1]), np.array([1, 4, 9]))
+    pos = mgr.host_pos
+    for t, r in [(0, 1), (1, 4), (1, 9)]:
+        mgr.device_cache = mgr.device_cache.at[pos[t, r]].add(float(t + r))
+    mgr.mark_dirty(np.array([0, 1, 1]), np.array([1, 4, 9]))
+    flushed = mgr.flush()
+    expect = tables.copy()
+    for t, r in [(0, 1), (1, 4), (1, 9)]:
+        expect[t, r] += np.float32(t + r)
+    assert np.array_equal(flushed, expect)
+    assert np.array_equal(mgr.host, expect)
+    assert mgr.dirty_chunks.size == 0
+
+
+def test_pin_excludes_victims_and_raises_when_everything_pinned():
+    from repro.hoststore import ChunkParamMgr
+
+    mgr = ChunkParamMgr(_tables(), 1, 2)
+    mgr.ensure(np.array([0, 0]), np.array([0, 1]))           # chunks 0, 1
+    pinned = np.array([0, 1], np.int64)
+    with pytest.raises(ValueError, match="too small"):
+        mgr.ensure(np.array([0]), np.array([5]), pin=pinned)
+    # pinning only chunk 0 forces chunk 1 out
+    mgr.ensure(np.array([0]), np.array([5]), pin=np.array([0], np.int64))
+    assert mgr.is_resident(np.array([0, 0]), np.array([0, 5])).all()
+    assert not mgr.is_resident(np.array([0]), np.array([1])).all()
+
+
+# ---------------------------------------------------------------------------
+# swap scheduler (unit)
+# ---------------------------------------------------------------------------
+def test_micro_batch_indices_mirror_step_slicing():
+    from repro.hoststore import micro_batch_indices
+
+    idx = np.arange(8 * 2 * 3).reshape(8, 2, 3)
+    mbs = micro_batch_indices(idx, 4)
+    assert len(mbs) == 4 and all(m.shape == (2, 2, 3) for m in mbs)
+    assert np.array_equal(np.concatenate(mbs), idx)
+    # indivisible depth or depth 1: one slice, exactly the step's batch
+    assert len(micro_batch_indices(idx, 3)) == 1
+    assert len(micro_batch_indices(idx, 1)) == 1
+
+
+def test_plan_swaps_pins_step_working_set():
+    from repro.core import perf_model
+    from repro.hoststore import ChunkParamMgr, plan_swaps
+
+    tables = _tables(t=1, r=32, d=2)
+    link = perf_model.host_link()
+    # working set of the whole batch (8 chunks) exceeds the cache -> the
+    # step can never execute on one snapshot; plan_swaps must say so
+    mgr = ChunkParamMgr(tables, 2, 6)
+    idx = np.arange(16).reshape(8, 1, 2)
+    with pytest.raises(ValueError, match="working set"):
+        plan_swaps(mgr, idx, 4, link)
+    # with room, every micro-batch's rows stay resident through the LAST
+    # ensure — no earlier slice's chunk was evicted for a later slice
+    mgr = ChunkParamMgr(tables, 2, 8)
+    plan = plan_swaps(mgr, idx, 4, link)
+    assert len(plan.stats) == 4
+    t_all = np.zeros_like(idx)
+    assert mgr.is_resident(t_all.ravel(), idx.ravel()).all()
+    assert plan.faulted_chunks == 8
+    assert plan.total_swap_s > 0
+
+
+def test_overlap_stall_hides_behind_compute():
+    from repro.hoststore import overlap_stall
+
+    # depth 1: everything serializes
+    assert overlap_stall([0.3], 1.0, 1) == pytest.approx(0.3)
+    # depth 4, generous compute windows: only slice 0's swap is exposed
+    assert overlap_stall([0.1, 0.1, 0.1, 0.1], 4.0, 4) == pytest.approx(0.1)
+    # tight windows: the overflow beyond service/k is exposed too
+    stall = overlap_stall([0.2, 0.2, 0.2, 0.2], 0.4, 4)
+    assert stall == pytest.approx(0.2 + 3 * (0.2 - 0.1))
+    assert overlap_stall([], 1.0, 4) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# exchange: bit-identical pooling + split scatter (unit, single device)
+# ---------------------------------------------------------------------------
+def test_forward_and_sparse_apply_bit_identical_to_reference():
+    from repro.core import dlrm as dlrm_lib
+    from repro.hoststore import build_host_exchange
+    from repro.parallel.updates import sgd_row_update
+
+    cfg = _cfg()
+    tables = np.asarray(
+        dlrm_lib.init_dlrm(jax.random.PRNGKey(0), cfg)["tables"])
+    actual = tables.size * tables.itemsize
+    ex = build_host_exchange(cfg, device_capacity_bytes=int(actual / 1.6),
+                             tables=tables, chunk_rows=2, hot_fraction=0.25,
+                             alpha=1.05)
+    rng = np.random.default_rng(1)
+    idx = rng.integers(0, cfg.rows_per_table,
+                       (cfg.batch_size, cfg.num_tables,
+                        cfg.lookups_per_table)).astype(np.int32)
+    t_of = np.broadcast_to(
+        np.arange(cfg.num_tables)[None, :, None], idx.shape)
+    ex.mgr.ensure(t_of.ravel(), idx.ravel())
+    tbl = {"hs_hot": jnp.asarray(ex._hot_init),
+           "hs_cache": ex.mgr.device_cache,
+           "hs_hot_map": jnp.asarray(ex._hot_map_np),
+           "hs_pos": ex.mgr.device_pos}
+    pooled, ctx = jax.jit(ex.forward)(tbl, jnp.asarray(idx))
+    ref = dlrm_lib.embedding_bag(jnp.asarray(tables), jnp.asarray(idx))
+    assert np.array_equal(np.asarray(pooled), np.asarray(ref))
+
+    # split SGD scatter == the reference per-table scatter, bitwise
+    lr = 0.05
+    upd = sgd_row_update(lr)
+    g = jnp.asarray(rng.normal(
+        size=(cfg.batch_size, cfg.num_tables,
+              cfg.embed_dim)).astype(np.float32))
+    new = jax.jit(lambda tb, c, gg: ex.sparse_apply(tb, c, gg, upd))(
+        tbl, ctx, g)
+    flat_idx = jnp.asarray(idx).transpose(1, 0, 2).reshape(
+        cfg.num_tables, -1)
+    flat_g = jnp.broadcast_to(
+        g[:, :, None, :], (*idx.shape, cfg.embed_dim)
+    ).transpose(1, 0, 2, 3).reshape(cfg.num_tables, -1, cfg.embed_dim)
+    ref_new = np.asarray(upd(jnp.asarray(tables), flat_idx, flat_g))
+    # reassemble the tiered result back into (T, R, d)
+    got = ex.mgr.host.copy()
+    cache = np.asarray(new["hs_cache"])
+    pos = ex.mgr.host_pos
+    res = pos < ex.mgr.pad_pos
+    got[res] = cache[pos[res]]
+    slab = np.asarray(new["hs_hot"])
+    for t in range(cfg.num_tables):
+        got[t, ex._hot_rows[t]] = slab[t, :ex.hot_slots]
+    touched = np.zeros((cfg.num_tables, cfg.rows_per_table), bool)
+    touched[t_of.ravel(), idx.ravel()] = True
+    assert np.array_equal(got[touched], ref_new[touched])
+    # pads stayed zero
+    assert not np.asarray(new["hs_cache"])[-1].any()
+    assert not np.asarray(new["hs_hot"])[:, -1].any()
+
+
+def test_build_host_exchange_sizing_and_validation():
+    from repro.hoststore import build_host_exchange
+
+    cfg = _cfg()
+    actual = (cfg.num_tables * cfg.rows_per_table * cfg.embed_dim
+              * np.dtype(np.float32).itemsize)
+    ex = build_host_exchange(cfg, device_capacity_bytes=int(actual / 1.6),
+                             hot_fraction=0.25, chunk_rows=2)
+    row_b = cfg.embed_dim * 4
+    device_bytes = (ex.hot_slots * cfg.num_tables * row_b
+                    + ex.mgr.cache_slots * ex.mgr.chunk_bytes)
+    assert device_bytes <= actual / 1.6          # fits the budget
+    assert ex.mgr.cache_slots >= 1 and ex.hot_slots >= 1
+    with pytest.raises(ValueError):
+        build_host_exchange(cfg, device_capacity_bytes=0)
+    with pytest.raises(ValueError):
+        build_host_exchange(cfg, device_capacity_bytes=1024,
+                            hot_fraction=1.0)
+
+
+# ---------------------------------------------------------------------------
+# calibration artifacts
+# ---------------------------------------------------------------------------
+def test_calibration_loader_and_service_multiplier(tmp_path):
+    from repro.core.calibration import (load_calibration,
+                                        service_multiplier_from)
+
+    art = {"host_link": {"latency_us": 3.0, "bandwidth_gbs": 12.0},
+           "service_multiplier": {"hit_ratio": [0.0, 0.5, 1.0],
+                                  "multiplier": [3.0, 2.0, 1.0]}}
+    path = tmp_path / "calib.json"
+    path.write_text(json.dumps(art))
+    assert load_calibration(art) is art
+    assert load_calibration(str(path)) == art
+
+    f = service_multiplier_from(str(path))
+    assert f(0.0) == pytest.approx(3.0)
+    assert f(0.25) == pytest.approx(2.5)
+    assert f(1.0) == pytest.approx(1.0)
+    assert f(2.0) == pytest.approx(1.0)          # flat beyond endpoints
+    assert service_multiplier_from(
+        {"service_multiplier": 1.7})(0.3) == pytest.approx(1.7)
+    with pytest.raises(ValueError, match="service_multiplier"):
+        service_multiplier_from({"host_link": {}})
+    with pytest.raises(ValueError, match="increasing"):
+        service_multiplier_from({"service_multiplier": {
+            "hit_ratio": [0.5, 0.5], "multiplier": [1.0, 2.0]}})
+    with pytest.raises(ValueError):
+        service_multiplier_from({"service_multiplier": {
+            "hit_ratio": [0.5], "multiplier": [1.0]}})
+    bad = tmp_path / "bad.json"
+    bad.write_text("[1, 2]")
+    with pytest.raises(ValueError, match="JSON object"):
+        load_calibration(str(bad))
+
+
+def test_host_link_accepts_calibration(tmp_path):
+    from repro.core import perf_model
+
+    art = {"host_link": {"latency_us": 3.0, "bandwidth_gbs": 12.0}}
+    path = tmp_path / "calib.json"
+    path.write_text(json.dumps(art))
+    link = perf_model.host_link(calibration=str(path))
+    assert link.latency == pytest.approx(3.0e-6)
+    assert link.bandwidth == pytest.approx(12.0e9)
+    # partial artifact: only the provided field overrides
+    part = perf_model.host_link(
+        latency_us=7.0, calibration={"host_link": {"bandwidth_gbs": 20.0}})
+    assert part.latency == pytest.approx(7.0e-6)
+    assert part.bandwidth == pytest.approx(20.0e9)
+    # no host_link entry: defaults survive
+    dflt = perf_model.host_link(calibration={})
+    assert dflt.bandwidth == pytest.approx(16.0e9)
+
+
+def test_monitor_accepts_calibration_path(tmp_path):
+    from repro.cluster import HitRatioMonitor
+
+    art = {"service_multiplier": {"hit_ratio": [0.0, 1.0],
+                                  "multiplier": [4.0, 1.0]}}
+    path = tmp_path / "calib.json"
+    path.write_text(json.dumps(art))
+    mon = HitRatioMonitor(_cfg(), service_multiplier=str(path))
+    assert mon.service_multiplier(0.0) == pytest.approx(4.0)
+    assert mon.service_multiplier(1.0) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# perf model terms
+# ---------------------------------------------------------------------------
+def test_host_swap_time_scaling():
+    from repro.core import perf_model
+
+    link = perf_model.host_link(latency_us=10.0, bandwidth_gbs=10.0)
+    assert perf_model.host_swap_time(0, link) == 0.0
+    one = perf_model.host_swap_time(1e6, link, n_transfers=1)
+    assert one == pytest.approx(10e-6 + 1e6 / 10e9)
+    # more DMA descriptors for the same bytes cost more
+    assert perf_model.host_swap_time(1e6, link, n_transfers=8) > one
+
+
+def test_hoststore_query_bound_monotone_in_bandwidth_and_hit_ratio():
+    from repro.core import perf_model
+
+    cfg = _cfg()
+    sys_ = perf_model.recspeed_system()
+    t_steps = [perf_model.hoststore_query_bound(
+        cfg, sys_, perf_model.host_link(bandwidth_gbs=g),
+        device_hit_ratio=0.5, chunk_rows=4, pipeline_depth=2).t_step
+        for g in (8.0, 16.0, 32.0, 64.0)]
+    assert t_steps[0] > t_steps[1] > t_steps[2] > t_steps[3]
+    # a better device hit ratio can only help
+    lo = perf_model.hoststore_query_bound(
+        cfg, sys_, perf_model.host_link(), 0.2, 4, pipeline_depth=2)
+    hi = perf_model.hoststore_query_bound(
+        cfg, sys_, perf_model.host_link(), 0.9, 4, pipeline_depth=2)
+    assert hi.t_step < lo.t_step
+    assert "t_host_swap" in lo.notes
+
+
+def test_choose_hoststore_config_feasible():
+    from repro.core import perf_model
+
+    cfg = _cfg()
+    link = perf_model.host_link()
+    row_b = cfg.embed_dim * perf_model.recspeed_system().elem_bytes
+    best, sweep = perf_model.choose_hoststore_config(
+        cfg, link, cache_budget_bytes=256 * row_b)
+    assert best >= 1
+    if sweep:
+        # the pick is the argmin of the swept step times
+        assert sweep[best] == min(sweep.values())
+        assert all(
+            cr * row_b * 1 <= 256 * row_b for cr in sweep)   # grid sane
+
+
+# ---------------------------------------------------------------------------
+# THE equivalence invariants (subprocess: real Engine sessions)
+# ---------------------------------------------------------------------------
+SERVE_EQUIVALENCE = r"""
+import dataclasses
+import numpy as np
+from repro.configs.registry import get_dlrm
+from repro.engine import Engine
+from repro.traffic import load_trace, make_scenario, materialize_query, \
+    record_trace
+
+cfg = dataclasses.replace(get_dlrm("dlrm-rm2-small-unsharded").reduced(),
+                          batch_size=8)
+actual = cfg.num_tables * cfg.rows_per_table * cfg.embed_dim * 4
+cap_mb = (actual / 1.6) / 2 ** 20          # tables are 1.6x over budget
+assert actual > 1.5 * cap_mb * 2 ** 20
+
+DEPTH = 4
+scenario = make_scenario("zipf_drift", alpha=1.05)
+events = scenario.events(24, qps=500.0, seed=0)
+record_trace("/tmp/hoststore_drift.jsonl", events, scenario, qps=500.0,
+             seed=0)
+_, events = load_trace("/tmp/hoststore_drift.jsonl")
+
+# pipeline depth changes MLP micro-batch shapes (1-ulp matmul tiling), so
+# the reference runs at the SAME depth as the host-tiered session
+ref = Engine(cfg, model_axis=1, pipeline_depth=DEPTH).serve_session(
+    max_batch_queries=1)
+host = Engine(cfg, model_axis=1, pipeline_depth=DEPTH,
+              host_capacity_mb=cap_mb, host_hot_fraction=0.25,
+              host_chunk_rows=1).serve_session(max_batch_queries=1)
+ex = host._exchange_inst
+
+for phase in ("cold", "warm"):
+    faults = 0
+    for ev in events:
+        q = materialize_query(cfg, ev)
+        p_ref, _ = ref._execute([q])
+        p_host, _ = host._execute([q])
+        assert np.array_equal(p_ref, p_host), \
+            f"{phase}: qid {ev.qid} diverged"
+        faults += ex._last_plan.faulted_chunks
+    print(f"{phase}: {faults} chunk faults")
+    if phase == "cold":
+        cold_faults = faults
+assert faults < cold_faults, "warm replay should fault less than cold"
+print("OK")
+"""
+
+
+def test_host_tier_serving_bit_identical_over_budget(subproc):
+    r = subproc(SERVE_EQUIVALENCE, n_devices=1, timeout=600)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "OK" in r.stdout
+
+
+TRAIN_ROUND_TRIP = r"""
+import dataclasses
+import numpy as np
+import jax
+from repro.configs.registry import get_dlrm
+from repro.engine import Engine
+
+cfg = dataclasses.replace(get_dlrm("dlrm-rm2-small-unsharded").reduced(),
+                          batch_size=8)
+actual = cfg.num_tables * cfg.rows_per_table * cfg.embed_dim * 4
+cap_mb = (actual / 1.6) / 2 ** 20
+DEPTH, STEPS, LR = 4, 6, 0.05
+
+ref = Engine(cfg, model_axis=1, lr=LR,
+             pipeline_depth=DEPTH).train_session()
+rep_r = ref.run(STEPS)
+ref_tables = np.asarray(jax.device_get(ref.params["tables"]))
+
+host = Engine(cfg, model_axis=1, lr=LR, pipeline_depth=DEPTH,
+              host_capacity_mb=cap_mb, host_hot_fraction=0.25,
+              host_chunk_rows=2).train_session()
+rep_h = host.run(STEPS)
+host_tables = host.exchange_inst.flush_host_weights()
+
+assert np.array_equal(ref_tables, host_tables), \
+    f"maxdiff {np.abs(ref_tables - host_tables).max()}"
+# the MLPs trained identically too (same losses, same weights)
+for k in ("bot_mlp", "top_mlp"):
+    for a, b in zip(jax.tree_util.tree_leaves(ref.params[k]),
+                    jax.tree_util.tree_leaves(host.params[k])):
+        assert np.array_equal(np.asarray(jax.device_get(a)),
+                              np.asarray(jax.device_get(b)))
+losses_r = [float(h["loss"]) for h in rep_r.history]
+losses_h = [float(h["loss"]) for h in rep_h.history]
+assert losses_r == losses_h
+print("OK")
+"""
+
+
+def test_host_tier_training_round_trips_dirty_chunks(subproc):
+    r = subproc(TRAIN_ROUND_TRIP, n_devices=1, timeout=600)
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "OK" in r.stdout
+
+
+def test_bench_hoststore_registered():
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    from benchmarks import run as bench_run
+
+    names = {name for name, _ in bench_run.SECTIONS}
+    assert "hoststore" in names
+    assert "hoststore" in bench_run.EMITS_JSON

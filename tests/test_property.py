@@ -206,6 +206,88 @@ def test_row_range_split_covers_rows_exactly(n_boards, rows, alpha):
     assert partition_rows(cfg, freq, n_boards, cap) == pm
 
 
+# ------------------------------------------------------- host chunk tier
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000), t=st.integers(1, 3),
+       r=st.integers(8, 40), chunk_rows=st.integers(1, 5),
+       cache_slots=st.integers(2, 6), n_req=st.integers(1, 12))
+def test_hoststore_ensure_leaves_requested_rows_resident(
+        seed, t, r, chunk_rows, cache_slots, n_req):
+    """After `ensure`, every requested row is resident and the accounting
+    balances (needed == hits + faults); a request whose chunk working set
+    exceeds the cache refuses instead of thrashing."""
+    from repro.hoststore import ChunkParamMgr
+
+    rng = np.random.RandomState(seed)
+    tables = rng.randn(t, r, 2).astype(np.float32)
+    mgr = ChunkParamMgr(tables, chunk_rows, cache_slots)
+    t_idx = rng.randint(0, t, n_req)
+    r_idx = rng.randint(0, r, n_req)
+    needed = np.unique(mgr.chunk_of(t_idx, r_idx))
+    if needed.size > cache_slots:
+        with pytest.raises(ValueError):
+            mgr.ensure(t_idx, r_idx)
+        return
+    stats = mgr.ensure(t_idx, r_idx)
+    assert np.asarray(mgr.is_resident(t_idx, r_idx)).all()
+    assert stats.needed_chunks == needed.size
+    assert stats.hit_chunks + stats.faulted_chunks == stats.needed_chunks
+    # the cache holds the host values at the mapped positions, bitwise
+    cache = np.asarray(mgr.device_cache)
+    pos = mgr.host_pos
+    assert np.array_equal(cache[pos[t_idx, r_idx]], tables[t_idx, r_idx])
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 1000), chunk_rows=st.integers(1, 4),
+       cache_slots=st.integers(2, 5),
+       policy=st.sampled_from(["clock", "lfu"]))
+def test_hoststore_eviction_never_drops_dirty_chunk(
+        seed, chunk_rows, cache_slots, policy):
+    """A shadow copy updated in lockstep with the device cache: whatever
+    churn the eviction policy produces, `flush()` returns EXACTLY the
+    shadow — no dirty chunk was ever dropped or written back stale."""
+    from repro.hoststore import ChunkParamMgr
+
+    rng = np.random.RandomState(seed)
+    tables = rng.randn(2, 11, 3).astype(np.float32)
+    shadow = tables.copy()
+    mgr = ChunkParamMgr(tables, chunk_rows, cache_slots, policy=policy)
+    for _ in range(15):
+        t_i, r_i = rng.randint(0, 2), rng.randint(0, 11)
+        mgr.ensure(np.array([t_i]), np.array([r_i]))
+        delta = np.float32(rng.randint(1, 5))
+        mgr.device_cache = mgr.device_cache.at[
+            mgr.host_pos[t_i, r_i]].add(delta)
+        mgr.mark_dirty(np.array([t_i]), np.array([r_i]))
+        shadow[t_i, r_i] += delta
+        # invariant: dirty chunks are always resident
+        assert set(mgr.dirty_chunks.tolist()) <= \
+            set(mgr.resident_chunks.tolist())
+    assert np.array_equal(mgr.flush(), shadow)
+    assert mgr.dirty_chunks.size == 0
+
+
+@settings(**SETTINGS)
+@given(t=st.integers(1, 3), r=st.integers(1, 40),
+       chunk_rows=st.integers(1, 7))
+def test_hoststore_chunks_cover_rows_exactly_once(t, r, chunk_rows):
+    """Chunk geometry partitions the (table, row) space: every row falls
+    in exactly one chunk's range, ragged tails included, and `chunk_of`
+    agrees with `chunk_range`."""
+    from repro.hoststore import ChunkParamMgr
+
+    mgr = ChunkParamMgr(np.zeros((t, r, 2), np.float32), chunk_rows, 2)
+    seen = np.zeros((t, r), int)
+    for c in range(mgr.n_chunks):
+        ct, lo, hi = mgr.chunk_range(c)
+        assert 0 < hi - lo <= chunk_rows
+        seen[ct, lo:hi] += 1
+        assert (mgr.chunk_of(np.full(hi - lo, ct), np.arange(lo, hi))
+                == c).all()
+    assert (seen == 1).all()
+
+
 # ------------------------------------------------------------ pooling algebra
 @settings(**SETTINGS)
 @given(seed=st.integers(0, 1000), splits=st.integers(1, 4))
