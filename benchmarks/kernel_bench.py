@@ -1,22 +1,34 @@
-"""Kernel micro-benchmarks.
+"""Kernel micro-benchmarks (+ fused serve-kernel receipt).
 
 On this CPU host the Pallas kernels run in INTERPRET mode (Python per grid
 step) — wall-times are correctness-path numbers, NOT TPU performance. The
 meaningful CPU-side comparison is the pure-jnp reference path (XLA:CPU
 compiled), reported as achieved GB/s / GFLOP/s against the workload's
 analytic byte/flop counts; TPU projections come from §Roofline instead.
+
+`--emit-json` additionally judges the fused serve megakernel
+(`kernels.fused_bag_interactions`: gather -> pool -> interaction in ONE
+launch) against the composed two-kernel path and writes
+`BENCH_kernels.json`. Its `scalars.kernel_times` section uses the
+calibration schema ({"us": ..., "shape": ...}), so the artifact doubles
+as a `perf_model.inference_breakdown(calibration=...)` source.
 """
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels import ref
 
-
-def timeit(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+def timeit(fn, *args, iters=None, target_s=0.05):
+    """Mean seconds/call. One warmup eval (compile), then a single-call
+    probe sizes the loop to ~`target_s` total unless `iters` is given."""
+    jax.block_until_ready(fn(*args))
+    if iters is None:
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
+        probe = max(time.perf_counter() - t0, 1e-9)
+        iters = int(np.clip(round(target_s / probe), 3, 200))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -24,20 +36,27 @@ def timeit(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters
 
 
-def main():
+# Serve-path problem size: per-chip slice of the paper's RM2-small config.
+_SERVE_SHAPE = dict(T=40, R=2 ** 17, L=80, d=32, B=200)
+
+
+def _legacy_csv(key):
+    from repro.kernels import ref
+
     print("# Kernel micro-bench (jnp reference path, XLA:CPU)")
     print("kernel,shape,us_per_call,derived")
-    key = jax.random.PRNGKey(0)
+    times = {}
 
-    # embedding bag at RM2-small scale (per-chip slice of the paper's config)
-    T, R, L, d, B = 40, 2 ** 17, 80, 32, 200
+    T, R, L, d, B = (_SERVE_SHAPE[k] for k in ("T", "R", "L", "d", "B"))
     k1, k2 = jax.random.split(key)
     tables = jax.random.normal(k1, (T, R, d), jnp.float32)
     idx = jax.random.randint(k2, (B, T, L), 0, R)
+    shape = f"B{B} T{T} L{L} d{d}"
     f = jax.jit(ref.embedding_bag_ref)
     dt = timeit(f, tables, idx)
+    times["embedding_bag"] = (dt, shape)
     bytes_moved = B * T * L * d * 4
-    print(f"embedding_bag,(B{B} T{T} L{L} d{d}),{dt*1e6:.0f},"
+    print(f"embedding_bag,({shape}),{dt*1e6:.0f},"
           f"{bytes_moved/dt/1e9:.1f}GB/s")
 
     # interactions at RM2 scale
@@ -45,9 +64,18 @@ def main():
     pooled = jax.random.normal(k2, (B, T, d))
     f = jax.jit(ref.interactions_ref)
     dt = timeit(f, bot, pooled)
+    times["interactions"] = (dt, f"B{B} T{T} d{d}")
     flops = 2 * B * (T + 1) * (T + 1) * d
     print(f"interactions,(B{B} T{T} d{d}),{dt*1e6:.0f},"
           f"{flops/dt/1e9:.1f}GFLOP/s")
+
+    # fused gather->pool->interaction (serve hot path, one launch on TPU;
+    # this CPU number is the composed-dispatch reference wall-clock)
+    f = jax.jit(ref.fused_bag_interactions_ref)
+    dt = timeit(f, tables, idx, bot)
+    times["fused_bag_interactions"] = (dt, shape)
+    print(f"fused_bag_interactions,({shape}),{dt*1e6:.0f},"
+          f"1-launch-on-TPU")
 
     # flash attention (prefill block) — small LM slice
     Bq, Tq, Hq, Hkv, hd = 1, 1024, 8, 2, 64
@@ -77,6 +105,138 @@ def main():
     dt = timeit(lambda a, b: embedding_bag_pallas(a, b), tab_s, idx_s, iters=2)
     print(f"embedding_bag_pallas_interpret,(tiny),{dt*1e6:.0f},correctness-only")
 
+    return times
+
+
+def _fused_receipt(key, times):
+    """Claims + scalars for the fused serve megakernel: launch count,
+    modeled TPU HBM traffic, and interpret-mode equivalence at tiny
+    shapes (the RM2-scale grid is B*T*L Python steps in interpret mode —
+    minutes per call — so equivalence runs tiny and traffic is modeled)."""
+    from repro.kernels import ref
+    from repro.kernels.fused_serve import (
+        fused_bag_interactions_pallas, fused_cached_bag_interactions_pallas)
+
+    claims, scalars = [], {}
+    T, L, d, B = (_SERVE_SHAPE[k] for k in ("T", "L", "d", "B"))
+
+    # -- launches per serve forward (embedding side), composed vs fused.
+    # Composed: bag kernel (single or cached two-tier) + interactions
+    # kernel. Fused: one launch does gather -> pool -> interaction.
+    launches = {"composed_single": 2, "composed_tiered": 2,
+                "fused_single": 1, "fused_tiered": 1}
+    scalars["launches"] = launches
+    r_single = launches["composed_single"] / launches["fused_single"]
+    r_tiered = launches["composed_tiered"] / launches["fused_tiered"]
+    claims.append((
+        "fused_launch_reduction",
+        r_single >= 1.5 and r_tiered >= 1.5,
+        f"kernel launches per serve forward: {launches['composed_single']}"
+        f" -> {launches['fused_single']} single-tier"
+        f" ({r_single:.1f}x), {launches['composed_tiered']}"
+        f" -> {launches['fused_tiered']} tiered ({r_tiered:.1f}x)"))
+
+    # -- modeled TPU HBM traffic at the RM2-small serve shape. The
+    # composed path round-trips the (B, T, d) pooled tensor through HBM
+    # (bag writes it, interactions reads it back); the fused kernel keeps
+    # the accumulator resident in VMEM, eliminating exactly that.
+    s1 = T + 1
+    row_read = B * T * L * d * 4
+    pooled_rt = 2 * B * T * d * 4
+    bot_read = B * d * 4
+    out_write = B * s1 * s1 * 4
+    composed = row_read + pooled_rt + bot_read + out_write
+    fused = row_read + bot_read + out_write
+    frac = pooled_rt / composed
+    scalars["hbm_traffic_model"] = {
+        "shape": f"B{B} T{T} L{L} d{d}",
+        "composed_bytes": composed, "fused_bytes": fused,
+        "pooled_roundtrip_bytes_eliminated": pooled_rt,
+        "fraction_of_composed": frac,
+    }
+    claims.append((
+        "fused_hbm_roundtrip_eliminated",
+        fused == composed - pooled_rt and pooled_rt > 0,
+        f"(B,T,d) pooled HBM round-trip eliminated: {pooled_rt/2**20:.2f}"
+        f" MiB/step ({100*frac:.0f}% of composed embedding-side traffic)"))
+
+    # -- interpret-mode equivalence, single-tier (tiny shape: B not a
+    # multiple of block_b, so the pad path is exercised too)
+    Bt, Tt, Lt, Rt, dt_ = 6, 3, 4, 16, 8
+    k1, k2, k3 = jax.random.split(key, 3)
+    tabs = jax.random.normal(k1, (Tt, Rt, dt_), jnp.float32)
+    idx = jax.random.randint(k2, (Bt, Tt, Lt), 0, Rt)
+    bot = jax.random.normal(k3, (Bt, dt_), jnp.float32)
+    got = fused_bag_interactions_pallas(tabs, idx, bot, block_b=4,
+                                        interpret=True)
+    want = ref.fused_bag_interactions_ref(tabs, idx, bot)
+    err = float(jnp.max(jnp.abs(got - want)))
+    claims.append((
+        "fused_interpret_matches_composed_single",
+        err <= 1e-5,
+        f"pallas interpret vs composed ref, single-tier tiny shape: "
+        f"max|delta|={err:.1e}"))
+
+    # -- interpret-mode equivalence, two-tier: pack a bernoulli-hot subset
+    # of rows into the fast tier (cached_embedding_bag layout: zeros miss
+    # slot S in fast, zeros hit slot R in bulk), translate the streams
+    hot = np.asarray(jax.random.bernoulli(k1, 0.4, (Tt, Rt)))
+    tabs_np = np.asarray(tabs)
+    S = int(hot.sum(axis=1).max())
+    fast_np = np.zeros((Tt, S + 1, dt_), np.float32)
+    slot = np.full((Tt, Rt), S, np.int32)          # miss -> zeros slot S
+    for t in range(Tt):
+        rows = np.flatnonzero(hot[t])
+        fast_np[t, :len(rows)] = tabs_np[t, rows]
+        slot[t, rows] = np.arange(len(rows))
+    bulk_np = np.concatenate(
+        [tabs_np, np.zeros((Tt, 1, dt_), np.float32)], axis=1)
+    idx_np = np.asarray(idx)
+    t_ax = np.arange(Tt)[None, :, None]
+    fi = jnp.asarray(slot[t_ax, idx_np])
+    bi = jnp.asarray(np.where(hot[t_ax, idx_np], Rt, idx_np))
+    got = fused_cached_bag_interactions_pallas(
+        jnp.asarray(fast_np), jnp.asarray(bulk_np), fi, bi, bot,
+        block_b=4, interpret=True)
+    err2 = float(jnp.max(jnp.abs(got - want)))
+    claims.append((
+        "fused_interpret_matches_composed_tiered",
+        err2 <= 1e-5,
+        f"pallas interpret vs composed ref, two-tier tiny shape: "
+        f"max|delta|={err2:.1e}"))
+
+    # -- measured CPU reference wall-clocks, calibration schema
+    scalars["kernel_times"] = {
+        name: {"us": round(dt * 1e6, 1), "shape": shape}
+        for name, (dt, shape) in times.items()}
+    scalars["note"] = ("CPU host: kernel_times are XLA:CPU reference "
+                       "wall-clocks (fused dispatches to the composed "
+                       "reference off-TPU); launch + HBM numbers are the "
+                       "TPU execution model")
+    return claims, scalars
+
+
+def main(argv=None):
+    import argparse
+
+    from benchmarks._artifacts import write_bench_json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--emit-json", action="store_true",
+                    help="judge fused-serve claims, write BENCH_kernels.json")
+    args = ap.parse_args(argv)
+
+    key = jax.random.PRNGKey(0)
+    times = _legacy_csv(key)
+    if not args.emit_json:
+        return 0
+
+    claims, scalars = _fused_receipt(jax.random.PRNGKey(1), times)
+    for name, ok, detail in claims:
+        print(f"[kernels] {'WIN' if ok else 'FAILED CLAIM'}: {name}: {detail}")
+    write_bench_json("kernels", claims, scalars)
+    return 0 if all(ok for _, ok, _ in claims) else 1
+
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

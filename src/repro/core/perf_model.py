@@ -217,12 +217,27 @@ def _tiered_access_time(bytes_moved: float, access_bytes: int,
             + (1.0 - h) * t_bulk)
 
 
+# Measured kernel names that can replace the modeled lookup/pool term, in
+# priority order: the fused serve megakernel subsumes the bag kernels.
+_LOOKUP_KERNELS = ("fused_bag_interactions", "cached_embedding_bag",
+                   "embedding_bag")
+
+
 def inference_breakdown(
     cfg: DLRMConfig,
     sys: SystemConfig,
     row_wise_exchange: str = "unpooled",   # "unpooled" (paper) | "partial_pool"
     hit_ratio: float = 0.0,                # planner placement fast-tier share
+    calibration=None,                      # measured kernel_times artifact
 ) -> StepBreakdown:
+    """Paper Eq./Sec. V-B inference step model. With `calibration` (a path
+    to / dict of a calibration artifact carrying a `kernel_times` section,
+    e.g. `BENCH_kernels.json`'s scalars), the modeled lookup term is
+    replaced by the MEASURED per-call time of the bag-family kernel that
+    actually runs (`_LOOKUP_KERNELS` priority: the fused serve megakernel
+    wins when present) and the modeled/measured delta is reported in
+    `notes` — every measured entry also lands there as `kernel_us_<name>`.
+    """
     p = _payloads(cfg, sys)
     n = sys.n_chips
     bd = StepBreakdown(sys.name, cfg.name, "inference")
@@ -244,6 +259,26 @@ def inference_breakdown(
 
     bd.t_dense_fwd = (cfg.flops_per_sample() * cfg.batch_size / n
                       / sys.compute_flops)
+
+    if calibration is not None:
+        from repro.core.calibration import kernel_times_from
+        kt = kernel_times_from(calibration)
+        for name, us in kt.items():
+            bd.notes[f"kernel_us_{name}"] = us
+        measured = next((kt[k] for k in _LOOKUP_KERNELS if k in kt), None)
+        if measured is not None:
+            t_meas = measured * 1e-6
+            bd.notes["t_lookup_modeled_s"] = bd.t_lookup
+            bd.notes["t_lookup_delta_s"] = t_meas - bd.t_lookup
+            bd.t_lookup = t_meas
+        if "interactions" in kt:
+            # delta-only: t_dense_fwd also covers the MLP flops, so the
+            # interaction kernel's measured time informs but cannot
+            # replace it
+            bd.notes["interactions_measured_s"] = kt["interactions"] * 1e-6
+            bd.notes["interactions_delta_vs_dense_fwd_s"] = (
+                kt["interactions"] * 1e-6 - bd.t_dense_fwd)
+
     bd.t_fwd = bd.t_idx_a2a + max(bd.t_lookup, bd.t_emb_exchange, bd.t_dense_fwd)
     bd.t_step = bd.t_fwd
     return bd

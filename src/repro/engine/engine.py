@@ -22,6 +22,7 @@ mode), or a concrete `ShardingPlan` (reconciled against the mesh).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, Optional, Tuple, Union
 
 from jax.sharding import Mesh
@@ -81,7 +82,15 @@ class Engine:
     host_link  : a `perf_model.host_link(...)` Interconnect pricing the
                  host<->device swaps (default PCIe 4.0 x16).
     calibration : path to (or dict of) a measured calibration artifact
-                 (repro.core.calibration); overrides the host link terms.
+                 (repro.core.calibration); overrides the host link terms
+                 and supplies measured kernel_times to the perf model.
+    fused_serve : "auto" (default) serves through the fused gather->pool->
+                 interaction megakernel whenever the session's exchange is
+                 local (kernels/fused_serve.py; distributed and host-tier
+                 exchanges fall back to the composed kernels); "off"
+                 forces the composed path everywhere. The choice a session
+                 resolved is recorded on `PlanReport.serve_kernel` and
+                 `ServeSession.serve_kernel`.
     verbose    : print the plan summary when a plan is built.
     """
 
@@ -98,6 +107,7 @@ class Engine:
                  host_chunk_rows: Optional[int] = None,
                  host_hot_fraction: float = 0.5,
                  host_link=None, calibration=None,
+                 fused_serve: str = "auto",
                  profile_batches: int = 4, verbose: bool = False):
         self.cfg = cfg
         self.mesh = mesh if mesh is not None else make_host_mesh(model=model_axis)
@@ -147,6 +157,10 @@ class Engine:
                     f"dp_axes + axis = {self.dp_axes + ax} cover {covered} "
                     f"devices but the mesh has {self.mesh.devices.size}; "
                     f"the batch must shard over the whole mesh")
+        if fused_serve not in ("auto", "off"):
+            raise ValueError(f"fused_serve must be 'auto' or 'off', got "
+                             f"{fused_serve!r}")
+        self.fused_serve = fused_serve
         self.host_capacity_mb = host_capacity_mb
         self.host_chunk_rows = host_chunk_rows
         self.host_hot_fraction = host_hot_fraction
@@ -301,12 +315,20 @@ class Engine:
             depth = self.resolve_pipeline_depth(
                 "inference", (max_batch_queries * qs) // self.n_devices)
             resolver = None
-        return ServeSession(
+        sess = ServeSession(
             self.cfg, self.mesh, self.axis, plan=plan, exchange=exchange,
             max_batch_queries=max_batch_queries, max_wait_ms=max_wait_ms,
             query_size=query_size, params=params, seed=self.seed,
             alpha=self.alpha, warmup=warmup, pipeline_depth=depth,
-            depth_resolver=resolver, dp_axes=self.dp_axes)
+            depth_resolver=resolver, dp_axes=self.dp_axes,
+            fused=self.fused_serve != "off")
+        # record the kernel selection the session resolved on the cached
+        # plan report, so plan_report("inference") tells the whole story
+        rep = self._reports.get("inference")
+        if rep is not None and rep.serve_kernel != sess.serve_kernel:
+            self._reports["inference"] = dataclasses.replace(
+                rep, serve_kernel=sess.serve_kernel)
+        return sess
 
     def sharded_fleet(self, *, n_boards: int = 2,
                       board_capacity_bytes: Optional[int] = None,

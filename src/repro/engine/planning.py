@@ -28,6 +28,12 @@ class PlanReport:
     # perf_model.optimal_pipeline_depth) + the swept step times behind it.
     pipeline_depth: int = 1
     depth_sweep: Dict[int, float] = field(default_factory=dict)
+    # The serve-path kernel selection the engine's sessions execute:
+    # "fused" (one gather->pool->interaction launch, local exchanges only)
+    # or "composed" (separate bag + interaction kernels). Recorded by
+    # Engine.serve_session once the session resolves it against the actual
+    # exchange; plans built for training keep the default.
+    serve_kernel: str = "composed"
 
     def summary(self) -> str:
         plan = self.plan
@@ -38,6 +44,7 @@ class PlanReport:
                 f"hit_ratio={plan.hit_ratio:.3f} "
                 f"predicted_qps={self.predicted_qps:.0f} "
                 f"pipeline_depth={self.pipeline_depth} "
+                f"serve_kernel={self.serve_kernel} "
                 f"(hybrid HBM+DDR4 model)")
 
 

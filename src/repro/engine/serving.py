@@ -99,7 +99,7 @@ class ServeSession:
                  warmup: bool = False,
                  pipeline_depth: Optional[int] = 1,
                  depth_resolver: Optional[Callable[[int], int]] = None,
-                 dp_axes: Tuple[str, ...] = ()):
+                 dp_axes: Tuple[str, ...] = (), fused: bool = True):
         self.cfg = cfg
         self.mesh = mesh
         self.plan = plan
@@ -138,6 +138,22 @@ class ServeSession:
         # begin/end-batch hooks bracket every execution below
         self._exchange_inst = (exchange if isinstance(
             exchange, parallel.EmbeddingExchange) else None)
+        # resolve string exchanges eagerly (same resolution build_step
+        # would do) so the fused-serve decision is known at session build;
+        # _exchange_inst above keeps its narrower meaning — an exchange
+        # with HOST-SIDE session state whose begin/end hooks must bracket
+        # every execution (resolved device-resident exchanges stay out of
+        # that path: begin_batch does a host sync per flush)
+        self._exch = (self._exchange_inst if self._exchange_inst is not None
+                      else parallel.make_exchange(
+                          cfg, axis, self._n_embed, plan=plan,
+                          row_wise_exchange=exchange))
+        self._fused = bool(fused)
+        # the serve kernel this session's steps execute — mirrors
+        # build_step's selection predicate exactly
+        self.serve_kernel = ("fused" if self._fused
+                             and self._exch.supports_fused_forward()
+                             else "composed")
         self._steps: Dict[int, Callable] = {}
         self._depth_by_samples: Dict[int, int] = {}
         if params is None:
@@ -212,8 +228,9 @@ class ServeSession:
         if depth not in self._steps:
             self._steps[depth] = parallel.build_step(
                 self.cfg, self.mesh, mode="serve", axis=self._axis,
-                exchange=self._exchange, plan=self.plan,
-                dp_axes=self.dp_axes, pipeline_depth=depth)
+                exchange=self._exch, plan=self.plan,
+                dp_axes=self.dp_axes, pipeline_depth=depth,
+                fused=self._fused)
         return self._steps[depth]
 
     def _ensure_compiled(self, n_queries: int) -> None:

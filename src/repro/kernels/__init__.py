@@ -4,12 +4,19 @@
   cached_embedding_bag— two-tier (fast/bulk) gather + sum-pool executing the
                         planner's hot/cold placement (core/tiered_embedding.py)
   interactions        — FM pairwise-dot bmm (DLRM's dense MXU op)
+  fused_bag_interactions (+ cached/grouped variants)
+                      — the serve hot path in ONE launch: gather -> VMEM
+                        pool accumulator -> A·Aᵀ, no pooled HBM round-trip
+                        (fused_serve.py)
   flash_attention     — blockwise GQA/SWA attention (LM train/prefill)
   flash_decode        — single-token GQA attention over a KV cache (LM decode)
 
 Each has a matching pure-jnp oracle in ``ref.py`` and a jit'd public wrapper
-in ``ops.py``; kernels run compiled on TPU and in interpret mode elsewhere.
+in ``ops.py``; kernels run compiled on TPU and in interpret mode elsewhere
+(the fused serve ops dispatch to their composed oracles off-TPU — see
+``ops.py``).
 """
 from repro.kernels.ops import (  # noqa: F401
     cached_embedding_bag, embedding_bag, flash_attention, flash_decode,
-    interactions)
+    fused_bag_interactions, fused_cached_bag_interactions,
+    fused_grouped_bag_interactions, interactions)

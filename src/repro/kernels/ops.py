@@ -19,6 +19,9 @@ from repro.kernels.cached_embedding_bag import cached_embedding_bag_pallas
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.fused_serve import (
+    fused_bag_interactions_pallas, fused_cached_bag_interactions_pallas,
+    fused_grouped_bag_interactions_pallas)
 from repro.kernels.interactions import interactions_pallas
 
 
@@ -54,6 +57,56 @@ def interactions(bot_out: jax.Array, pooled: jax.Array,
         return ref.interactions_ref(bot_out, pooled)
     return interactions_pallas(bot_out, pooled, block_b=block_b,
                                interpret=_interpret())
+
+
+# The fused serve ops deviate from the per-kernel dispatch policy above:
+# interpret mode executes one Python step PER LOOKED-UP ROW (B*T*L grid
+# steps — minutes per serve batch at real shapes), so on non-TPU backends
+# they dispatch to the composed pure-jnp reference (XLA:CPU compiled, and
+# bit-identical to the composed serve path there). The Pallas kernels
+# themselves are validated against the same oracles at tiny shapes in
+# tests/test_fused_serve.py; on TPU the compiled megakernel runs natively.
+def fused_bag_interactions(tables: jax.Array, indices: jax.Array,
+                           bot_out: jax.Array,
+                           block_b: int = 64) -> jax.Array:
+    """(T,R,d) x (B,T,L) x (B,d) -> (B, d + (T+1)T/2) fused gather->pool->
+    interaction features, one kernel launch on TPU."""
+    if _use_ref() or _interpret():
+        return ref.fused_bag_interactions_ref(tables, indices, bot_out)
+    return fused_bag_interactions_pallas(tables, indices, bot_out,
+                                         block_b=block_b, interpret=False)
+
+
+def fused_cached_bag_interactions(fast: jax.Array, bulk: jax.Array,
+                                  fast_idx: jax.Array, bulk_idx: jax.Array,
+                                  bot_out: jax.Array,
+                                  block_b: int = 64) -> jax.Array:
+    """Two-tier fused serve path: (T,S+1,d) x (T,R+1,d) x 2x(B,T,L) x (B,d)
+    -> fused interaction features, one launch on TPU."""
+    if _use_ref() or _interpret():
+        return ref.fused_cached_bag_interactions_ref(
+            fast, bulk, fast_idx, bulk_idx, bot_out)
+    return fused_cached_bag_interactions_pallas(
+        fast, bulk, fast_idx, bulk_idx, bot_out, block_b=block_b,
+        interpret=False)
+
+
+def fused_grouped_bag_interactions(tables_fast: jax.Array,
+                                   tables_bulk: jax.Array,
+                                   indices_perm: jax.Array,
+                                   bot_out: jax.Array, *,
+                                   inv_perm,
+                                   block_b: int = 64) -> jax.Array:
+    """Tiered-plan fused serve path: (Tf,R,d) + (Tb,R,d) table groups,
+    indices pre-permuted to concat order, un-permuted output — one launch
+    on TPU. ``inv_perm`` must be a static (hashable) tuple."""
+    inv_perm = tuple(int(t) for t in inv_perm)
+    if _use_ref() or _interpret():
+        return ref.fused_grouped_bag_interactions_ref(
+            tables_fast, tables_bulk, indices_perm, bot_out, inv_perm)
+    return fused_grouped_bag_interactions_pallas(
+        tables_fast, tables_bulk, indices_perm, bot_out, inv_perm=inv_perm,
+        block_b=block_b, interpret=False)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -40,6 +40,44 @@ def interactions_ref(bot_out: jax.Array, pooled: jax.Array) -> jax.Array:
     return jnp.concatenate([bot_out.astype(jnp.float32), f[:, li, lj]], axis=1)
 
 
+def fused_bag_interactions_ref(tables: jax.Array, indices: jax.Array,
+                               bot_out: jax.Array) -> jax.Array:
+    """Composed gather->pool->interaction oracle for the fused serve kernel:
+    exactly ``interactions_ref(bot_out, embedding_bag_ref(...))`` — the two
+    launches + HBM pooled round-trip the fused kernel eliminates."""
+    return interactions_ref(bot_out, embedding_bag_ref(tables, indices))
+
+
+def fused_cached_bag_interactions_ref(fast: jax.Array, bulk: jax.Array,
+                                      fast_idx: jax.Array,
+                                      bulk_idx: jax.Array,
+                                      bot_out: jax.Array) -> jax.Array:
+    """Two-tier composed oracle: cached bag then interactions."""
+    return interactions_ref(
+        bot_out, cached_embedding_bag_ref(fast, bulk, fast_idx, bulk_idx))
+
+
+def fused_grouped_bag_interactions_ref(tables_fast: jax.Array,
+                                       tables_bulk: jax.Array,
+                                       indices_perm: jax.Array,
+                                       bot_out: jax.Array,
+                                       inv_perm) -> jax.Array:
+    """Tiered-plan composed oracle: pool the fast and bulk table groups
+    separately (indices already in concat(fast, bulk) order), restore
+    original table order via ``inv_perm``, then interactions — mirroring
+    ``parallel.exchange.planned_forward`` at n=1."""
+    import numpy as np
+    Tf = tables_fast.shape[0]
+    parts = []
+    if Tf:
+        parts.append(embedding_bag_ref(tables_fast, indices_perm[:, :Tf]))
+    if tables_bulk.shape[0]:
+        parts.append(embedding_bag_ref(tables_bulk, indices_perm[:, Tf:]))
+    pooled = jnp.concatenate(parts, axis=1)
+    pooled = pooled[:, np.asarray(inv_perm, np.int32), :]
+    return interactions_ref(bot_out, pooled)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True,
                         window: Optional[int] = None) -> jax.Array:

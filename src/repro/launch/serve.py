@@ -84,7 +84,13 @@ def main(argv: Optional[list] = None) -> int:
                     help="measured-hardware calibration JSON "
                          "(repro.core.calibration): host_link overrides "
                          "the PCIe model, service_multiplier the "
-                         "hit-ratio monitor's retiming curve")
+                         "hit-ratio monitor's retiming curve, kernel_times "
+                         "the perf model's per-kernel serve times")
+    ap.add_argument("--fused-serve", choices=["auto", "off"], default="auto",
+                    help="auto: serve through the fused gather->pool->"
+                         "interaction megakernel when the exchange is "
+                         "local (falls back to the composed kernels "
+                         "otherwise); off: always composed")
     # -- fleet / scenario flags (repro.cluster path) -----------------------
     ap.add_argument("--replicas", type=int, default=1,
                     help=">1 serves a fleet of replica sub-meshes behind "
@@ -162,7 +168,8 @@ def main(argv: Optional[list] = None) -> int:
                     host_capacity_mb=args.host_capacity_mb,
                     host_chunk_rows=args.host_chunk_rows,
                     host_hot_fraction=args.host_hot_fraction,
-                    calibration=args.calibration, verbose=True)
+                    calibration=args.calibration,
+                    fused_serve=args.fused_serve, verbose=True)
     if args.host_capacity_mb is not None:
         tbl_mb = cfg.num_tables * cfg.rows_per_table * cfg.embed_dim \
             * 4 / 2 ** 20
@@ -170,6 +177,7 @@ def main(argv: Optional[list] = None) -> int:
               f"budget {args.host_capacity_mb:.3f} MiB")
     session = engine.serve_session(max_batch_queries=args.max_batch_queries,
                                    max_wait_ms=args.max_wait_ms)
+    print(f"[serve] serve_kernel={session.serve_kernel}")
     if args.qps > 0:
         report = session.run_open_loop(
             args.queries, args.qps, sla_ms=args.sla_ms,

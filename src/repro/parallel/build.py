@@ -200,6 +200,7 @@ def build_step(
     pipeline_depth: int = 1,
     compress_grads: bool = False,
     lookup_chunk: int = 4096,
+    fused: bool = True,
 ) -> Callable:
     """Compose exchange + dense compute + grad/optimizer stages into one
     jitted step.
@@ -217,6 +218,13 @@ def build_step(
     `exchange` is an `EmbeddingExchange` instance, or a row-wise wire-mode
     string resolved via `make_exchange` (a placed `plan` always selects the
     tiered exchange). `pipeline_depth`/`compress_grads`: see module doc.
+
+    `fused` (serve mode only): run the forward through the exchange's
+    fused gather->pool->interaction megakernel when it supports one
+    (`EmbeddingExchange.supports_fused_forward` — local TableWise /
+    PlannedTiered exchanges). Distributed and host-tier exchanges fall
+    back to the composed kernels transparently; pass `fused=False` to
+    force the composed path everywhere.
     """
     if mode not in ("train", "serve"):
         raise ValueError(f"mode must be 'train' or 'serve', got {mode!r}")
@@ -245,22 +253,43 @@ def build_step(
 
     # ---------------- serve: forward pipeline + sigmoid -------------------
     if mode == "serve":
-        def serve(params, dense, indices):
-            tables = _pick_tables(params)
-            idx_mb = _mb_slices(indices, depth)
-            den_mb = _mb_slices(dense, depth)
-            outs = []
-            nxt = exch.forward(tables, idx_mb[0])
-            for i in range(depth):
-                pooled_i, _ = nxt
-                if i + 1 < depth:
-                    # issue the NEXT micro-batch's exchange before this
-                    # micro-batch's MLP compute — the overlap window
-                    nxt = exch.forward(tables, idx_mb[i + 1])
-                logits = dlrm_lib.dlrm_forward_from_pooled(
-                    params, den_mb[i], pooled_i)
-                outs.append(jax.nn.sigmoid(logits))
-            return outs[0] if depth == 1 else jnp.concatenate(outs, axis=0)
+        use_fused = bool(fused) and exch.supports_fused_forward()
+
+        if use_fused:
+            # fused megakernel path: gather -> VMEM pool -> interaction in
+            # one launch per micro-batch. A fused-capable exchange is LOCAL
+            # (no forward collectives), so there is no exchange wire time
+            # to software-pipeline ahead — micro-batches run in sequence.
+            def serve(params, dense, indices):
+                tables = _pick_tables(params)
+                idx_mb = _mb_slices(indices, depth)
+                den_mb = _mb_slices(dense, depth)
+                outs = []
+                for i in range(depth):
+                    bot = dlrm_lib.mlp_forward(params["bot_mlp"], den_mb[i])
+                    z = exch.fused_forward(tables, bot, idx_mb[i])
+                    logits = dlrm_lib.mlp_forward(params["top_mlp"], z)[:, 0]
+                    outs.append(jax.nn.sigmoid(logits))
+                return (outs[0] if depth == 1
+                        else jnp.concatenate(outs, axis=0))
+        else:
+            def serve(params, dense, indices):
+                tables = _pick_tables(params)
+                idx_mb = _mb_slices(indices, depth)
+                den_mb = _mb_slices(dense, depth)
+                outs = []
+                nxt = exch.forward(tables, idx_mb[0])
+                for i in range(depth):
+                    pooled_i, _ = nxt
+                    if i + 1 < depth:
+                        # issue the NEXT micro-batch's exchange before this
+                        # micro-batch's MLP compute — the overlap window
+                        nxt = exch.forward(tables, idx_mb[i + 1])
+                    logits = dlrm_lib.dlrm_forward_from_pooled(
+                        params, den_mb[i], pooled_i)
+                    outs.append(jax.nn.sigmoid(logits))
+                return (outs[0] if depth == 1
+                        else jnp.concatenate(outs, axis=0))
 
         smapped = shard_map(serve, mesh=mesh,
                             in_specs=(p_specs, data_spec, data_spec),

@@ -77,6 +77,23 @@ class EmbeddingExchange:
         """Route pooled-output grads to row owners; expand to flat pairs."""
         raise NotImplementedError
 
+    # -- fused serve capability --------------------------------------------
+    # A LOCAL exchange (all looked-up rows resident on this processor — no
+    # collectives in the forward) can run the serve hot path as ONE fused
+    # Pallas launch: gather -> VMEM pool accumulator -> interaction
+    # contraction (kernels/fused_serve.py), skipping the pooled (B, T, d)
+    # HBM round-trip. Distributed and host-tier exchanges keep the composed
+    # forward; build_step falls back transparently on this predicate.
+    def supports_fused_forward(self) -> bool:
+        return False
+
+    def fused_forward(self, tables: Tables, bot_out, indices):
+        """(B, d) bottom-MLP output + (B, T, L) local indices -> the
+        (B, top_mlp_in) interaction features, fused. Only valid when
+        `supports_fused_forward()` is True."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no fused serve path")
+
     def sparse_apply(self, tables: Tables, ctx, g_pooled,
                      update_fn: Callable) -> Tables:
         """Stateless (SGD-style) sparse update applied in place per group.
@@ -141,6 +158,15 @@ class TableWiseExchange(EmbeddingExchange):
     def sparse_apply(self, tables, ctx, g_pooled, update_fn):
         return {"tables": prim.table_wise_backward_update(
             tables["tables"], ctx, g_pooled, self.axis, update_fn)}
+
+    def supports_fused_forward(self) -> bool:
+        # at n=1 every table is local and the forward has no collectives
+        return self.n == 1
+
+    def fused_forward(self, tables, bot_out, indices):
+        from repro import kernels
+        return kernels.fused_bag_interactions(tables["tables"], indices,
+                                              bot_out)
 
 
 class RowWiseExchange(EmbeddingExchange):
@@ -224,6 +250,9 @@ class PlannedTieredExchange(EmbeddingExchange):
         self.lookup_chunk = lookup_chunk
         self._fast_arr = np.asarray(self.groups.fast_ids, np.int32)
         self._bulk_arr = np.asarray(self.groups.bulk_ids, np.int32)
+        # concat(fast, bulk) table order for the fused grouped kernel
+        self._perm_arr = np.asarray(
+            self.groups.fast_ids + self.groups.bulk_ids, np.int32)
 
     def table_specs(self) -> Dict[str, P]:
         g = self.groups
@@ -241,6 +270,18 @@ class PlannedTieredExchange(EmbeddingExchange):
             self.axis, self.n, self.row_mode, self.groups,
             self.lookup_chunk)
         return pooled, (ctx_f, ctx_b)
+
+    def supports_fused_forward(self) -> bool:
+        # both tiers are whole-table local at n=1 (table_wise fast group,
+        # full row range of every bulk table) — no forward collectives
+        return self.n == 1
+
+    def fused_forward(self, tables, bot_out, indices):
+        from repro import kernels
+        idx_perm = indices[:, self._perm_arr, :]
+        return kernels.fused_grouped_bag_interactions(
+            tables["tables_fast"], tables["tables_bulk"], idx_perm, bot_out,
+            inv_perm=self.groups.inv_perm)
 
     def _split_g(self, g_pooled):
         g = self.groups

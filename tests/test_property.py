@@ -288,6 +288,29 @@ def test_hoststore_chunks_cover_rows_exactly_once(t, r, chunk_rows):
     assert (seen == 1).all()
 
 
+# ------------------------------------------------------ fused serve kernel
+@settings(max_examples=10, deadline=None)   # interpret mode: Python per step
+@given(seed=st.integers(0, 1000), B=st.integers(1, 6), T=st.integers(1, 3),
+       L=st.integers(1, 4), bb=st.integers(2, 4))
+def test_fused_pad_samples_never_leak(seed, B, T, L, bb):
+    """The fused megakernel pads the batch to a block multiple with
+    index-0 gathers: for ANY shape/blocking, a poisoned row 0 that only
+    pad samples touch must never reach a real sample's features."""
+    from repro.kernels import ref
+    from repro.kernels.fused_serve import fused_bag_interactions_pallas
+
+    R, d = 16, 8
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    tables = jax.random.normal(k1, (T, R, d)).at[:, 0, :].set(1e30)
+    idx = jax.random.randint(k2, (B, T, L), 1, R)    # real rows avoid 0
+    bot = jax.random.normal(k3, (B, d))
+    got = fused_bag_interactions_pallas(tables, idx, bot, block_b=bb,
+                                        interpret=True)
+    want = ref.fused_bag_interactions_ref(tables, idx, bot)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
 # ------------------------------------------------------------ pooling algebra
 @settings(**SETTINGS)
 @given(seed=st.integers(0, 1000), splits=st.integers(1, 4))
