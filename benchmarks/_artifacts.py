@@ -32,8 +32,15 @@ def git_rev() -> str:
 
 def write_bench_json(name: str, claims: List[Claim],
                      scalars: Dict[str, Any],
-                     out_dir: Optional[str] = None) -> str:
-    """Write `BENCH_<name>.json` and return its path."""
+                     out_dir: Optional[str] = None,
+                     metrics: Optional[Dict[str, Any]] = None) -> str:
+    """Write `BENCH_<name>.json` and return its path.
+
+    `metrics` is an optional `repro.obs.MetricsRegistry.snapshot()` from a
+    representative run — attached verbatim so the artifact carries the
+    observable counters (wire bytes, swap faults, queue depths) behind the
+    scalar claims.
+    """
     payload = {
         "bench": name,
         "git_rev": git_rev(),
@@ -42,6 +49,8 @@ def write_bench_json(name: str, claims: List[Claim],
                    for n, ok, d in claims],
         "scalars": scalars,
     }
+    if metrics is not None:
+        payload["metrics"] = metrics
     path = os.path.join(out_dir or REPO_ROOT, f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

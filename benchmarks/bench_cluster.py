@@ -63,6 +63,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--alpha", type=float, default=1.2)
     ap.add_argument("--trace-dir", default=None,
                     help="where the JSONL traces land (default: a tmp dir)")
+    ap.add_argument("--emit-json", action="store_true",
+                    help="write BENCH_cluster.json (claims + scalars + a "
+                         "representative run's metrics snapshot)")
     args = ap.parse_args(argv)
 
     n = 120 if args.tiny else args.queries
@@ -71,6 +74,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     tdir = args.trace_dir or tempfile.mkdtemp(prefix="bench_cluster_")
     os.makedirs(tdir, exist_ok=True)
     failures: List[str] = []
+    claims = []                  # (name, ok, detail) for --emit-json
+    metrics_snapshot = None      # a representative run's registry dump
 
     # single-board capacities calibrate every offered load: per-query
     # floor s1 and the batched saturation rate cap1 = 4 queries / s4
@@ -99,6 +104,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         r = cl.run(events, sla_ms=sla_ms, percentile=95.0,
                    scenario="stationary")
         runs[(replicas, load)] = r
+        if replicas == 2:
+            metrics_snapshot = cl.metrics.snapshot()
         print(f"{replicas},{r.offered_qps:.0f},{r.achieved_qps:.0f},"
               f"{r.ppf_ms:.2f},{r.p99_ms:.2f},"
               f"{'PASS' if r.ok else 'FAIL'},"
@@ -108,7 +115,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     scaling = r2.achieved_qps / r1.achieved_qps
     one_board_breaks = (not r1x.ok) or (r1x.achieved_qps
                                         < 0.9 * r1x.offered_qps)
-    if r1.ok and r2.ok and scaling >= 1.8 and one_board_breaks:
+    scale_ok = bool(r1.ok and r2.ok and scaling >= 1.8 and one_board_breaks)
+    claims.append(("scale_out", scale_ok,
+                   f"{scaling:.2f}x within-SLA QPS from 1->2 replicas"))
+    if scale_ok:
         print(f"WIN scale-out: {scaling:.2f}x within-SLA QPS from 1->2 "
               f"replicas (1 replica at the 2-replica load: "
               f"p95 {r1x.ppf_ms:.2f}ms, "
@@ -142,6 +152,9 @@ def main(argv: Optional[List[str]] = None) -> int:
             print(f"{seed},{router},{r.achieved_qps:.0f},{r.p50_ms:.2f},"
                   f"{r.p99_ms:.2f}")
     med = {router: sorted(v)[len(v) // 2] for router, v in p99s.items()}
+    claims.append(("routing", med["p2c"] < med["round_robin"],
+                   f"p2c median p99 {med['p2c']:.2f}ms vs round_robin "
+                   f"{med['round_robin']:.2f}ms"))
     if med["p2c"] < med["round_robin"]:
         print(f"WIN routing: p2c median p99 {med['p2c']:.2f}ms < "
               f"round_robin {med['round_robin']:.2f}ms under bursts "
@@ -175,8 +188,13 @@ def main(argv: Optional[List[str]] = None) -> int:
               f"{r.hit_ratio_last:.3f},{r.ppf_ms:.2f},{r.p99_ms:.2f},"
               f"{len(r.refreshes)}")
     on, off = by_refresh[True], by_refresh[False]
-    recovered = (on.refreshes and on.hit_ratio_last > 2.0 * off.hit_ratio_last
-                 and on.ppf_ms < off.ppf_ms)
+    recovered = bool(on.refreshes
+                     and on.hit_ratio_last > 2.0 * off.hit_ratio_last
+                     and on.ppf_ms < off.ppf_ms)
+    claims.append(("drift", recovered,
+                   f"lfu_refresh hit {off.hit_ratio_last:.3f} -> "
+                   f"{on.hit_ratio_last:.3f}, p95 {off.ppf_ms:.2f} -> "
+                   f"{on.ppf_ms:.2f}ms"))
     if recovered:
         print(f"WIN drift: lfu_refresh restored hit ratio "
               f"{off.hit_ratio_last:.3f} -> {on.hit_ratio_last:.3f} and p95 "
@@ -189,6 +207,15 @@ def main(argv: Optional[List[str]] = None) -> int:
             f"{off.ppf_ms:.2f}ms (refreshes={len(on.refreshes)})")
 
     print(f"\ntraces: {tdir}")
+    if args.emit_json:
+        from benchmarks._artifacts import write_bench_json
+        write_bench_json("cluster", claims, {
+            "scale_out_x": scaling,
+            "p99_ms_median": med,
+            "hit_ratio_last_refresh_on": on.hit_ratio_last,
+            "hit_ratio_last_refresh_off": off.hit_ratio_last,
+            "sla_ms": sla_ms,
+        }, metrics=metrics_snapshot)
     if failures:
         for f in failures:
             print(f"FAILED CLAIM: {f}")

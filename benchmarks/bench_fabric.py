@@ -66,6 +66,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--boards", type=int, default=2)
     ap.add_argument("--trace-dir", default=None,
                     help="where the JSONL traces land (default: a tmp dir)")
+    ap.add_argument("--emit-json", action="store_true",
+                    help="write BENCH_fabric.json (claims + scalars + a "
+                         "representative run's metrics snapshot)")
     args = ap.parse_args(argv)
 
     n = 60 if args.tiny else args.queries
@@ -78,6 +81,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     tdir = args.trace_dir or tempfile.mkdtemp(prefix="bench_fabric_")
     os.makedirs(tdir, exist_ok=True)
     failures: List[str] = []
+    claims = []                  # (name, ok, detail) for --emit-json
+    metrics_snapshot = None      # a representative run's registry dump
     # batching deadline sized to the capacity-batch service time (~10 ms on
     # CPU at 512 rows): a 2 ms deadline would flush mostly-empty batches
     # and saturate the fleet long before its real capacity
@@ -120,6 +125,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     r = fleet.run(events, sla_ms=sla_ms, percentile=95.0,
                   scenario="stationary")
     print(r.summary())
+    metrics_snapshot = fleet.metrics.snapshot()
+    claims.append(("capacity", bool(r.ok and not r.fits_one_board),
+                   f"p95 {r.ppf_ms:.2f}ms <= {sla_ms:.1f}ms on {boards} "
+                   f"boards that individually cannot hold the model"))
     if r.ok and not r.fits_one_board:
         print(f"WIN capacity: {total / 2**20:.2f} MiB of tables "
               f"(> {cap / 2**20:.2f} MiB/board) served at p95 "
@@ -146,6 +155,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"{rows},{rr.bytes_per_query:.0f},{hit:.3f},{rr.p50_ms:.2f}")
     cut = (by_frac[0.0].bytes_per_query
            / max(by_frac[0.5].bytes_per_query, 1e-9))
+    claims.append(("cache", cut >= 3.0,
+                   f"bytes/query cut {cut:.1f}x caching half the remote "
+                   f"row space"))
     if cut >= 3.0:
         print(f"WIN cache: {by_frac[0.0].bytes_per_query:.0f} -> "
               f"{by_frac[0.5].bytes_per_query:.0f} B/query "
@@ -173,6 +185,10 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"(cache-off {by_frac[0.0].bytes_per_query:.0f}), hit "
           f"{rd.remote_hit_first:.3f}->{rd.remote_hit_last:.3f}, "
           f"{rd.cache_refreshes} cache refreshes")
+    claims.append(("drift",
+                   rd.bytes_per_query < by_frac[0.0].bytes_per_query,
+                   f"cached fleet {rd.bytes_per_query:.0f} B/query vs "
+                   f"cache-off {by_frac[0.0].bytes_per_query:.0f}"))
     if rd.bytes_per_query >= by_frac[0.0].bytes_per_query:
         failures.append(
             f"drift: cached fleet moved {rd.bytes_per_query:.0f} B/query, "
@@ -207,7 +223,12 @@ def main(argv: Optional[List[str]] = None) -> int:
         p50s[lat] = fl.run(events, sla_ms=sla_ms, percentile=95.0).p50_ms
     print(f"measured p50 at 1us link {p50s[1.0]:.2f} ms vs "
           f"{slow_us:.0f}us link {p50s[slow_us]:.2f} ms")
-    if monotone and drop > 1.05 and p50s[slow_us] > p50s[1.0] + 20.0:
+    sens_ok = bool(monotone and drop > 1.05
+                   and p50s[slow_us] > p50s[1.0] + 20.0)
+    claims.append(("sensitivity", sens_ok,
+                   f"modeled QPS bound falls {drop:.2f}x over the latency "
+                   f"grid; measured p50 follows"))
+    if sens_ok:
         print(f"WIN sensitivity: modeled QPS bound falls {drop:.2f}x from "
               f"{perf_model.LATENCY_GRID_US[0]} -> "
               f"{perf_model.LATENCY_GRID_US[-1]} us link latency "
@@ -218,6 +239,17 @@ def main(argv: Optional[List[str]] = None) -> int:
                         f"p50@{slow_us:.0f}us={p50s[slow_us]:.2f}")
 
     print(f"\ntraces: {tdir}")
+    if args.emit_json:
+        from benchmarks._artifacts import write_bench_json
+        write_bench_json("fabric", claims, {
+            "bytes_per_query_cache_off": by_frac[0.0].bytes_per_query,
+            "bytes_per_query_cache_half": by_frac[0.5].bytes_per_query,
+            "bytes_per_query_drift": rd.bytes_per_query,
+            "modeled_qps_bounds": dict(zip(
+                [float(x) for x in perf_model.LATENCY_GRID_US], bounds)),
+            "p50_ms_by_link_us": {str(k): v for k, v in p50s.items()},
+            "sla_ms": sla_ms,
+        }, metrics=metrics_snapshot)
     if failures:
         for f in failures:
             print(f"FAILED CLAIM: {f}")

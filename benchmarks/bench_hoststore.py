@@ -64,7 +64,7 @@ def _serve_trace(session, cfg, events):
     probs, plans = [], []
     ex = session._exchange_inst
     for ev in events:
-        p, _ = session._execute([materialize_query(cfg, ev)])
+        p, _, _ = session._execute([materialize_query(cfg, ev)])
         probs.append(p)
         plans.append(ex._last_plan if ex is not None else None)
     return probs, plans
@@ -223,6 +223,7 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     if args.emit_json:
         from benchmarks._artifacts import write_bench_json
+        from repro.obs import default_registry
         write_bench_json("hoststore", claims, {
             "queries": n, "alpha": args.alpha, "depth": args.depth,
             "over_budget": args.over_budget,
@@ -236,7 +237,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             "modeled_t_step_us": {f"{g:.0f}": bound[g] * 1e6
                                   for g in sweep_gbs},
             "p50_ms": {f"{g:.0f}": p50[g] for g in sweep_gbs},
-        })
+        }, metrics=default_registry().snapshot())
 
     print(f"\ntrace: {tdir}")
     if failures:

@@ -23,15 +23,15 @@ SECTIONS = [
     ("tiered_embedding", lambda: bench_tiered_embedding.main([])),
     ("engine_serve", lambda: bench_engine_serve.main(["--queries", "80"])),
     ("pipeline", lambda: bench_pipeline.main(["--tiny"])),
-    ("cluster", lambda: bench_cluster.main(["--tiny"])),
-    ("fabric", lambda: bench_fabric.main(["--tiny"])),
+    ("cluster", lambda extra=(): bench_cluster.main(["--tiny", *extra])),
+    ("fabric", lambda extra=(): bench_fabric.main(["--tiny", *extra])),
     ("elastic", lambda extra=(): bench_elastic.main(["--tiny", *extra])),
     ("hoststore", lambda extra=(): bench_hoststore.main(["--tiny", *extra])),
     ("roofline", roofline.main),
 ]
 
 # sections that can write a BENCH_<name>.json artifact (benchmarks/_artifacts)
-EMITS_JSON = {"elastic", "hoststore", "kernels"}
+EMITS_JSON = {"cluster", "elastic", "fabric", "hoststore", "kernels"}
 
 
 def main(argv=None) -> int:

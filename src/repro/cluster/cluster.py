@@ -45,6 +45,10 @@ from repro.cluster.autoscale import ScaleEvent, SLAAutoscaler
 from repro.cluster.monitor import HitRatioMonitor
 from repro.cluster.replica import Replica, slice_devices, submesh
 from repro.cluster.router import Router, make_router
+from repro.obs.attribution import AttributionLog, BlameReport
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.serialize import report_asdict, report_to_json
+from repro.obs.trace import Tracer
 from repro.traffic.scenarios import QueryEvent, materialize_query
 
 
@@ -81,6 +85,7 @@ class FleetReport:
     # cost-vs-SLA frontier bench_cluster / bench_fabric report
     board_seconds: float = 0.0
     sla_violations: int = 0
+    blame: Optional[BlameReport] = None   # per-query tail attribution
 
     # subclass hook: the bracket tag each summary line carries
     tag: ClassVar[str] = "fleet"
@@ -109,7 +114,15 @@ class FleetReport:
                 f"{self.achieved_qps:.1f}/{self.predicted_qps:.1f} "
                 f"({self.achieved_qps / self.predicted_qps:.2f}x of "
                 f"{self.n_replicas_start} x PlanReport)")
+        if self.blame is not None:
+            lines.append(self.blame.summary())
         return "\n".join(lines)
+
+    def asdict(self) -> dict:
+        return report_asdict(self)
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        return report_to_json(self, path)
 
 
 @dataclass(frozen=True)
@@ -165,6 +178,8 @@ class Cluster:
                  monitor: Optional[HitRatioMonitor] = None,
                  pipeline_depth: Optional[int] = None,
                  service_scales: Optional[Sequence[float]] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None,
                  verbose: bool = False):
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
@@ -209,6 +224,12 @@ class Cluster:
         self.monitor = monitor
         self.completed: Dict[int, QueryFuture] = {}
         self.scale_events: List[ScaleEvent] = []
+        # observability: per-instance metrics registry (reset each run) so
+        # reports read their tallies back without cross-run bleed; tracer
+        # is opt-in (--trace-out)
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.attribution = AttributionLog()
 
     @property
     def n_replicas(self) -> int:
@@ -241,6 +262,7 @@ class Cluster:
             t_s=now, action="up", n_replicas=len(self.replicas),
             window_p99_ms=window_p99, remesh=remesh_report,
             board_seconds=cost))
+        self._observe_scale("up", now, window_p99)
         if self.verbose:
             print(f"[cluster] t={now:.3f}s scale UP -> "
                   f"{len(self.replicas)} replicas (p99 {window_p99:.2f}ms, "
@@ -249,7 +271,7 @@ class Cluster:
     def _scale_down(self, now: float, window_p99: float) -> None:
         # retire the emptiest board; drain its queue before it goes
         victim = min(self.replicas, key=lambda r: (r.backlog(now), -r.rid))
-        self._flush(victim, now)
+        self._flush(victim, now, reason="drain")
         victim.retired_at = max(now, victim.free)   # serves out its queue
         self.replicas.remove(victim)
         self.router.replica_removed(self.replicas)
@@ -260,13 +282,60 @@ class Cluster:
         self.scale_events.append(ScaleEvent(
             t_s=now, action="down", n_replicas=len(self.replicas),
             window_p99_ms=window_p99, board_seconds=cost))
+        self._observe_scale("down", now, window_p99)
         if self.verbose:
             print(f"[cluster] t={now:.3f}s scale DOWN -> "
                   f"{len(self.replicas)} replicas (r{victim.rid} retired, "
                   f"p99 {window_p99:.2f}ms, {cost:.3f} board-s spent)")
 
+    # -- observability hooks -------------------------------------------------
+    def _observe_scale(self, action: str, now: float, p99: float) -> None:
+        self.metrics.counter("scale_events", action=action).inc()
+        self.metrics.gauge("n_replicas").set(len(self.replicas))
+        if self.tracer is not None:
+            self.tracer.track(0, 0, process="control", thread="autoscaler")
+            self.tracer.instant(f"scale:{action}", "autoscaler", now,
+                                args={"n_replicas": len(self.replicas),
+                                      "window_p99_ms": p99})
+            self.tracer.counter("n_replicas", now,
+                                {"fleet": len(self.replicas)})
+
+    def _observe_flush(self, replica: Replica, trigger: float,
+                       reason: str, futs: List[QueryFuture]) -> None:
+        lf = replica.last_flush
+        self.attribution.record_batch(
+            [(f.qid, f.arrival) for f in futs], rid=replica.rid,
+            trigger=trigger, start=lf["start"], done=lf["done"],
+            compute_s=lf["service_s"] - lf["swap_stall_s"],
+            swap_stall_s=lf["swap_stall_s"])
+        self.metrics.counter("queries_served", rid=replica.rid).inc(len(futs))
+        self.metrics.gauge("queue_depth", rid=replica.rid).set(0)
+        self.metrics.histogram("flush_service_ms").observe(
+            lf["service_s"] * 1e3)
+        if self.tracer is None:
+            return
+        pid = replica.rid + 1
+        self.tracer.track(pid, 0, process=f"replica{replica.rid}",
+                          thread="serve")
+        self.tracer.track(pid, 1, thread="batching")
+        self.tracer.span("batch_fill", "batching", lf["oldest_arrival"],
+                         trigger, pid=pid, tid=1,
+                         args={"queries": len(futs), "reason": reason})
+        self.tracer.instant(f"flush:{reason}", "batching", trigger,
+                            pid=pid, tid=1, args={"queries": len(futs)})
+        self.tracer.span("serve_batch", "service", lf["start"], lf["done"],
+                         pid=pid, tid=0,
+                         args={"queries": len(futs),
+                               "service_ms": lf["service_s"] * 1e3})
+        if lf["swap_stall_s"] > 0:
+            self.tracer.track(pid, 3, thread="host-swap")
+            self.tracer.span("swap_stall", "hoststore",
+                             lf["done"] - lf["swap_stall_s"], lf["done"],
+                             pid=pid, tid=3)
+
     # -- event loop ----------------------------------------------------------
-    def _flush(self, replica: Replica, trigger: float) -> List[QueryFuture]:
+    def _flush(self, replica: Replica, trigger: float,
+               reason: str = "full") -> List[QueryFuture]:
         scale = 1.0
         if self.monitor is not None:
             qids = [f.qid for f in replica.batcher.queue]
@@ -280,6 +349,7 @@ class Cluster:
             self.completed[f.qid] = f
             self._lat_ms.append(f.latency_ms)
         self._last_done = max(self._last_done, futs[0].completed_at)
+        self._observe_flush(replica, trigger, reason, futs)
         if self.autoscaler is not None:
             decision = self.autoscaler.observe(
                 [f.latency_ms for f in futs], now=trigger,
@@ -303,6 +373,9 @@ class Cluster:
         self._retired: List[Replica] = []
         self.completed = {}
         self.scale_events = []
+        self.metrics.reset()
+        self.attribution = AttributionLog()
+        self.metrics.gauge("n_replicas").set(len(self.replicas))
         n_start = len(self.replicas)
         i = 0
         while i < len(events) or any(r.batcher.queue for r in self.replicas):
@@ -319,10 +392,13 @@ class Cluster:
                     self.monitor.maybe_refresh(ev.arrival_s)
                 fut = QueryFuture(ev.qid, ev.arrival_s, query)
                 replica = self.router.pick(self.replicas, ev.arrival_s)
-                if replica.enqueue(fut):
-                    self._flush(replica, ev.arrival_s)
+                full = replica.enqueue(fut)
+                self.metrics.gauge("queue_depth", rid=replica.rid).set(
+                    len(replica.batcher.queue))
+                if full:
+                    self._flush(replica, ev.arrival_s, reason="full")
             else:
-                self._flush(due, due.deadline())
+                self._flush(due, due.deadline(), reason="deadline")
 
         lat = np.asarray(self._lat_ms, np.float64)
         p50, p90, p99 = (float(np.percentile(lat, p)) for p in (50, 90, 99))
@@ -355,4 +431,5 @@ class Cluster:
                        if self.monitor is not None else ()),
             hit_ratio_first=hit_first, hit_ratio_last=hit_last,
             board_seconds=self._board_seconds(makespan),
-            sla_violations=int((lat > sla_ms).sum()))
+            sla_violations=int((lat > sla_ms).sum()),
+            blame=self.attribution.blame(percentile))

@@ -99,6 +99,7 @@ class Replica:
         # look idle and join-shortest-queue dogpiles it
         self._dispatched: Deque[Tuple[float, int]] = deque()
         self._svc_ewma = 0.0     # per-query service estimate (seconds)
+        self.last_flush: Optional[Dict[str, float]] = None
 
     # -- queue state (what routers see) ------------------------------------
     def backlog(self, now: float) -> int:
@@ -139,12 +140,21 @@ class Replica:
         futs = self.batcher.drain()
         if not futs:
             return []
-        probs, service = self.session._execute([f.query for f in futs])
-        service *= float(service_scale) * self.service_scale
+        probs, service, stall = self.session._execute(
+            [f.query for f in futs])
+        scale = float(service_scale) * self.service_scale
+        service *= scale
+        stall *= scale
         start = max(trigger, self.free)
         done = start + service
         self.free = done
         self.busy_s += service
+        # flush-window timeline for the cluster's tracer/attribution:
+        # the replica owns the busy horizon, the cluster owns the obs
+        self.last_flush = {
+            "trigger": trigger, "start": start, "done": done,
+            "service_s": service, "swap_stall_s": stall,
+            "n_queries": len(futs), "oldest_arrival": futs[0].arrival}
         self.served += len(futs)
         self.batch_sizes.append(len(futs))
         self._dispatched.append((done, len(futs)))

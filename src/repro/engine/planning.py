@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.configs.base import DLRMConfig
 from repro.core.planner import ShardingPlan
+from repro.obs.serialize import report_asdict, report_to_json
 
 
 @dataclass(frozen=True)
@@ -46,6 +47,12 @@ class PlanReport:
                 f"pipeline_depth={self.pipeline_depth} "
                 f"serve_kernel={self.serve_kernel} "
                 f"(hybrid HBM+DDR4 model)")
+
+    def asdict(self) -> dict:
+        return report_asdict(self)
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        return report_to_json(self, path)
 
 
 def build_auto_plan(cfg: DLRMConfig, n: int, *, alpha: float = 0.0,

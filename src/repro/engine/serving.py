@@ -33,6 +33,10 @@ from repro import parallel
 from repro.data import make_recsys_batch
 from repro.engine.batching import (MicroBatcher, QueryFuture, now_s,
                                    poisson_arrivals)
+from repro.obs.attribution import AttributionLog, BlameReport
+from repro.obs.metrics import default_registry
+from repro.obs.serialize import report_asdict, report_to_json
+from repro.obs.trace import Tracer
 
 Query = Dict[str, jax.Array]
 
@@ -53,11 +57,12 @@ class SLAReport:
     sla_ms: float              # C_SLA
     ok: bool
     mean_batch_queries: float  # avg queries per flushed micro-batch
+    blame: Optional[BlameReport] = None  # tail-latency attribution
 
     def summary(self) -> str:
         offered = ("" if self.offered_qps is None
                    else f" offered={self.offered_qps:.1f}qps")
-        return (
+        text = (
             f"[serve] {self.mode}: {self.n_queries} queries,{offered} "
             f"QPS={self.achieved_qps:.1f} mean_batch="
             f"{self.mean_batch_queries:.2f} p50={self.p50_ms:.2f}ms "
@@ -65,11 +70,21 @@ class SLAReport:
             f"[serve] SLA check PPF(D_Q, {self.percentile:.0f}) = "
             f"{self.ppf_ms:.2f}ms {'<=' if self.ok else '>'} "
             f"C_SLA={self.sla_ms}ms -> {'PASS' if self.ok else 'FAIL'}")
+        if self.blame is not None:
+            text += "\n" + self.blame.summary()
+        return text
+
+    def asdict(self) -> dict:
+        return report_asdict(self)
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        return report_to_json(self, path)
 
 
 def _report(lat_ms: Sequence[float], batch_sizes: Sequence[int], mode: str,
             offered_qps: Optional[float], achieved_qps: float,
-            sla_ms: float, percentile: float) -> SLAReport:
+            sla_ms: float, percentile: float,
+            blame: Optional[BlameReport] = None) -> SLAReport:
     lat = np.asarray(lat_ms, np.float64)
     p50, p90, p99 = (float(np.percentile(lat, p)) for p in (50, 90, 99))
     ppf = float(np.percentile(lat, percentile))
@@ -77,7 +92,8 @@ def _report(lat_ms: Sequence[float], batch_sizes: Sequence[int], mode: str,
         n_queries=len(lat), mode=mode, offered_qps=offered_qps,
         achieved_qps=achieved_qps, p50_ms=p50, p90_ms=p90, p99_ms=p99,
         percentile=percentile, ppf_ms=ppf, sla_ms=sla_ms, ok=ppf <= sla_ms,
-        mean_batch_queries=float(np.mean(batch_sizes)) if batch_sizes else 0.0)
+        mean_batch_queries=float(np.mean(batch_sizes)) if batch_sizes else 0.0,
+        blame=blame)
 
 
 class ServeSession:
@@ -251,12 +267,17 @@ class ServeSession:
         step = self._get_step(self.depth_for_samples(dense.shape[0]))
         return np.asarray(step(self.params, dense, indices))
 
-    def _execute(self, queries: List[Query]) -> Tuple[np.ndarray, float]:
+    def _execute(self, queries: List[Query]
+                 ) -> Tuple[np.ndarray, float, float]:
         """Concatenate + pad queries, run the step, split results back.
 
-        Returns (probs (n_queries, query_size), service_seconds). Padding
-        replicates query 0 so every compiled shape is a mesh-divisible
-        query count; padded outputs are discarded.
+        Returns (probs (n_queries, query_size), service_seconds,
+        swap_stall_seconds). `service_seconds` INCLUDES the swap stall
+        (it is the batch's full occupancy of the executor); the stall is
+        also returned on its own so attribution can split compute from
+        exposed host-tier swap time. Padding replicates query 0 so every
+        compiled shape is a mesh-divisible query count; padded outputs
+        are discarded.
         """
         k = self._padded_count(len(queries))
         self._ensure_compiled(k)
@@ -278,12 +299,14 @@ class ServeSession:
         probs = step(self.params, dense, idx)
         probs.block_until_ready()
         service = time.perf_counter() - t0
+        stall = 0.0
         if plan is not None:
             # modeled swap stall composes with the MEASURED compute time —
             # the bench_pipeline measured+modeled discipline
-            service += self._exchange_inst.stall_seconds(plan, service)
+            stall = self._exchange_inst.stall_seconds(plan, service)
+            service += stall
         out = np.asarray(probs).reshape(k, self.query_size)
-        return out[:len(queries)], service
+        return out[:len(queries)], service, stall
 
     # -- request path ------------------------------------------------------
     def validate_query(self, query: Query) -> None:
@@ -343,7 +366,7 @@ class ServeSession:
         futs = self.batcher.drain()
         if not futs:
             return []
-        probs, _ = self._execute([f.query for f in futs])
+        probs, _, _ = self._execute([f.query for f in futs])
         t = now_s() if now is None else now
         for f, p in zip(futs, probs):
             f.complete(p, t)
@@ -363,7 +386,7 @@ class ServeSession:
         self._ensure_compiled(n_queries)
         times = []
         for _ in range(repeats):
-            _, service = self._execute(qs)
+            _, service, _ = self._execute(qs)
             times.append(service)
         return float(np.median(times))
 
@@ -379,22 +402,46 @@ class ServeSession:
 
     def run_serial(self, n_queries: int, *, sla_ms: float = 50.0,
                    percentile: float = 99.0, seed: Optional[int] = None,
-                   alpha: Optional[float] = None) -> SLAReport:
+                   alpha: Optional[float] = None,
+                   tracer: Optional[Tracer] = None) -> SLAReport:
         """Closed-loop: one query per micro-batch, back to back."""
         self._ensure_compiled(1)
+        if tracer is not None:
+            tracer.track(1, 0, process="board0", thread="serve")
+            tracer.track(1, 3, thread="host-swap")
+        log = AttributionLog()
+        metrics = default_registry()
         lat_ms: List[float] = []
+        clock = 0.0            # back-to-back virtual timeline
         for q in range(n_queries):
-            _, service = self._execute([self._make_query(q, seed, alpha)])
+            _, service, stall = self._execute(
+                [self._make_query(q, seed, alpha)])
+            done = clock + service
+            metrics.counter("queries_served", rid=0).inc()
+            metrics.histogram("flush_service_ms").observe(service * 1e3)
+            # closed loop: arrival == dispatch, so latency is pure service
+            log.record_batch([(q, clock)], rid=0, trigger=clock, start=clock,
+                             done=done, compute_s=service - stall,
+                             swap_stall_s=stall)
+            if tracer is not None:
+                tracer.span("serve_batch", "service", clock, done,
+                            pid=1, tid=0, args={"queries": 1, "qid": q})
+                if stall > 0:
+                    tracer.span("swap_stall", "hoststore", done - stall,
+                                done, pid=1, tid=3)
+            clock = done
             lat_ms.append(service * 1e3)
         busy_s = sum(lat_ms) / 1e3
         return _report(lat_ms, [1] * n_queries, "serial", None,
-                       n_queries / max(busy_s, 1e-12), sla_ms, percentile)
+                       n_queries / max(busy_s, 1e-12), sla_ms, percentile,
+                       blame=log.blame(percentile))
 
     def run_open_loop(self, n_queries: int, qps: float, *,
                       sla_ms: float = 50.0, percentile: float = 99.0,
                       seed: Optional[int] = None,
                       alpha: Optional[float] = None,
-                      max_wait_ms: Optional[float] = None) -> SLAReport:
+                      max_wait_ms: Optional[float] = None,
+                      tracer: Optional[Tracer] = None) -> SLAReport:
         """Open-loop load: Poisson arrivals at `qps`, dynamic batching.
 
         Event-driven virtual clock over the SAME `MicroBatcher` policy the
@@ -403,7 +450,7 @@ class ServeSession:
         queueing (server busy) and batching (deadline) delays compose with
         it exactly as they would on a single-executor server. Per-query
         latency = completion - arrival; the SLA verdict is Eq. 1 on that
-        distribution.
+        distribution, and `report.blame` decomposes the tail.
         """
         arrivals = poisson_arrivals(n_queries, qps,
                                     self.seed if seed is None else seed)
@@ -411,6 +458,12 @@ class ServeSession:
             self.max_batch_queries,
             self.batcher.max_wait_s if max_wait_ms is None
             else max_wait_ms / 1e3)
+        if tracer is not None:
+            tracer.track(1, 0, process="board0", thread="serve")
+            tracer.track(1, 1, thread="batching")
+            tracer.track(1, 3, thread="host-swap")
+        log = AttributionLog()
+        metrics = default_registry()
         lat_ms: List[float] = []
         batch_sizes: List[int] = []
         free = 0.0            # server busy until this time
@@ -426,18 +479,42 @@ class ServeSession:
                 if not batcher.add(fut):
                     continue
                 trigger = fut.arrival          # the batch just filled
+                reason = "full"
             else:
                 trigger = batcher.deadline()   # oldest query timed out
+                reason = "deadline"
             futs = batcher.drain()
-            probs, service = self._execute([f.query for f in futs])
+            probs, service, stall = self._execute([f.query for f in futs])
             start = max(trigger, free)
             done = start + service
             free = done
             last_done = done
+            metrics.counter("queries_served", rid=0).inc(len(futs))
+            metrics.counter("flushes", reason=reason).inc()
+            metrics.histogram("flush_service_ms").observe(service * 1e3)
+            log.record_batch([(f.qid, f.arrival) for f in futs], rid=0,
+                             trigger=trigger, start=start, done=done,
+                             compute_s=service - stall, swap_stall_s=stall)
+            if tracer is not None:
+                tracer.span("batch_fill", "batching", futs[0].arrival,
+                            trigger, pid=1, tid=1,
+                            args={"queries": len(futs), "reason": reason})
+                tracer.instant(f"flush:{reason}", "batching", trigger,
+                               pid=1, tid=1, args={"queries": len(futs)})
+                tracer.counter("queue_depth", trigger, {"board0": len(futs)},
+                               pid=1)
+                tracer.counter("queue_depth", done, {"board0": 0}, pid=1)
+                tracer.span("serve_batch", "service", start, done,
+                            pid=1, tid=0,
+                            args={"queries": len(futs),
+                                  "service_ms": service * 1e3})
+                if stall > 0:
+                    tracer.span("swap_stall", "hoststore", done - stall,
+                                done, pid=1, tid=3)
             for f, p in zip(futs, probs):
                 f.complete(p, done)
                 lat_ms.append(f.latency_ms)
             batch_sizes.append(len(futs))
         achieved = n_queries / max(last_done, 1e-12)
         return _report(lat_ms, batch_sizes, "open_loop", qps, achieved,
-                       sla_ms, percentile)
+                       sla_ms, percentile, blame=log.blame(percentile))

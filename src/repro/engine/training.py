@@ -21,6 +21,7 @@ from repro.core import dlrm as dlrm_lib
 from repro.core.planner import ShardingPlan
 from repro import parallel
 from repro.data import make_lm_batch, make_recsys_batch
+from repro.obs.serialize import report_asdict, report_to_json
 from repro.runtime import TrainLoop
 
 
@@ -41,6 +42,12 @@ class TrainReport:
                 f"steps={self.steps_run} (from {self.start_step}) "
                 f"first_loss={self.first_loss:.4f} "
                 f"last_loss={self.last_loss:.4f}")
+
+    def asdict(self) -> dict:
+        return report_asdict(self)
+
+    def to_json(self, path: Optional[str] = None) -> str:
+        return report_to_json(self, path)
 
 
 class _SessionBase:

@@ -42,6 +42,7 @@ from repro.core.collectives import Interconnect
 from repro.core.perf_model import fabric_exchange_time
 from repro.fabric.cache import RemoteRowCache
 from repro.fabric.partition import ShardMap
+from repro.obs.metrics import MetricsRegistry
 
 PartitionMap = ShardMap  # wire-level alias, same as fabric.partition
 
@@ -80,10 +81,12 @@ class FabricExchange:
 
     def __init__(self, cfg: DLRMConfig, partition: ShardMap,
                  link: Interconnect, *, index_bytes: int = 4,
-                 elem_bytes: int = 2):
+                 elem_bytes: int = 2,
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.partition = partition
         self.link = link
+        self.metrics = metrics     # publish wire accounting here when set
         self.index_bytes = int(index_bytes)
         self.elem_bytes = int(elem_bytes)
         T, R = partition.num_tables, partition.rows_per_table
@@ -148,6 +151,12 @@ class FabricExchange:
             * self.elem_bytes
         t_link = fabric_exchange_time(bytes_out, bytes_in,
                                       self.partition.n_boards, self.link)
+        if self.metrics is not None:
+            self.metrics.counter("wire_bytes", board=board_id).inc(
+                bytes_out + bytes_in)
+            self.metrics.counter("remote_lookups").inc(remote_lookups)
+            self.metrics.counter("cache_hit", tier="remote").inc(cache_hits)
+            self.metrics.counter("cache_miss", tier="remote").inc(miss_rows)
         return ExchangeTraffic(B, remote_lookups, cache_hits, miss_rows,
                                miss_bags, float(bytes_out), float(bytes_in),
                                t_link)

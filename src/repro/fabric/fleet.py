@@ -74,10 +74,13 @@ from repro.cluster.router import Router, make_router
 from repro.engine.batching import MicroBatcher, QueryFuture
 from repro.fabric.cache import RemoteRowCache
 from repro.fabric.elastic import expand_map, plan_migration, shrink_map
-from repro.fabric.exchange import ExchangeTraffic, FabricExchange
+from repro.fabric.exchange import FabricExchange
 from repro.core.planner import default_table_bytes
 from repro.fabric.partition import ShardMap, partition_rows
 from repro.kernels import ops
+from repro.obs.attribution import AttributionLog
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.traffic.scenarios import QueryEvent, materialize_query
 
 RowRanges = Dict[int, List[Tuple[int, int]]]   # table -> [(row_lo, row_hi)]
@@ -353,6 +356,8 @@ class ShardedFleet:
                  autoscaler: Optional[SLAAutoscaler] = None,
                  min_shard_rows: int = 1,
                  service_scales: Optional[Sequence[float]] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None,
                  verbose: bool = False):
         if n_boards < 1:
             raise ValueError(f"n_boards must be >= 1, got {n_boards}")
@@ -367,6 +372,15 @@ class ShardedFleet:
         self.seed = int(seed)
         self.link = link if link is not None else perf_model.fabric_link()
         self.min_shard_rows = int(min_shard_rows)
+        # observability: the per-instance registry IS the fleet's tally
+        # store (wire bytes, link/service seconds, migration ledger) —
+        # FabricReport reads it back after the run; tracer is opt-in
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.attribution = AttributionLog()
+        # remesh quiesce windows, for carving remesh_barrier time out of
+        # queued queries' waits
+        self._barrier_ivals: List[Tuple[float, float]] = []
 
         # -- partition: profiled access stats -> row-range ownership ---------
         self.row_freq = te.measure_row_freq(cfg, alpha, seed,
@@ -382,7 +396,8 @@ class ShardedFleet:
             min_shard_rows=self.min_shard_rows)
         if verbose:
             print(self.partition.summary())
-        self.exchange = FabricExchange(cfg, self.partition, self.link)
+        self.exchange = FabricExchange(cfg, self.partition, self.link,
+                                       metrics=self.metrics)
 
         # -- boards: shared-seed params, sliced by ownership -----------------
         self._params = dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg)
@@ -422,9 +437,6 @@ class ShardedFleet:
         self.completed: Dict[int, QueryFuture] = {}
         self.scale_events: List[ScaleEvent] = []
         self._retired: List[FabricBoard] = []
-        self._migrated_bytes = 0
-        self._migration_s = 0.0
-        self._cache_invalidated = 0
 
     @property
     def n_boards(self) -> int:
@@ -481,8 +493,15 @@ class ShardedFleet:
         for b in self.boards:
             b.free = max(b.free, end)
             b.busy_s += stall
+            if self.tracer is not None and stall > 0:
+                self.tracer.span("remesh_barrier", "autoscaler", start, end,
+                                 pid=b.rid + 1, tid=0,
+                                 args={"action": action,
+                                       "bytes_moved": plan.bytes_moved})
+        self._barrier_ivals.append((start, end))
         self.partition = new_map
-        self.exchange = FabricExchange(self.cfg, new_map, self.link)
+        self.exchange = FabricExchange(self.cfg, new_map, self.link,
+                                       metrics=self.metrics)
         for b in self.boards:
             whole, ranges = self._residency_of(new_map, b.rid)
             b.set_residency(whole, ranges, self._tables_host)
@@ -500,9 +519,18 @@ class ShardedFleet:
                     "bytes_moved": plan.bytes_moved,
                     "cache_invalidated_rows": invalidated},
             board_seconds=cost))
-        self._migrated_bytes += plan.bytes_moved
-        self._migration_s += stall
-        self._cache_invalidated += invalidated
+        self.metrics.counter("migrations", action=action).inc()
+        self.metrics.counter("migrated_bytes").inc(plan.bytes_moved)
+        self.metrics.counter("migration_s").inc(stall)
+        self.metrics.counter("cache_invalidated_rows").inc(invalidated)
+        self.metrics.gauge("n_boards").set(new_map.n_boards)
+        if self.tracer is not None:
+            self.tracer.track(0, 0, process="control", thread="autoscaler")
+            self.tracer.instant(f"scale:{action}", "autoscaler", now,
+                                args={"n_boards": new_map.n_boards,
+                                      "window_p99_ms": window_p99,
+                                      "stall_ms": stall * 1e3})
+            self.tracer.counter("n_boards", now, {"fleet": new_map.n_boards})
         if self.verbose:
             print(f"[fabric] t={now:.3f}s scale {action.upper()} -> "
                   f"{new_map.n_boards} boards: {plan.summary()[10:]} "
@@ -526,7 +554,7 @@ class ShardedFleet:
         # highest id so survivors keep their ids and resident rows);
         # drain its queue before its rows leave
         victim = self.boards[-1]
-        self._flush(victim, now)
+        self._flush(victim, now, reason="drain")
         try:
             new_map = shrink_map(self.partition, self.row_freq,
                                  min_shard_rows=self.min_shard_rows)
@@ -606,7 +634,8 @@ class ShardedFleet:
         pooled = jnp.concatenate(parts, axis=1)[:, self.exchange.inv_perm, :]
         return pooled, owner_s, pool_s
 
-    def _flush(self, board: FabricBoard, trigger: float) -> List[QueryFuture]:
+    def _flush(self, board: FabricBoard, trigger: float,
+               reason: str = "full") -> List[QueryFuture]:
         futs = board.batcher.drain()
         if not futs:
             return []
@@ -641,11 +670,13 @@ class ShardedFleet:
         start = max(trigger, board.free)
         pooled, owner_s, pool_s = self._owner_parts(board, idx_np)
         parts_ready = start
+        owner_windows: List[Tuple[int, float, float]] = []
         for o, t_o in owner_s.items():
             owner = self.boards[o]
             begin = start if o == board.rid else max(start, owner.free)
             done_o = begin + t_o
             parts_ready = max(parts_ready, done_o)
+            owner_windows.append((o, begin, done_o))
             if o != board.rid:
                 owner.free = max(owner.free, done_o)
                 owner.lookup_busy_s += t_o
@@ -658,11 +689,52 @@ class ShardedFleet:
         board.served += len(futs)
         board.batch_sizes.append(len(futs))
         board.note_service(window, len(futs))
-        self._service_s += window
-        self._link_s += traffic.t_link_s
-        self._traffic.append(traffic)
         self._batch_sizes.append(len(futs))
         self._last_done = max(self._last_done, done)
+
+        # -- observability: attribution + registry tallies + spans ----------
+        # compute = parallel owner service (their max) + split pooling +
+        # dense forward; the rest of [start, done] is owner-queue coupling
+        # (busy owners delayed their slice) and the modeled fabric round
+        compute_s = max(owner_s.values()) + pool_s + t_dense
+        queue_extra = (parts_ready - start) - max(owner_s.values())
+        self.attribution.record_batch(
+            [(f.qid, f.arrival) for f in futs], rid=board.rid,
+            trigger=trigger, start=start, done=done, compute_s=compute_s,
+            link_stall_s=traffic.t_link_s, queue_extra_s=queue_extra,
+            barriers=self._barrier_ivals)
+        self.metrics.counter("service_s").inc(window)
+        self.metrics.counter("link_stall_s").inc(traffic.t_link_s)
+        self.metrics.counter("queries_served", rid=board.rid).inc(len(futs))
+        self.metrics.histogram("flush_service_ms").observe(window * 1e3)
+        if self.tracer is not None:
+            pid = board.rid + 1
+            self.tracer.track(pid, 0, process=f"board{board.rid}",
+                              thread="serve")
+            self.tracer.track(pid, 1, thread="batching")
+            self.tracer.span("batch_fill", "batching", futs[0].arrival,
+                             trigger, pid=pid, tid=1,
+                             args={"queries": len(futs), "reason": reason})
+            self.tracer.instant(f"flush:{reason}", "batching", trigger,
+                                pid=pid, tid=1, args={"queries": len(futs)})
+            self.tracer.span("serve_batch", "service", start, done,
+                             pid=pid, tid=0,
+                             args={"queries": len(futs),
+                                   "compute_ms": compute_s * 1e3,
+                                   "link_ms": traffic.t_link_s * 1e3})
+            for o, begin, done_o in owner_windows:
+                self.tracer.track(o + 1, 2, thread="fabric")
+                self.tracer.span("owner_lookup", "fabric", begin, done_o,
+                                 pid=o + 1, tid=2,
+                                 args={"for_board": board.rid})
+            if traffic.t_link_s > 0:
+                self.tracer.track(pid, 2, thread="fabric")
+                self.tracer.span(
+                    "fabric_link", "fabric", parts_ready,
+                    parts_ready + traffic.t_link_s, pid=pid, tid=2,
+                    args={"bytes": traffic.bytes_total,
+                          "remote_lookups": traffic.remote_lookups,
+                          "cache_hits": traffic.cache_hits})
 
         out = np.asarray(probs).reshape(len(parts_q),
                                         self.query_size)[:len(futs)]
@@ -694,16 +766,14 @@ class ShardedFleet:
             raise ValueError("fleet run needs at least one event")
         self._lat_ms: List[float] = []
         self._batch_sizes: List[int] = []
-        self._traffic: List[ExchangeTraffic] = []
-        self._service_s = 0.0
-        self._link_s = 0.0
         self._last_done = 0.0
         self.completed = {}
         self.scale_events = []
         self._retired = []
-        self._migrated_bytes = 0
-        self._migration_s = 0.0
-        self._cache_invalidated = 0
+        self._barrier_ivals = []
+        self.metrics.reset()
+        self.attribution = AttributionLog()
+        self.metrics.gauge("n_boards").set(len(self.boards))
         n_start = len(self.boards)
         i = 0
         while i < len(events) or any(b.batcher.queue for b in self.boards):
@@ -716,17 +786,24 @@ class ShardedFleet:
                 query = materialize_query(self.cfg, ev, self.query_size)
                 fut = QueryFuture(ev.qid, ev.arrival_s, query)
                 board = self.router.pick(self.boards, ev.arrival_s)
-                if board.enqueue(fut):
-                    self._flush(board, ev.arrival_s)
+                full = board.enqueue(fut)
+                self.metrics.gauge("queue_depth", rid=board.rid).set(
+                    len(board.batcher.queue))
+                if full:
+                    self._flush(board, ev.arrival_s, reason="full")
             else:
-                self._flush(due, due.deadline())
+                self._flush(due, due.deadline(), reason="deadline")
 
         lat = np.asarray(self._lat_ms, np.float64)
         p50, p90, p99 = (float(np.percentile(lat, p)) for p in (50, 90, 99))
         ppf = float(np.percentile(lat, percentile))
         makespan = max(self._last_done, 1e-12)
         offered = len(events) / max(events[-1].arrival_s, 1e-12)
-        remote_lookups = sum(t.remote_lookups for t in self._traffic)
+        # the run's tallies live in the metrics registry (the exchange and
+        # _flush published them there); the report reads them back
+        remote_lookups = int(self.metrics.total("remote_lookups"))
+        service_s = self.metrics.value("service_s")
+        link_s = self.metrics.value("link_stall_s")
         total_lookups = (len(events) * self.query_size
                          * self.cfg.num_tables * self.cfg.lookups_per_table)
         # only ENABLED caches report a hit trajectory: a cache-off run must
@@ -761,15 +838,15 @@ class ShardedFleet:
                             <= self.partition.board_capacity_bytes),
             cache_rows=max((c.capacity_rows for c in self.caches
                             if c.enabled), default=0),
-            bytes_per_query=(sum(t.bytes_total for t in self._traffic)
-                             / len(events)),
+            bytes_per_query=self.metrics.total("wire_bytes") / len(events),
             remote_lookup_fraction=remote_lookups / max(total_lookups, 1),
             remote_hit_first=hit_first, remote_hit_last=hit_last,
-            link_stall_share=(self._link_s / self._service_s
-                              if self._service_s > 0 else 0.0),
+            link_stall_share=(link_s / service_s if service_s > 0 else 0.0),
             cache_refreshes=sum(len(c.refreshes) for c in self.caches),
             scale_events=tuple(self.scale_events),
             migrations=len(self.scale_events),
-            migrated_bytes=self._migrated_bytes,
-            migration_s=self._migration_s,
-            cache_invalidated_rows=self._cache_invalidated)
+            migrated_bytes=int(self.metrics.value("migrated_bytes")),
+            migration_s=self.metrics.value("migration_s"),
+            cache_invalidated_rows=int(
+                self.metrics.value("cache_invalidated_rows")),
+            blame=self.attribution.blame(percentile))

@@ -40,6 +40,7 @@ from repro.configs.base import DLRMConfig
 from repro.core import perf_model
 from repro.core.tiered_embedding import measure_row_freq
 from repro.kernels import ops
+from repro.obs.metrics import MetricsRegistry, default_registry
 from repro.parallel.exchange import Axis, EmbeddingExchange, Tables
 
 from .chunks import ChunkParamMgr
@@ -59,7 +60,8 @@ class HostTieredExchange(EmbeddingExchange):
     def __init__(self, cfg: DLRMConfig, axis: Axis, n: int, *,
                  mgr: ChunkParamMgr, hot_rows: np.ndarray,
                  link: Optional["perf_model.Interconnect"] = None,
-                 pool_mode: str = "paired"):
+                 pool_mode: str = "paired",
+                 metrics: Optional[MetricsRegistry] = None):
         super().__init__(cfg, axis, n)
         if n != 1:
             raise ValueError(
@@ -76,6 +78,9 @@ class HostTieredExchange(EmbeddingExchange):
         self.mgr = mgr
         self.link = link if link is not None else perf_model.host_link()
         self.pool_mode = pool_mode
+        # the exchange lives inside an Engine, not a fleet — it publishes
+        # to the process-wide registry unless a caller scopes it
+        self.metrics = metrics if metrics is not None else default_registry()
 
         hot_rows = np.asarray(hot_rows, np.int64)
         if hot_rows.ndim != 2 or hot_rows.shape[0] != cfg.num_tables:
@@ -150,13 +155,18 @@ class HostTieredExchange(EmbeddingExchange):
         out["hs_cache"] = self.mgr.device_cache
         out["hs_pos"] = self.mgr.device_pos
         self._last_plan = plan
+        self.metrics.counter("swap_faults", policy=self.mgr.policy).inc(
+            plan.faulted_chunks)
+        self.metrics.counter("swap_bytes").inc(plan.bytes_moved)
         return out, plan
 
     def stall_seconds(self, plan: Optional[SwapPlan],
                       service_s: float) -> float:
         if plan is None:
             return 0.0
-        return overlap_stall(plan.swap_s, service_s, plan.depth)
+        stall = overlap_stall(plan.swap_s, service_s, plan.depth)
+        self.metrics.counter("swap_stall_s").inc(stall)
+        return stall
 
     def end_batch(self, params: Tables) -> Tables:
         """Re-attach the train step's RETURNED device arrays (the step

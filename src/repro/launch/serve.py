@@ -28,6 +28,7 @@ EXECUTES the placements inside the serve step.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from typing import Optional
 
@@ -35,6 +36,29 @@ import numpy as np
 
 from repro.configs.registry import get_dlrm
 from repro.engine import Engine
+from repro.obs import Tracer, default_registry
+
+
+def _emit_obs(args, tracer, extra_metrics=None, report=None) -> None:
+    """Write the run's observability artifacts: Chrome trace JSON
+    (--trace-out), merged metrics snapshot (--metrics-out: the process
+    registry, e.g. hoststore swap meters, merged with the fleet's
+    per-run registry), machine-readable report (--report-json)."""
+    if args.trace_out and tracer is not None:
+        tracer.write(args.trace_out)
+        print(f"[serve] trace -> {args.trace_out} "
+              f"({tracer.n_events} events)")
+    if args.metrics_out:
+        snap = dict(default_registry().snapshot())
+        if extra_metrics is not None:
+            snap.update(extra_metrics.snapshot())
+        with open(args.metrics_out, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"[serve] metrics -> {args.metrics_out} ({len(snap)} series)")
+    if args.report_json and report is not None:
+        report.to_json(args.report_json)
+        print(f"[serve] report -> {args.report_json}")
 
 
 def main(argv: Optional[list] = None) -> int:
@@ -142,6 +166,17 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--replay-trace", default=None, metavar="PATH",
                     help="serve a recorded JSONL trace instead of "
                          "generating events (bit-identical replay)")
+    # -- observability (repro.obs) -----------------------------------------
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the run's virtual-clock trace as Chrome "
+                         "trace-event JSON (open in Perfetto / "
+                         "chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the run's metrics-registry snapshot "
+                         "(counters/gauges/histograms) as JSON")
+    ap.add_argument("--report-json", default=None, metavar="PATH",
+                    help="write the final SLA/fleet report (including the "
+                         "per-query blame decomposition) as JSON")
     args = ap.parse_args(argv)
 
     cfg = get_dlrm(args.config)
@@ -178,16 +213,18 @@ def main(argv: Optional[list] = None) -> int:
     session = engine.serve_session(max_batch_queries=args.max_batch_queries,
                                    max_wait_ms=args.max_wait_ms)
     print(f"[serve] serve_kernel={session.serve_kernel}")
+    tracer = Tracer() if args.trace_out else None
     if args.qps > 0:
         report = session.run_open_loop(
             args.queries, args.qps, sla_ms=args.sla_ms,
-            percentile=args.sla_percentile)
+            percentile=args.sla_percentile, tracer=tracer)
     else:
         report = session.run_serial(
             args.queries, sla_ms=args.sla_ms,
-            percentile=args.sla_percentile)
+            percentile=args.sla_percentile, tracer=tracer)
     print(f"[serve] {cfg.name}:")
     print(report.summary())
+    _emit_obs(args, tracer, report=report)
     return 0 if report.ok else 1
 
 
@@ -233,6 +270,7 @@ def _fabric_main(args, cfg) -> int:
             args.autoscale_sla_ms or args.sla_ms,
             min_replicas=args.min_replicas, max_replicas=args.max_replicas)
     engine = Engine(cfg, seed=args.seed, alpha=args.alpha, verbose=True)
+    tracer = Tracer() if args.trace_out else None
     fleet = engine.sharded_fleet(
         n_boards=args.replicas, board_capacity_bytes=cap,
         link=fabric_link(args.fabric_latency_us, args.fabric_gbs),
@@ -241,7 +279,8 @@ def _fabric_main(args, cfg) -> int:
                        or args.fabric_cache_rows > 0),
         max_batch_queries=args.max_batch_queries,
         max_wait_ms=args.max_wait_ms, router=args.router,
-        model_axis=args.model_axis, autoscaler=autoscaler)
+        model_axis=args.model_axis, autoscaler=autoscaler,
+        tracer=tracer)
     if not fits_one_board(cfg, fleet.partition.board_capacity_bytes):
         print(f"[serve] table set "
               f"({fleet.partition.total_bytes / 2**20:.2f} MiB) exceeds one "
@@ -269,6 +308,7 @@ def _fabric_main(args, cfg) -> int:
                        percentile=args.sla_percentile, scenario=scen_name)
     print(f"[serve] {cfg.name} (sharded, {args.replicas} boards):")
     print(report.summary())
+    _emit_obs(args, tracer, extra_metrics=fleet.metrics, report=report)
     return 0 if report.ok else 1
 
 
@@ -310,6 +350,7 @@ def _cluster_main(args, cfg, full_cfg) -> int:
                                 min_replicas=args.min_replicas,
                                 max_replicas=args.max_replicas)
                   if args.autoscale else None)
+    tracer = Tracer() if args.trace_out else None
     cluster = Cluster(
         cfg, n_replicas=args.replicas, model_axis=args.model_axis,
         plan=args.plan, exchange=args.exchange, alpha=args.alpha,
@@ -317,7 +358,8 @@ def _cluster_main(args, cfg, full_cfg) -> int:
         max_batch_queries=args.max_batch_queries,
         max_wait_ms=args.max_wait_ms, router=args.router,
         autoscaler=autoscaler, monitor=monitor,
-        pipeline_depth=args.pipeline_depth or None, verbose=True)
+        pipeline_depth=args.pipeline_depth or None, tracer=tracer,
+        verbose=True)
 
     if events is None:
         qps = args.qps
@@ -338,6 +380,7 @@ def _cluster_main(args, cfg, full_cfg) -> int:
                          percentile=args.sla_percentile, scenario=scen_name)
     print(f"[serve] {cfg.name}:")
     print(report.summary())
+    _emit_obs(args, tracer, extra_metrics=cluster.metrics, report=report)
     return 0 if report.ok else 1
 
 

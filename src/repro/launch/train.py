@@ -68,6 +68,9 @@ def main(argv: Optional[list] = None) -> int:
                         "the PCIe model")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--report-json", default=None, metavar="PATH",
+                   help="write the run report (train report + plan, when "
+                        "one was built) as JSON")
     args = p.parse_args(argv)
 
     if args.workload == "dlrm":
@@ -105,6 +108,16 @@ def main(argv: Optional[list] = None) -> int:
                                    schedule_steps=args.steps)
     report = session.run(args.steps)
     print(report.summary())
+    if args.report_json:
+        import json
+
+        plan_report = engine.plan_report("training")
+        payload = {"train": report.asdict(),
+                   "plan": plan_report.asdict() if plan_report else None}
+        with open(args.report_json, "w") as f:
+            json.dump(payload, f, indent=2, default=str)
+            f.write("\n")
+        print(f"[train] report -> {args.report_json}")
     return 0
 
 

@@ -460,8 +460,8 @@ for phase in ("cold", "warm"):
     faults = 0
     for ev in events:
         q = materialize_query(cfg, ev)
-        p_ref, _ = ref._execute([q])
-        p_host, _ = host._execute([q])
+        p_ref, _, _ = ref._execute([q])
+        p_host, _, _ = host._execute([q])
         assert np.array_equal(p_ref, p_host), \
             f"{phase}: qid {ev.qid} diverged"
         faults += ex._last_plan.faulted_chunks

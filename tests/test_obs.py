@@ -1,0 +1,386 @@
+"""repro.obs: tracing, metrics, and per-query latency attribution.
+
+The invariants the observability layer must hold:
+
+  * Chrome trace export is schema-valid (every event carries
+    name/ph/ts/pid/tid), every track's "B"/"E" pairs balance — including
+    back-to-back and exactly-nested spans on tie timestamps — and
+    zero-length spans degrade to instants instead of unbalancing;
+  * the metrics registry keys series by (name, labels), refuses kind
+    conflicts and negative counter increments, and snapshots to a plain
+    JSON-ready dict;
+  * attribution closes BY CONSTRUCTION: every `QueryRecord`'s six
+    components sum to its latency (hypothesis fuzzes random flush
+    timelines), and `BlameReport` separates the tail's decomposition
+    from the median's;
+  * end-to-end: a traced 2-board sharded-fleet flash-crowd run (with a
+    live autoscaler remesh) produces a valid trace with spans from >= 4
+    layers, populated metrics, a closing blame report, and a
+    JSON-serializable report — same for the replicated cluster;
+  * `write_bench_json` attaches a metrics snapshot when given one.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_dlrm
+from repro.obs import (AttributionLog, BlameReport, COMPONENTS,
+                       MetricsRegistry, Tracer, default_registry,
+                       interval_overlap_s)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+REQUIRED_KEYS = {"name", "ph", "ts", "pid", "tid"}
+
+
+def _cfg(**kw):
+    return dataclasses.replace(
+        get_dlrm("dlrm-rm2-small-unsharded").reduced(), batch_size=8, **kw)
+
+
+def _check_balanced(events):
+    """Every (pid, tid) track's B/E pairs must nest like parentheses."""
+    depth = {}
+    stacks = {}
+    for e in events:
+        if e["ph"] not in ("B", "E"):
+            continue
+        key = (e["pid"], e["tid"])
+        stack = stacks.setdefault(key, [])
+        if e["ph"] == "B":
+            stack.append(e["name"])
+        else:
+            assert stack, f"E with empty stack on track {key}: {e}"
+            assert stack.pop() == e["name"], f"mispaired E on {key}: {e}"
+        depth[key] = len(stack)
+    for key, stack in stacks.items():
+        assert not stack, f"unclosed spans on track {key}: {stack}"
+
+
+# ---------------------------------------------------------------------------
+# Tracer (unit)
+# ---------------------------------------------------------------------------
+def test_tracer_chrome_schema_and_track_names():
+    tr = Tracer()
+    tr.track(1, 0, process="board0", thread="serve")
+    tr.span("a", "service", 0.0, 1e-3, pid=1, tid=0, args={"queries": 2})
+    tr.instant("flush:full", "batching", 0.5e-3, pid=1, tid=0)
+    tr.counter("queue_depth", 0.2e-3, {"board0": 3}, pid=1)
+    doc = tr.to_chrome_json()
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    timed = [e for e in evs if e["ph"] != "M"]
+    # metadata names the track, and comes before any timed event
+    assert {m["name"] for m in meta} == {"process_name", "thread_name"}
+    assert evs[:len(meta)] == meta
+    for e in timed:
+        assert REQUIRED_KEYS <= set(e), e
+        assert "_seq" not in e
+    # virtual seconds became microseconds
+    assert [e["ts"] for e in timed if e["ph"] == "B"] == [0.0]
+    assert [e["ts"] for e in timed if e["ph"] == "E"] == [1000.0]
+    # instants carry scope, counters carry float args
+    (inst,) = [e for e in timed if e["ph"] == "i"]
+    assert inst["s"] == "t"
+    (ctr,) = [e for e in timed if e["ph"] == "C"]
+    assert ctr["args"] == {"board0": 3.0}
+    _check_balanced(timed)
+
+
+def test_tracer_tie_ordering_keeps_tracks_balanced():
+    tr = Tracer()
+    # back-to-back spans sharing a timestamp: E must sort before B
+    tr.span("first", "service", 0.0, 1.0, pid=1, tid=0)
+    tr.span("second", "service", 1.0, 2.0, pid=1, tid=0)
+    # exact nesting, emitted outer-first, both ends tie
+    tr.span("outer", "service", 3.0, 4.0, pid=1, tid=1)
+    tr.span("inner", "service", 3.0, 4.0, pid=1, tid=1)
+    timed = [e for e in tr.to_chrome_json()["traceEvents"]
+             if e["ph"] != "M"]
+    _check_balanced(timed)
+    ts = [e["ts"] for e in timed]
+    assert ts == sorted(ts), "export must be time-ordered"
+
+
+def test_tracer_zero_length_span_degrades_and_negative_raises():
+    tr = Tracer()
+    tr.span("empty", "service", 1.0, 1.0, pid=0, tid=0)
+    assert [e["ph"] for e in tr.events] == ["i"]
+    with pytest.raises(ValueError):
+        tr.span("backwards", "service", 2.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry (unit)
+# ---------------------------------------------------------------------------
+def test_metrics_registry_series_and_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("wire_bytes", board=0).inc(128)
+    reg.counter("wire_bytes", board=0).inc(64)     # same series
+    reg.counter("wire_bytes", board=1).inc(32)     # distinct label set
+    reg.gauge("queue_depth", rid=1).set(3)
+    reg.histogram("flush_service_ms").observe(4.2)
+    reg.histogram("flush_service_ms").observe(1.0)
+    snap = reg.snapshot()
+    assert snap["wire_bytes{board=0}"] == 192.0
+    assert snap["wire_bytes{board=1}"] == 32.0
+    assert snap["queue_depth{rid=1}"] == 3.0
+    h = snap["flush_service_ms"]
+    assert h["count"] == 2 and h["min"] == 1.0 and h["max"] == 4.2
+    assert sum(h["buckets"].values()) == 2
+    assert json.loads(json.dumps(snap)) == snap    # JSON-ready
+    # scalar reads
+    assert reg.value("wire_bytes", board=0) == 192.0
+    assert reg.value("never_published", default=7.0) == 7.0
+    assert reg.total("wire_bytes") == 224.0
+    reg.reset()
+    assert len(reg) == 0 and reg.snapshot() == {}
+
+
+def test_metrics_registry_guards():
+    reg = MetricsRegistry()
+    reg.counter("x").inc()
+    with pytest.raises(ValueError):
+        reg.gauge("x")                     # kind conflict on one name
+    with pytest.raises(ValueError):
+        reg.counter("y").inc(-1)           # counters are monotone
+    with pytest.raises(ValueError):
+        reg.histogram("h").observe(1.0) or reg.value("h")
+    assert default_registry() is default_registry()
+
+
+# ---------------------------------------------------------------------------
+# Attribution (unit)
+# ---------------------------------------------------------------------------
+def test_interval_overlap():
+    ivals = [(1.0, 2.0), (3.0, 4.0)]
+    assert interval_overlap_s(0.0, 5.0, ivals) == 2.0
+    assert interval_overlap_s(1.5, 3.5, ivals) == 1.0
+    assert interval_overlap_s(2.0, 3.0, ivals) == 0.0
+    assert interval_overlap_s(5.0, 5.0, ivals) == 0.0
+
+
+def test_attribution_closes_and_splits_barrier_from_queue():
+    log = AttributionLog()
+    # wait [1.0, 1.6] overlaps a remesh barrier [1.2, 1.5] for 0.3s
+    log.record_batch([(0, 0.4), (1, 0.7)], rid=1, trigger=1.0, start=1.6,
+                     done=1.9, compute_s=0.2, link_stall_s=0.05,
+                     swap_stall_s=0.02, queue_extra_s=0.03,
+                     barriers=[(1.2, 1.5)])
+    assert len(log) == 2
+    r = log.records[0]
+    assert r.remesh_barrier_s == pytest.approx(0.3)
+    assert r.queue_wait_s == pytest.approx(0.3 + 0.03)
+    assert r.batch_wait_s == pytest.approx(0.6)
+    assert abs(r.residual_s()) < 1e-9
+    assert set(r.components_s()) == set(COMPONENTS)
+    # second query arrived later -> smaller batch_wait, same closure
+    assert log.records[1].batch_wait_s == pytest.approx(0.3)
+    assert abs(log.records[1].residual_s()) < 1e-9
+
+
+def test_blame_report_separates_tail_from_median():
+    log = AttributionLog()
+    # 19 fast compute-bound queries + 1 queue-bound straggler
+    for q in range(19):
+        t = q * 1.0
+        log.record_batch([(q, t)], rid=0, trigger=t, start=t,
+                         done=t + 0.010, compute_s=0.010)
+    log.record_batch([(19, 19.0)], rid=0, trigger=19.0, start=19.090,
+                     done=19.1, compute_s=0.010)
+    blame = log.blame(percentile=95.0)
+    assert isinstance(blame, BlameReport)
+    assert blame.n_queries == 20 and blame.n_tail >= 1
+    assert blame.dominant_tail == "queue_wait"
+    assert blame.median_ms["queue_wait"] == pytest.approx(0.0)
+    assert blame.tail_ms["queue_wait"] == pytest.approx(90.0)
+    assert blame.max_residual_ms < 1e-6
+    s = blame.summary()
+    assert "queue_wait" in s and "[blame]" in s
+    assert AttributionLog().blame() is None
+
+
+# ---------------------------------------------------------------------------
+# Attribution closure (property)
+# ---------------------------------------------------------------------------
+def test_attribution_closure_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    secs = st.floats(0.0, 10.0, allow_nan=False, allow_infinity=False)
+    small = st.floats(0.0, 1.0, allow_nan=False, allow_infinity=False)
+
+    @st.composite
+    def flushed_batch(draw):
+        trigger = draw(secs)
+        arrivals = draw(st.lists(st.floats(0.0, 1.0), min_size=1,
+                                 max_size=6))
+        start = trigger + draw(small)
+        done = start + draw(small) + 1e-6
+        barriers = [(trigger - draw(small), trigger + draw(small))
+                    for _ in range(draw(st.integers(0, 3)))]
+        return dict(
+            queries=[(i, trigger - a) for i, a in enumerate(arrivals)],
+            trigger=trigger, start=start, done=done,
+            compute_s=draw(small), link_stall_s=draw(small),
+            swap_stall_s=draw(small), queue_extra_s=draw(small),
+            barriers=barriers)
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(flushed_batch(), min_size=1, max_size=8))
+    def run(batches):
+        log = AttributionLog()
+        for b in batches:
+            log.record_batch(b.pop("queries"), rid=0, **b)
+        for r in log.records:
+            # the closure invariant: components sum to latency exactly
+            # (up to float addition order)
+            assert abs(r.residual_s()) <= 1e-9 * max(1.0, r.latency_s)
+            assert r.remesh_barrier_s >= 0 and r.queue_wait_s >= 0
+        blame = log.blame()
+        assert blame.max_residual_ms <= 1e-6 * max(1.0, blame.threshold_ms)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: traced runs
+# ---------------------------------------------------------------------------
+def test_traced_sharded_fleet_flash_crowd(tmp_path):
+    """The acceptance scenario: a recorded flash-crowd on a 2-board fleet
+    with a live autoscaler produces a valid Chrome trace with spans from
+    >= 4 layers, a closing blame report, populated metrics, and a
+    JSON-round-trippable report."""
+    from repro.cluster.autoscale import SLAAutoscaler
+    from repro.fabric import ShardedFleet
+    from repro.traffic import make_scenario
+
+    cfg = _cfg()
+    events = make_scenario("flash_crowd", alpha=1.05).events(
+        60, qps=800.0, seed=5)
+    tracer = Tracer()
+    auto = SLAAutoscaler(0.5, min_replicas=2, max_replicas=4, window=8,
+                         patience=1, cooldown_s=0.005)
+    fleet = ShardedFleet(cfg, n_boards=2, alpha=1.05, max_batch_queries=2,
+                         autoscaler=auto, tracer=tracer)
+    r = fleet.run(events, sla_ms=1e6, scenario="flash_crowd")
+    assert any(e.action == "up" for e in r.scale_events)
+
+    # -- trace: schema, balance, layer coverage
+    path = tracer.write(str(tmp_path / "trace.json"))
+    doc = json.load(open(path))
+    timed = [e for e in doc["traceEvents"] if e["ph"] != "M"]
+    assert timed, "trace is empty"
+    for e in timed:
+        assert REQUIRED_KEYS <= set(e)
+    _check_balanced(timed)
+    cats = {e["cat"] for e in timed}
+    # batching, service, fabric, autoscaler (+ counters) = >= 4 layers
+    assert {"batching", "service", "fabric", "autoscaler"} <= cats
+    names = {e["name"] for e in timed}
+    assert {"batch_fill", "serve_batch", "owner_lookup",
+            "remesh_barrier"} <= names
+    # scale decisions land on the pid-0 control track; per-board remesh
+    # barriers land on the board pids; each board serves on its own pid
+    assert {e["pid"] for e in timed
+            if e["name"].startswith("scale:")} == {0}
+    assert all(e["pid"] > 0 for e in timed
+               if e["name"] == "remesh_barrier")
+    assert len({e["pid"] for e in timed if e["cat"] == "service"}) >= 2
+
+    # -- attribution: every query closes; the blame report rides the report
+    assert len(fleet.attribution) == len(events)
+    assert r.blame is not None
+    assert r.blame.max_residual_ms < 1e-6
+    assert r.blame.n_queries == len(events)
+    assert sum(r.blame.tail_ms.values()) > 0
+    assert "[blame]" in r.summary()
+    # the remesh actually charged barrier time to some query
+    assert any(q.remesh_barrier_s > 0 for q in fleet.attribution.records)
+
+    # -- metrics: the registry carries the fleet's wire/migration tallies
+    snap = fleet.metrics.snapshot()
+    assert snap["remote_lookups"] > 0
+    assert snap["migrations{action=up}"] >= 1
+    assert any(k.startswith("wire_bytes{board=") for k in snap)
+    assert snap["flush_service_ms"]["count"] > 0
+
+    # -- report: serializes, round-trips, carries the blame decomposition
+    rpath = tmp_path / "report.json"
+    r.to_json(str(rpath))
+    d = json.loads(rpath.read_text())
+    assert d["kind"] == "FabricReport"
+    assert d["blame"]["kind"] == "BlameReport"
+    assert set(d["blame"]["tail_ms"]) == set(COMPONENTS)
+    assert d["n_queries"] == len(events)
+
+
+def test_traced_cluster_and_serial_session(tmp_path):
+    """Replicated-cluster and single-board paths trace + attribute too."""
+    from repro.cluster import Cluster
+    from repro.engine import Engine
+    from repro.traffic import make_scenario
+
+    cfg = _cfg()
+    events = make_scenario("stationary", alpha=1.05).events(
+        40, qps=800.0, seed=3)
+    tracer = Tracer()
+    cl = Cluster(cfg, n_replicas=2, alpha=1.05, max_batch_queries=2,
+                 tracer=tracer)
+    r = cl.run(events, sla_ms=1e6)
+    timed = [e for e in tracer.to_chrome_json()["traceEvents"]
+             if e["ph"] != "M"]
+    _check_balanced(timed)
+    assert {"batching", "service"} <= {e["cat"] for e in timed}
+    assert len(cl.attribution) == len(events)
+    assert r.blame is not None and r.blame.max_residual_ms < 1e-6
+    assert json.loads(r.to_json())["kind"] == "ClusterReport"
+    assert cl.metrics.snapshot()["queries_served{rid=0}"] > 0
+
+    # single-board serial loop: spans + closure through the same machinery
+    tr2 = Tracer()
+    session = Engine(cfg).serve_session(max_batch_queries=2)
+    sr = session.run_serial(4, tracer=tr2)
+    timed2 = [e for e in tr2.to_chrome_json()["traceEvents"]
+              if e["ph"] != "M"]
+    _check_balanced(timed2)
+    assert sum(e["ph"] == "B" for e in timed2) == 4
+    assert sr.blame is not None and sr.blame.max_residual_ms < 1e-6
+    assert json.loads(sr.to_json())["kind"] == "SLAReport"
+
+
+# ---------------------------------------------------------------------------
+# Report serialization + bench artifact
+# ---------------------------------------------------------------------------
+def test_plan_report_serializes():
+    from repro.engine import Engine
+
+    eng = Engine(_cfg(), plan="auto")
+    eng.build_plan("inference")          # plan reports build lazily
+    pr = eng.plan_report("inference")
+    d = json.loads(pr.to_json())
+    assert d["kind"] == "PlanReport"
+    assert d["plan"]["kind"] == "ShardingPlan"
+    assert d["predicted_qps"] == pytest.approx(pr.predicted_qps)
+
+
+def test_write_bench_json_metrics_section(tmp_path):
+    from benchmarks._artifacts import write_bench_json
+
+    reg = MetricsRegistry()
+    reg.counter("wire_bytes", board=0).inc(77)
+    path = write_bench_json(
+        "obs_selftest", [("claim", True, "ok")], {"x": 1.0},
+        out_dir=str(tmp_path), metrics=reg.snapshot())
+    d = json.load(open(path))
+    assert d["ok"] is True
+    assert d["metrics"] == {"wire_bytes{board=0}": 77.0}
+    # omitted -> no section at all (older artifacts stay byte-stable)
+    path2 = write_bench_json(
+        "obs_selftest2", [("claim", True, "ok")], {"x": 1.0},
+        out_dir=str(tmp_path))
+    assert "metrics" not in json.load(open(path2))
