@@ -33,6 +33,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--plans", default="none,auto")
     ap.add_argument("--alpha", type=float, default=1.05)
     ap.add_argument("--sla-ms", type=float, default=50.0)
+    ap.add_argument("--emit-json", action="store_true",
+                    help="write BENCH_engine_serve.json (claims + the "
+                         "swept frontier)")
     args = ap.parse_args(argv)
 
     caps = sorted({int(c) for c in args.capacities.split(",")})
@@ -85,7 +88,28 @@ def main(argv: Optional[List[str]] = None) -> int:
     if not wins:
         print("WARNING: no swept point showed dynamic batching dominating "
               "per-query serving — raise --load-factors past saturation")
-    return 0
+    if args.emit_json:
+        from benchmarks._artifacts import write_bench_json
+        best = max(wins, key=lambda w: w[3], default=None)
+        detail = ("a swept point where dynamic batching beats fixed "
+                  "per-query serving by >=1.05x achieved QPS at "
+                  "equal-or-better p99")
+        if best:
+            detail += (f": best {best[3]:.2f}x at plan={best[0]} "
+                       f"capacity={best[1]} load={best[2]}x "
+                       f"(p99 {best[5]:.2f}ms vs {best[4]:.2f}ms)")
+        write_bench_json("engine_serve", [("batching_frontier", bool(wins),
+                                           detail)], {
+            "wins": [{"plan": p, "capacity": c, "load_factor": f,
+                      "qps_gain": g, "p99_ms_base": pb, "p99_ms": pp}
+                     for p, c, f, g, pb, pp in wins],
+            "sweep": [{"plan": p, "capacity": c, "load_factor": f,
+                       "achieved_qps": r.achieved_qps,
+                       "mean_batch": r.mean_batch_queries,
+                       "p50_ms": r.p50_ms, "p99_ms": r.p99_ms}
+                      for (p, c, f), r in sorted(results.items())],
+        })
+    return 0 if wins else 1
 
 
 if __name__ == "__main__":

@@ -5,11 +5,11 @@ import sys
 import time
 
 from benchmarks import (bench_cluster, bench_elastic, bench_engine_serve,
-                        bench_fabric, bench_hoststore, bench_pipeline,
-                        bench_tiered_embedding, fig6_membw, fig8_inference,
-                        fig9_latency, fig10_sharding, fig11_training,
-                        fig12_13_phases, kernel_bench, roofline,
-                        table16_17_upper_bounds)
+                        bench_fabric, bench_hoststore, bench_online,
+                        bench_pipeline, bench_tiered_embedding, fig6_membw,
+                        fig8_inference, fig9_latency, fig10_sharding,
+                        fig11_training, fig12_13_phases, kernel_bench,
+                        roofline, table16_17_upper_bounds)
 
 SECTIONS = [
     ("fig6", fig6_membw.main),
@@ -20,18 +20,22 @@ SECTIONS = [
     ("fig12_13", fig12_13_phases.main),
     ("table16_17", table16_17_upper_bounds.main),
     ("kernels", lambda extra=(): kernel_bench.main([*extra])),
-    ("tiered_embedding", lambda: bench_tiered_embedding.main([])),
-    ("engine_serve", lambda: bench_engine_serve.main(["--queries", "80"])),
-    ("pipeline", lambda: bench_pipeline.main(["--tiny"])),
+    ("tiered_embedding", lambda extra=(): bench_tiered_embedding.main(
+        [*extra])),
+    ("engine_serve", lambda extra=(): bench_engine_serve.main(
+        ["--queries", "80", *extra])),
+    ("pipeline", lambda extra=(): bench_pipeline.main(["--tiny", *extra])),
     ("cluster", lambda extra=(): bench_cluster.main(["--tiny", *extra])),
     ("fabric", lambda extra=(): bench_fabric.main(["--tiny", *extra])),
     ("elastic", lambda extra=(): bench_elastic.main(["--tiny", *extra])),
     ("hoststore", lambda extra=(): bench_hoststore.main(["--tiny", *extra])),
+    ("online", lambda extra=(): bench_online.main(["--tiny", *extra])),
     ("roofline", roofline.main),
 ]
 
 # sections that can write a BENCH_<name>.json artifact (benchmarks/_artifacts)
-EMITS_JSON = {"cluster", "elastic", "fabric", "hoststore", "kernels"}
+EMITS_JSON = {"cluster", "elastic", "fabric", "hoststore", "kernels",
+              "online", "pipeline", "tiered_embedding", "engine_serve"}
 
 
 def main(argv=None) -> int:

@@ -165,6 +165,28 @@ class Replica:
             f.complete(p, done)
         return futs
 
+    # -- online updates (repro.online) ---------------------------------------
+    def apply_row_updates(self, batch) -> int:
+        """Scatter one `repro.online.delta.DeltaBatch` into the live
+        served params. The replicated fleet has no ownership: every
+        replica holds every table, so the cluster loop broadcasts each
+        batch to all replicas — after this call the board serves the
+        batch's row values bit-exactly. Returns rows written."""
+        params = self.session.params
+        if not isinstance(params, dict) or "tables" not in params:
+            raise ValueError(
+                "online row updates need stacked params with a 'tables' "
+                "leaf; plan-split sessions are not updatable in place "
+                "(re-spawn the replica from refreshed params instead)")
+        tables = params["tables"]
+        n = 0
+        for d in batch.deltas:
+            tables = tables.at[d.table, d.rows].set(
+                np.asarray(d.values, dtype=tables.dtype))
+            n += d.n_rows
+        params["tables"] = tables
+        return n
+
     # -- elastic re-placement ------------------------------------------------
     def param_specs(self) -> Dict[str, Any]:
         """PartitionSpecs congruent with this replica's (possibly

@@ -26,6 +26,31 @@ from repro.configs.base import DLRMConfig
 
 RecSysBatch = Dict[str, jax.Array]
 
+# Weight of the table-borne (sparse) component of the planted teacher's
+# logit, relative to the dense component's unit scale. Large enough that
+# the embedding rows carry REAL label signal — tables-only online
+# training (repro.online) must be able to move the served accuracy, and
+# a drift rotation of the row space must genuinely hurt a frozen table.
+SPARSE_SIGNAL = 0.75
+
+
+def teacher_click_probs(cfg: DLRMConfig, dense: jax.Array,
+                        indices: jax.Array, seed: int = 0) -> jax.Array:
+    """The planted logistic teacher's exact P(click) for a batch.
+
+    `make_recsys_batch` samples labels from this; `repro.online` scores
+    served probabilities against it as a deterministic accuracy proxy.
+    The sparse component is a function of the UNROTATED row ids (the
+    teacher predates any drift rotation), so rotating the id space moves
+    the row -> signal association and stale tables become wrong.
+    """
+    wkey = jax.random.PRNGKey(seed + 10_007)
+    w = (jax.random.normal(wkey, (cfg.num_dense,), jnp.float32)
+         / math.sqrt(cfg.num_dense))
+    sig = dense @ w + SPARSE_SIGNAL * jnp.mean(
+        (indices[:, :, 0] % 7).astype(jnp.float32) - 3.0, axis=1)
+    return jax.nn.sigmoid(2.0 * sig)
+
 
 def _zipf_indices(key: jax.Array, shape, n_rows: int, alpha: float) -> jax.Array:
     """Power-law row ids: P(rank r) ∝ (r+1)^-alpha via inverse-CDF sampling.
@@ -64,12 +89,7 @@ def make_recsys_batch(cfg: DLRMConfig, step: int, seed: int = 0,
         ks, (b, cfg.num_tables, cfg.lookups_per_table), cfg.rows_per_table, alpha)
 
     # planted logistic teacher: w fixed by seed (not by step!)
-    wkey = jax.random.PRNGKey(seed + 10_007)
-    w = jax.random.normal(wkey, (cfg.num_dense,), jnp.float32) / math.sqrt(cfg.num_dense)
-    # sparse contribution: parity of a hash of the first lookup of each table
-    sig = dense @ w + 0.1 * jnp.mean(
-        (indices[:, :, 0] % 7).astype(jnp.float32) - 3.0, axis=1)
-    p = jax.nn.sigmoid(2.0 * sig)
+    p = teacher_click_probs(cfg, dense, indices, seed)
     labels = jax.random.bernoulli(kl, p).astype(jnp.float32)
     return {"dense": dense, "indices": indices, "labels": labels}
 

@@ -108,7 +108,8 @@ class Engine:
                  host_hot_fraction: float = 0.5,
                  host_link=None, calibration=None,
                  fused_serve: str = "auto",
-                 profile_batches: int = 4, verbose: bool = False):
+                 profile_batches: int = 4, verbose: bool = False,
+                 metrics=None):
         self.cfg = cfg
         self.mesh = mesh if mesh is not None else make_host_mesh(model=model_axis)
         self.axis = axis
@@ -123,6 +124,10 @@ class Engine:
         self.compress_grads = compress_grads
         self.profile_batches = profile_batches
         self.verbose = verbose
+        # run-scoped MetricsRegistry for everything this engine builds
+        # (hoststore exchange swap tallies); None = the process-wide
+        # default_registry(), the launcher default
+        self.metrics = metrics
         self.is_dlrm = isinstance(cfg, DLRMConfig)
         if isinstance(plan, str) and plan not in ("none", "auto"):
             raise ValueError(f"plan must be 'none', 'auto', or a "
@@ -247,7 +252,8 @@ class Engine:
             alpha=self.alpha, seed=self.seed,
             chunk_rows=self.host_chunk_rows,
             hot_fraction=self.host_hot_fraction, link=link,
-            profile_batches=max(1, self.profile_batches))
+            profile_batches=max(1, self.profile_batches),
+            metrics=self.metrics)
 
     def resolve_pipeline_depth(self, mode: str,
                                local_batch_samples: int) -> int:

@@ -403,14 +403,21 @@ class ServeSession:
     def run_serial(self, n_queries: int, *, sla_ms: float = 50.0,
                    percentile: float = 99.0, seed: Optional[int] = None,
                    alpha: Optional[float] = None,
-                   tracer: Optional[Tracer] = None) -> SLAReport:
-        """Closed-loop: one query per micro-batch, back to back."""
+                   tracer: Optional[Tracer] = None,
+                   metrics=None) -> SLAReport:
+        """Closed-loop: one query per micro-batch, back to back.
+
+        `metrics` scopes the run's meters to a caller-owned
+        `MetricsRegistry`; the default is the process-wide
+        `default_registry()` (which accumulates ACROSS runs — callers
+        doing back-to-back runs in one process should pass their own
+        registry per run to keep tallies separable)."""
         self._ensure_compiled(1)
         if tracer is not None:
             tracer.track(1, 0, process="board0", thread="serve")
             tracer.track(1, 3, thread="host-swap")
         log = AttributionLog()
-        metrics = default_registry()
+        metrics = metrics if metrics is not None else default_registry()
         lat_ms: List[float] = []
         clock = 0.0            # back-to-back virtual timeline
         for q in range(n_queries):
@@ -441,7 +448,8 @@ class ServeSession:
                       seed: Optional[int] = None,
                       alpha: Optional[float] = None,
                       max_wait_ms: Optional[float] = None,
-                      tracer: Optional[Tracer] = None) -> SLAReport:
+                      tracer: Optional[Tracer] = None,
+                      metrics=None) -> SLAReport:
         """Open-loop load: Poisson arrivals at `qps`, dynamic batching.
 
         Event-driven virtual clock over the SAME `MicroBatcher` policy the
@@ -451,6 +459,10 @@ class ServeSession:
         it exactly as they would on a single-executor server. Per-query
         latency = completion - arrival; the SLA verdict is Eq. 1 on that
         distribution, and `report.blame` decomposes the tail.
+
+        `metrics` scopes the run's meters (see `run_serial`): pass a
+        fresh `MetricsRegistry` per run to avoid the process-wide
+        default registry double-counting back-to-back runs.
         """
         arrivals = poisson_arrivals(n_queries, qps,
                                     self.seed if seed is None else seed)
@@ -463,7 +475,7 @@ class ServeSession:
             tracer.track(1, 1, thread="batching")
             tracer.track(1, 3, thread="host-swap")
         log = AttributionLog()
-        metrics = default_registry()
+        metrics = metrics if metrics is not None else default_registry()
         lat_ms: List[float] = []
         batch_sizes: List[int] = []
         free = 0.0            # server busy until this time

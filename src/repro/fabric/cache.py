@@ -25,12 +25,19 @@ trigger that resets the counts when the windowed ratio erodes below
 fires — so a `zipf_drift` rotation degrades gracefully and recovers
 instead of serving a stale hot set forever.
 
-Serving is frozen (no online updates in this subsystem), so a cached row
-is an exact copy of the owner's row: the cache changes which lookups pay
-fabric bytes/latency, never the served values — the fleet's equivalence
-invariant (tests/test_fabric.py) holds with the cache on or off.
-Capacity is budgeted in ROWS (`capacity_rows` = bytes / row bytes),
-elected globally across all remote rows, true-LFU.
+A cached row is an exact copy of the owner's CURRENT row: the cache
+changes which lookups pay fabric bytes/latency, never the served values
+— the fleet's equivalence invariant (tests/test_fabric.py) holds with
+the cache on or off. Under ONLINE serving (`repro.online`) that
+exactness is maintained by the update->cache coherence protocol: an
+owner's row update either drops every other board's copy
+(`invalidate_rows`) or piggybacks the fresh payload into it
+(`admit_rows`), so a copy is bit-equal to the owner's latest version or
+does not exist. Capacity is budgeted in ROWS (`capacity_rows` = bytes /
+row bytes), elected globally across all remote rows, true-LFU; the
+propagate path evicts by LEAST-RECENT ACCESS when admission would
+overflow (updated rows are the training-hot rows — recency, not stale
+frequency, is the right casualty order mid-drift).
 """
 from __future__ import annotations
 
@@ -65,6 +72,10 @@ class RemoteRowCache:
         self._counts = np.zeros((cfg.num_tables, cfg.rows_per_table),
                                 np.int64)
         self._cached = np.zeros((cfg.num_tables, cfg.rows_per_table), bool)
+        # last access time per row (LRU axis of the propagate-admission
+        # eviction); -inf = never accessed
+        self._last_used = np.full((cfg.num_tables, cfg.rows_per_table),
+                                  -np.inf)
         self.baseline = 0.0
         self._window: Deque[float] = deque(maxlen=int(window))
         self._seen = 0
@@ -131,8 +142,54 @@ class RemoteRowCache:
         n = int(changed.sum())
         self._counts[changed] = 0
         self._cached[changed] = False
+        self._last_used[changed] = -np.inf
         self._remote = new
         return n
+
+    # -- online-update coherence (repro.online) -------------------------------
+    def invalidate_rows(self, table: int, rows) -> int:
+        """Drop cached copies of specific rows an owner just updated
+        (coherence mode "invalidate"). Counts survive — the rows are as
+        hot as ever, only the bytes went stale. Returns the number of
+        copies actually dropped."""
+        rows = np.asarray(rows, np.int64)
+        hit = self._cached[table, rows]
+        self._cached[table, rows[hit]] = False
+        return int(hit.sum())
+
+    def admit_rows(self, table: int, rows, now: float) -> int:
+        """Install fresh copies of updated rows (coherence mode
+        "propagate"): the owner piggybacked the new payloads, so copies
+        this board already holds are refreshed in place for free, and
+        the rest are ADMITTED — evicting least-recently-accessed cached
+        rows when over capacity (mid-drift, recency beats the stale
+        frequency election). Only rows remote to this board are
+        admitted. Returns rows admitted or refreshed."""
+        rows = np.asarray(rows, np.int64)
+        rows = rows[self._remote[table, rows]]
+        if not self.enabled or rows.size == 0:
+            return 0
+        refreshed = rows[self._cached[table, rows]]
+        fresh = rows[~self._cached[table, rows]]
+        space = self.capacity_rows - self.cached_rows
+        if fresh.size > space:
+            # evict least-recently-accessed cached rows that are not
+            # themselves being refreshed
+            cand = self._cached.copy()
+            cand[table, rows] = False
+            ct, cr = np.nonzero(cand)
+            if ct.size:
+                order = np.argsort(self._last_used[ct, cr], kind="stable")
+                drop = order[:min(fresh.size - space, ct.size)]
+                self._cached[ct[drop], cr[drop]] = False
+                space += len(drop)
+        if fresh.size > space:         # nothing left to evict: admit what fits
+            fresh = fresh[:max(space, 0)]
+        self._cached[table, fresh] = True
+        touched = np.concatenate([refreshed, fresh])
+        self._last_used[table, touched] = np.maximum(
+            self._last_used[table, touched], now)
+        return int(touched.size)
 
     # -- lookup-path queries --------------------------------------------------
     def hit_mask(self, indices) -> np.ndarray:
@@ -156,8 +213,10 @@ class RemoteRowCache:
         n_remote = int(remote.sum())
         if n_remote == 0:
             return 1.0
-        np.add.at(self._counts,
-                  (np.broadcast_to(t_ix, idx.shape)[remote], idx[remote]), 1)
+        r_t = np.broadcast_to(t_ix, idx.shape)[remote]
+        r_i = idx[remote]
+        np.add.at(self._counts, (r_t, r_i), 1)
+        self._last_used[r_t, r_i] = now
         if hit is None:
             hit = self.hit_mask(idx)
         h = float(hit.sum()) / n_remote

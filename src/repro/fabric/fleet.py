@@ -78,8 +78,10 @@ from repro.fabric.exchange import FabricExchange
 from repro.core.planner import default_table_bytes
 from repro.fabric.partition import ShardMap, partition_rows
 from repro.kernels import ops
-from repro.obs.attribution import AttributionLog
+from repro.obs.attribution import AttributionLog, interval_overlap_s
 from repro.obs.metrics import MetricsRegistry
+from repro.online.delta import ELEM_BYTES, INDEX_BYTES, DeltaBatch
+from repro.online.report import OnlineReport
 from repro.obs.trace import Tracer
 from repro.traffic.scenarios import QueryEvent, materialize_query
 
@@ -358,6 +360,7 @@ class ShardedFleet:
                  service_scales: Optional[Sequence[float]] = None,
                  tracer: Optional[Tracer] = None,
                  metrics: Optional[MetricsRegistry] = None,
+                 params: Optional[dict] = None,
                  verbose: bool = False):
         if n_boards < 1:
             raise ValueError(f"n_boards must be >= 1, got {n_boards}")
@@ -381,6 +384,10 @@ class ShardedFleet:
         # remesh quiesce windows, for carving remesh_barrier time out of
         # queued queries' waits
         self._barrier_ivals: List[Tuple[float, float]] = []
+        # per-board online update_push windows (repro.online), for carving
+        # update_stall out of waits and owner-queue coupling
+        self._update_ivals: Dict[int, List[Tuple[float, float]]] = {}
+        self._online: Optional[Dict[str, object]] = None
 
         # -- partition: profiled access stats -> row-range ownership ---------
         self.row_freq = te.measure_row_freq(cfg, alpha, seed,
@@ -400,8 +407,14 @@ class ShardedFleet:
                                        metrics=self.metrics)
 
         # -- boards: shared-seed params, sliced by ownership -----------------
-        self._params = dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg)
-        self._tables_host = np.asarray(self._params["tables"])
+        # `params` overrides the shared-seed init: serve a trainer's
+        # checkpoint (repro.online hands pretrained params to both bench
+        # arms so streamed updates are the ONLY difference between them)
+        self._params = (dict(params) if params is not None
+                        else dlrm_lib.init_dlrm(jax.random.PRNGKey(seed), cfg))
+        # writable host copy: the canonical table store, updated in
+        # place by online delta batches (_apply_delta)
+        self._tables_host = np.array(self._params["tables"])
         self._pool = (list(devices) if devices is not None
                       else list(jax.devices()))
         self._dpb = devices_per_board or max(
@@ -698,11 +711,24 @@ class ShardedFleet:
         # (busy owners delayed their slice) and the modeled fabric round
         compute_s = max(owner_s.values()) + pool_s + t_dense
         queue_extra = (parts_ready - start) - max(owner_s.values())
+        # the share of the owner-queue coupling caused by a remote owner's
+        # online delta push: overlap of the critical owner's queue window
+        # [start, begin] with that owner's update_push intervals, capped at
+        # queue_extra so the carve keeps the closure exact
+        update_extra = 0.0
+        if queue_extra > 0 and self._update_ivals and owner_windows:
+            crit_o, crit_begin, _ = max(owner_windows, key=lambda w: w[2])
+            update_extra = min(
+                interval_overlap_s(start, crit_begin,
+                                   self._update_ivals.get(crit_o, ())),
+                queue_extra)
         self.attribution.record_batch(
             [(f.qid, f.arrival) for f in futs], rid=board.rid,
             trigger=trigger, start=start, done=done, compute_s=compute_s,
             link_stall_s=traffic.t_link_s, queue_extra_s=queue_extra,
-            barriers=self._barrier_ivals)
+            barriers=self._barrier_ivals,
+            update_ivals=self._update_ivals.get(board.rid, ()),
+            update_extra_s=update_extra)
         self.metrics.counter("service_s").inc(window)
         self.metrics.counter("link_stall_s").inc(traffic.t_link_s)
         self.metrics.counter("queries_served", rid=board.rid).inc(len(futs))
@@ -755,13 +781,131 @@ class ShardedFleet:
                     self._scale_down(done, p99)
         return futs
 
+    # -- online delta application (repro.online) ------------------------------
+    def _apply_delta(self, batch: DeltaBatch, now: float, mode: str) -> None:
+        """Make one `DeltaBatch` visible fleet-wide, ATOMICALLY at `now`
+        on the virtual clock: host canonical takes the rows, owner boards
+        re-install their residency, and every board's remote-row cache is
+        reconciled per the coherence mode — so after this returns, every
+        copy anywhere is bit-equal to the new version or gone. The wire
+        cost of the push (payloads in from the trainer + propagation /
+        invalidation out to the other boards) then occupies each owner's
+        fabric lane, advancing its busy horizon — queries queued behind
+        it read as update_stall in the attribution."""
+        from repro.online.coherence import apply_to_remote_cache
+
+        for d in batch.deltas:
+            self._tables_host[d.table, d.rows] = d.values.astype(
+                self._tables_host.dtype)
+        owner_rows: Dict[int, int] = {}
+        for b in self.boards:
+            mask = self.partition.owned_mask(b.rid)
+            n = sum(int(mask[d.table][d.rows].sum()) for d in batch.deltas)
+            if n:
+                owner_rows[b.rid] = n
+                whole, ranges = self._residency_of(self.partition, b.rid)
+                b.set_residency(whole, ranges, self._tables_host)
+
+        invalidated = admitted = 0
+        for b in self.boards:
+            inv, adm = apply_to_remote_cache(self.caches[b.rid], batch,
+                                             now=now, mode=mode)
+            invalidated += inv
+            admitted += adm
+
+        # virtual-clock push pricing per owner: payload in from the
+        # training tier, per-peer payloads (propagate) or row ids
+        # (invalidate) out to the other boards' caches
+        row_bytes = INDEX_BYTES + self.cfg.embed_dim * ELEM_BYTES
+        per_peer = row_bytes if mode == "propagate" else INDEX_BYTES
+        n_b = len(self.boards)
+        total_bytes = 0
+        stall_s = 0.0
+        visible = now
+        for rid, n_rows in sorted(owner_rows.items()):
+            owner = self.boards[rid]
+            bytes_in = n_rows * row_bytes
+            bytes_out = n_rows * per_peer * max(n_b - 1, 0)
+            t_push = perf_model.fabric_exchange_time(
+                bytes_out, bytes_in, n_b, self.link)
+            self.metrics.counter("rows_pushed", rid=rid).inc(n_rows)
+            total_bytes += bytes_in + bytes_out
+            if t_push <= 0.0:
+                # free push (single board: trainer writes the host copy
+                # in place) — nothing occupies the fabric lane
+                continue
+            start = max(now, owner.free)
+            end = start + t_push
+            owner.free = end
+            owner.busy_s += t_push
+            stall_s += t_push
+            visible = max(visible, end)
+            self._update_ivals.setdefault(rid, []).append((start, end))
+            if self.tracer is not None and t_push > 0:
+                self.tracer.track(rid + 1, 2, thread="fabric")
+                self.tracer.span("update_push", "fabric", start, end,
+                                 pid=rid + 1, tid=2,
+                                 args={"version": batch.version,
+                                       "rows": n_rows, "mode": mode,
+                                       "bytes": bytes_in + bytes_out})
+        staleness = visible - batch.t_emit_s
+        self.metrics.counter("update_batches").inc()
+        self.metrics.counter("update_push_bytes").inc(total_bytes)
+        self.metrics.counter("update_push_s").inc(stall_s)
+        self.metrics.counter("cache_invalidated_rows",
+                             cause="update").inc(invalidated)
+        self.metrics.counter("rows_propagated").inc(admitted)
+        self.metrics.histogram("update_staleness_s").observe(staleness)
+        o = self._online
+        if o is not None:
+            o["n_updates"] += 1
+            o["last_version"] = max(o["last_version"], batch.version)
+            o["rows_pushed"] += sum(owner_rows.values())
+            o["rows_propagated"] += admitted
+            o["invalidated"] += invalidated
+            o["push_bytes"] += total_bytes
+            o["push_stall_s"] += stall_s
+            o["staleness_s"].append(staleness)
+            if batch.train_loss == batch.train_loss:   # not NaN
+                o["losses"].append(batch.train_loss)
+
+    def _online_report(self) -> Optional[OnlineReport]:
+        o = self._online
+        if o is None:
+            return None
+        st = np.asarray(o["staleness_s"] or [0.0], np.float64)
+        losses = o["losses"]
+        return OnlineReport(
+            mode=str(o["mode"]), n_updates=int(o["n_updates"]),
+            last_version=int(o["last_version"]),
+            rows_pushed=int(o["rows_pushed"]),
+            rows_propagated=int(o["rows_propagated"]),
+            cache_invalidated_rows=int(o["invalidated"]),
+            push_bytes=int(o["push_bytes"]),
+            push_stall_s=float(o["push_stall_s"]),
+            staleness_p50_s=float(np.percentile(st, 50)),
+            staleness_max_s=float(st.max()),
+            mean_train_loss=(float(np.mean(losses)) if losses
+                             else float("nan")))
+
     # -- event loop ----------------------------------------------------------
     def run(self, events: Sequence[QueryEvent], *, sla_ms: float = 50.0,
-            percentile: float = 99.0, scenario: str = "trace"
-            ) -> FabricReport:
+            percentile: float = 99.0, scenario: str = "trace",
+            online=None, coherence: str = "propagate") -> FabricReport:
         """Serve one event stream to completion on the merged virtual
         clock — the cluster event loop with two-level routing (and, when
-        an autoscaler is wired, live re-partitioning)."""
+        an autoscaler is wired, live re-partitioning).
+
+        `online` streams a delta channel into the run: anything speaking
+        `next_time()` / `poll(now)` (an `online.OnlineSource`, a recorded
+        `online.DeltaChannel`). Updates are applied at UPDATE BARRIERS:
+        when the clock reaches an emit time, every queued query (which
+        arrived strictly before it) is flushed against the pre-update
+        tables, then the batch lands atomically — so the table version a
+        query sees is a pure function of its arrival time, independent of
+        fleet size, routing, and batching. `coherence` picks what other
+        boards' caches do with an updated row ("invalidate" drops the
+        copy; "propagate" piggybacks the fresh payload)."""
         if not events:
             raise ValueError("fleet run needs at least one event")
         self._lat_ms: List[float] = []
@@ -771,6 +915,15 @@ class ShardedFleet:
         self.scale_events = []
         self._retired = []
         self._barrier_ivals = []
+        self._update_ivals = {}
+        self._online = None
+        if online is not None:
+            from repro.online.coherence import check_mode
+            check_mode(coherence)
+            self._online = dict(mode=coherence, n_updates=0, last_version=0,
+                                rows_pushed=0, rows_propagated=0,
+                                invalidated=0, push_bytes=0,
+                                push_stall_s=0.0, staleness_s=[], losses=[])
         self.metrics.reset()
         self.attribution = AttributionLog()
         self.metrics.gauge("n_boards").set(len(self.boards))
@@ -779,6 +932,17 @@ class ShardedFleet:
         while i < len(events) or any(b.batcher.queue for b in self.boards):
             next_arr = events[i].arrival_s if i < len(events) else float("inf")
             due = min(self.boards, key=lambda b: b.deadline())
+            t_upd = online.next_time() if online is not None else None
+            if t_upd is not None and t_upd <= min(next_arr, due.deadline()):
+                # UPDATE BARRIER (updates win ties): every queued query
+                # arrived before this emit time and serves the pre-update
+                # tables; flush them all, then apply atomically
+                for b in list(self.boards):
+                    if b.batcher.queue:
+                        self._flush(b, t_upd, reason="update")
+                for batch in online.poll(t_upd):
+                    self._apply_delta(batch, t_upd, coherence)
+                continue
             # deadline wins ties, matching MicroBatcher.due (now >= deadline)
             if next_arr < due.deadline():
                 ev = events[i]
@@ -849,4 +1013,5 @@ class ShardedFleet:
             migration_s=self.metrics.value("migration_s"),
             cache_invalidated_rows=int(
                 self.metrics.value("cache_invalidated_rows")),
-            blame=self.attribution.blame(percentile))
+            blame=self.attribution.blame(percentile),
+            online=self._online_report())

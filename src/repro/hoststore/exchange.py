@@ -266,6 +266,7 @@ def build_host_exchange(
     policy: str = "clock",
     pool_mode: str = "paired",
     profile_batches: int = 8,
+    metrics: Optional[MetricsRegistry] = None,
 ) -> HostTieredExchange:
     """Size + build the host tier for a device-memory budget.
 
@@ -305,4 +306,4 @@ def build_host_exchange(
         cache_slots = max(1, cache_budget // (chunk_rows * row_bytes))
     mgr = ChunkParamMgr(host, chunk_rows, int(cache_slots), policy=policy)
     return HostTieredExchange(cfg, None, 1, mgr=mgr, hot_rows=hot_rows,
-                              link=link, pool_mode=pool_mode)
+                              link=link, pool_mode=pool_mode, metrics=metrics)

@@ -160,6 +160,29 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--min-replicas", type=int, default=1,
                     help="autoscaler floor (sharded fleets shrink by "
                          "retiring boards down to this)")
+    # -- online updates (repro.online) -------------------------------------
+    ap.add_argument("--online-every-s", type=float, default=0.0,
+                    help="stream continuous training into the serving run "
+                         "(repro.online): emit a row-delta batch every "
+                         "this many virtual seconds (0 = frozen params, "
+                         "the default)")
+    ap.add_argument("--online-steps", type=int, default=1,
+                    help="trainer SGD steps folded into each delta batch")
+    ap.add_argument("--online-lr", type=float, default=0.05,
+                    help="online trainer learning rate (tables-only SGD)")
+    ap.add_argument("--coherence", choices=["invalidate", "propagate"],
+                    default="propagate",
+                    help="update->cache protocol on the sharded fleet: "
+                         "drop every other board's cached copy of an "
+                         "updated row, or piggyback the fresh payload "
+                         "into the caches")
+    ap.add_argument("--record-deltas", default=None, metavar="PATH",
+                    help="write the emitted delta channel as JSONL "
+                         "(bit-identical replay via --replay-deltas)")
+    ap.add_argument("--replay-deltas", default=None, metavar="PATH",
+                    help="consume a recorded delta-channel JSONL (e.g. "
+                         "from repro.launch.train --emit-deltas) instead "
+                         "of training inline")
     ap.add_argument("--record-trace", default=None, metavar="PATH",
                     help="write the generated scenario events as a JSONL "
                          "trace before serving")
@@ -226,6 +249,45 @@ def main(argv: Optional[list] = None) -> int:
     print(report.summary())
     _emit_obs(args, tracer, report=report)
     return 0 if report.ok else 1
+
+
+def _online_channel(args, cfg, params, events, scen_name):
+    """Resolve the --online-*/--replay-deltas flags into a `DeltaChannel`
+    (None = frozen serving). Inline training pre-records the whole stream
+    (`OnlineSource.run_to`) so the channel a run consumes is identical
+    across fleet sizes and replayable via --record-deltas."""
+    if args.replay_deltas:
+        from repro.online import DeltaChannel
+        ch = DeltaChannel.load(args.replay_deltas)
+        print(f"[serve] replaying {len(ch)} delta batches from "
+              f"{args.replay_deltas}")
+        return ch
+    if args.online_every_s <= 0:
+        return None
+    from repro.online import OnlineSource, OnlineTrainer
+    from repro.traffic import make_scenario
+    if not isinstance(params, dict) or "tables" not in params:
+        raise SystemExit(
+            "--online-every-s needs stacked params with a 'tables' leaf "
+            "(plan-split sessions can't take in-place row updates); use "
+            "--plan none")
+    trainer = OnlineTrainer(cfg, params, lr=args.online_lr,
+                            seed=args.seed, alpha=args.alpha)
+    salt_fn = None
+    if scen_name == "zipf_drift":
+        # train on the drifted stream the fleet is actually serving
+        scen = make_scenario(scen_name, alpha=args.alpha)
+        salt_fn = lambda t: scen.stream_params(t)[1]
+    src = OnlineSource(trainer, interval_s=args.online_every_s,
+                       steps_per_update=args.online_steps, salt_fn=salt_fn)
+    ch = src.run_to(events[-1].arrival_s)
+    print(f"[serve] online: {len(ch)} delta batches (every "
+          f"{args.online_every_s:g}s x {args.online_steps} steps, "
+          f"lr={args.online_lr:g})")
+    if args.record_deltas:
+        ch.record(args.record_deltas)
+        print(f"[serve] recorded deltas -> {args.record_deltas}")
+    return ch
 
 
 def _fabric_main(args, cfg) -> int:
@@ -304,8 +366,10 @@ def _fabric_main(args, cfg) -> int:
                          seed=args.seed, config=cfg.name)
             print(f"[serve] recorded trace -> {args.record_trace}")
 
+    online = _online_channel(args, cfg, fleet._params, events, scen_name)
     report = fleet.run(events, sla_ms=args.sla_ms,
-                       percentile=args.sla_percentile, scenario=scen_name)
+                       percentile=args.sla_percentile, scenario=scen_name,
+                       online=online, coherence=args.coherence)
     print(f"[serve] {cfg.name} (sharded, {args.replicas} boards):")
     print(report.summary())
     _emit_obs(args, tracer, extra_metrics=fleet.metrics, report=report)
@@ -376,8 +440,11 @@ def _cluster_main(args, cfg, full_cfg) -> int:
                          seed=args.seed, config=cfg.name)
             print(f"[serve] recorded trace -> {args.record_trace}")
 
+    online = _online_channel(args, cfg, cluster.replicas[0].session.params,
+                             events, scen_name)
     report = cluster.run(events, sla_ms=args.sla_ms,
-                         percentile=args.sla_percentile, scenario=scen_name)
+                         percentile=args.sla_percentile, scenario=scen_name,
+                         online=online)
     print(f"[serve] {cfg.name}:")
     print(report.summary())
     _emit_obs(args, tracer, extra_metrics=cluster.metrics, report=report)

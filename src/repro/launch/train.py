@@ -21,6 +21,50 @@ from repro.configs.registry import get_arch, get_dlrm
 from repro.engine import Engine
 
 
+def _run_with_deltas(args, session):
+    """Run training in --delta-every-steps segments, delta-encoding the
+    embedding tables between segments into a recorded
+    `repro.online.DeltaChannel` JSONL (--emit-deltas). The stream is what
+    `repro.launch.serve --replay-deltas` feeds a live fleet."""
+    import numpy as np
+
+    from repro.online import DeltaChannel, diff_tables
+
+    params = session.params
+    if not isinstance(params, dict) or "tables" not in params:
+        raise SystemExit(
+            "--emit-deltas needs stacked params with a 'tables' leaf "
+            "(dlrm workload, --plan none, no host tier)")
+    channel = DeltaChannel()
+    seg = max(1, args.delta_every_steps)
+    snap = np.array(params["tables"])
+    reports = []
+    done = 0
+    version = 0
+    while done < args.steps:
+        n = min(seg, args.steps - done)
+        reports.append(session.run(n))
+        done += n
+        version += 1
+        new = np.array(session.params["tables"])
+        channel.push(diff_tables(
+            snap, new, version=version, t_emit_s=version * args.delta_dt_s,
+            step=done, train_loss=reports[-1].last_loss))
+        snap = new
+    n_batches = channel.record(args.emit_deltas)
+    rows = sum(b.n_rows for b in channel.emitted)
+    print(f"[train] deltas -> {args.emit_deltas} ({n_batches} batches, "
+          f"{rows} row updates)")
+    first, last = reports[0], reports[-1]
+    import dataclasses
+
+    return dataclasses.replace(
+        last, start_step=first.start_step,
+        steps_run=sum(r.steps_run for r in reports),
+        first_loss=first.first_loss,
+        history=[h for r in reports for h in r.history])
+
+
 def main(argv: Optional[list] = None) -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--workload", choices=["dlrm", "lm"], default="dlrm")
@@ -68,6 +112,18 @@ def main(argv: Optional[list] = None) -> int:
                         "the PCIe model")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--emit-deltas", default=None, metavar="PATH",
+                   help="record the run's embedding-row updates as a "
+                        "delta-channel JSONL (repro.online): the table "
+                        "rows each --delta-every-step segment changed, "
+                        "versioned + timestamped, consumable by "
+                        "repro.launch.serve --replay-deltas")
+    p.add_argument("--delta-every-steps", type=int, default=10,
+                   help="trainer steps folded into one delta batch")
+    p.add_argument("--delta-dt-s", type=float, default=1.0,
+                   help="virtual seconds between delta emits (stamps "
+                        "t_emit_s = version x this; match it to the "
+                        "serving trace's timescale)")
     p.add_argument("--report-json", default=None, metavar="PATH",
                    help="write the run report (train report + plan, when "
                         "one was built) as JSON")
@@ -106,7 +162,10 @@ def main(argv: Optional[list] = None) -> int:
                                    ckpt_every=args.ckpt_every,
                                    batch=args.batch, seq=args.seq,
                                    schedule_steps=args.steps)
-    report = session.run(args.steps)
+    if args.emit_deltas:
+        report = _run_with_deltas(args, session)
+    else:
+        report = session.run(args.steps)
     print(report.summary())
     if args.report_json:
         import json

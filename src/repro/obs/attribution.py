@@ -6,7 +6,7 @@ Gupta et al. 2019 / Hsia et al. 2020 show recommender tail latency is
 only explainable with cross-stack breakdowns. This module is that
 breakdown for the serving stack: every completed query gets a lifecycle
 record (arrival → flush trigger → dispatch → completion) whose latency
-decomposes EXACTLY into six components:
+decomposes EXACTLY into seven components:
 
   batch_wait     arrival → flush trigger (waiting for the micro-batch to
                  fill or hit its deadline)
@@ -20,6 +20,9 @@ decomposes EXACTLY into six components:
                  their max, + split-table pooling + dense forward)
   link_stall     modeled fabric round (sharded fleets)
   swap_stall     exposed host-tier swap time after pipeline overlap
+  update_stall   time spent behind an online delta push (`repro.online`)
+                 — the owner's fabric lane was busy propagating row
+                 updates when the query wanted to dispatch
 
 The invariant — enforced by construction here and by a hypothesis
 property in tests — is `sum(components) == done - arrival` to float
@@ -35,7 +38,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 COMPONENTS: Tuple[str, ...] = ("batch_wait", "queue_wait", "remesh_barrier",
-                               "compute", "link_stall", "swap_stall")
+                               "compute", "link_stall", "swap_stall",
+                               "update_stall")
 
 
 @dataclass(frozen=True)
@@ -54,6 +58,7 @@ class QueryRecord:
     compute_s: float
     link_stall_s: float
     swap_stall_s: float
+    update_stall_s: float = 0.0
 
     @property
     def latency_s(self) -> float:
@@ -105,14 +110,24 @@ class AttributionLog:
                      rid: int, trigger: float, start: float, done: float,
                      compute_s: float, link_stall_s: float = 0.0,
                      swap_stall_s: float = 0.0, queue_extra_s: float = 0.0,
-                     barriers: Sequence[Tuple[float, float]] = ()) -> None:
+                     barriers: Sequence[Tuple[float, float]] = (),
+                     update_ivals: Sequence[Tuple[float, float]] = (),
+                     update_extra_s: float = 0.0) -> None:
         """Fold one flushed batch in. `queries` is [(qid, arrival_s)];
         `barriers` are the fleet's remesh-stall intervals (the portion of
         each query's [trigger, start] wait inside one is attributed to
-        remesh_barrier, not queue_wait)."""
+        remesh_barrier, not queue_wait). `update_ivals` are the serving
+        board's online delta-push intervals — wait time inside one is
+        update_stall, not queue_wait — and `update_extra_s` is the part
+        of the owner-queue coupling caused by a remote owner's push (the
+        caller guarantees update_extra_s <= queue_extra_s, so the carve
+        keeps the closure exact)."""
         wait = max(start - trigger, 0.0)
         remesh = min(interval_overlap_s(trigger, start, barriers), wait)
-        queue = (wait - remesh) + queue_extra_s
+        upd = min(interval_overlap_s(trigger, start, update_ivals),
+                  wait - remesh)
+        queue = (wait - remesh - upd) + (queue_extra_s - update_extra_s)
+        update = upd + update_extra_s
         for qid, arrival in queries:
             self.records.append(QueryRecord(
                 qid=int(qid), rid=int(rid), arrival_s=float(arrival),
@@ -123,7 +138,8 @@ class AttributionLog:
                 remesh_barrier_s=float(remesh),
                 compute_s=float(compute_s),
                 link_stall_s=float(link_stall_s),
-                swap_stall_s=float(swap_stall_s)))
+                swap_stall_s=float(swap_stall_s),
+                update_stall_s=float(update)))
 
     def __len__(self) -> int:
         return len(self.records)
@@ -185,7 +201,7 @@ class BlameReport:
             f"(<= {self.p50_ms:.2f}ms), component means:",
         ]
         for c in COMPONENTS:
-            t, m = self.tail_ms[c], self.median_ms[c]
+            t, m = self.tail_ms.get(c, 0.0), self.median_ms.get(c, 0.0)
             if t == 0.0 and m == 0.0:
                 continue
             lines.append(

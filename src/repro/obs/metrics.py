@@ -17,8 +17,12 @@ Prometheus-style `name{k=v,...}` string so artifacts are greppable:
 Scoping: components that live inside ONE run (a fleet, a cluster) own a
 per-instance registry reset at run start, so reports can read their
 tallies back without cross-run bleed; process-wide publishers (the
-hoststore exchange buried inside an Engine) default to
-`default_registry()`, which launchers snapshot into `--metrics-out`.
+hoststore exchange buried inside an Engine, `ServeSession.run_serial` /
+`run_open_loop`) default to `default_registry()`, which launchers
+snapshot into `--metrics-out` — but every one of them takes a
+`metrics=` override, so back-to-back runs in one process can each own a
+fresh registry instead of double-counting into the singleton
+(`Engine(metrics=...)` threads one through to its hoststore exchange).
 """
 from __future__ import annotations
 

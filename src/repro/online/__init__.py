@@ -1,0 +1,36 @@
+"""repro.online — continuous training streamed into the live serving
+fleet (ROADMAP headline direction 1).
+
+Three pieces close the train -> serve loop:
+
+  delta      the versioned update stream (`RowDelta` / `DeltaBatch`) and
+             its FIFO + JSONL record/replay surface (`DeltaChannel`);
+  trainer    `OnlineTrainer` (tables-only SGD against the planted
+             teacher; dense MLPs frozen, so updates are purely row
+             deltas) and `OnlineSource` (the trainer on the virtual
+             clock, emitting batches on an interval schedule);
+  coherence  the update -> cache protocol: invalidate or propagate every
+             other copy of an updated row (`RemoteRowCache`, tiered fast
+             slabs, hoststore device chunks) so a copy is bit-equal to
+             the owner's current row or gone.
+
+The serving side lives where serving lives: `ShardedFleet.run(online=,
+coherence=)` applies batches at update barriers on the virtual clock,
+and `Cluster.run(online=)` broadcasts them to every replica.
+"""
+from repro.online.delta import (DeltaBatch, DeltaChannel, RowDelta,
+                                diff_tables)
+from repro.online.report import OnlineReport
+from repro.online.coherence import (MODES as COHERENCE_MODES,
+                                    apply_to_remote_cache, check_mode,
+                                    refresh_tiered, write_through_host)
+from repro.online.trainer import (OnlineSource, OnlineTrainer,
+                                  expected_logloss, teacher_probs)
+
+__all__ = [
+    "RowDelta", "DeltaBatch", "DeltaChannel", "diff_tables",
+    "OnlineReport",
+    "OnlineTrainer", "OnlineSource", "teacher_probs", "expected_logloss",
+    "COHERENCE_MODES", "check_mode", "apply_to_remote_cache",
+    "refresh_tiered", "write_through_host",
+]

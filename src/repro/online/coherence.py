@@ -1,0 +1,111 @@
+"""Update -> cache coherence: keep every copy of a row honest.
+
+Before this subsystem, serving was FROZEN, and every cache in the stack
+leaned on that: a `RemoteRowCache` copy was exact forever, a tiered fast
+slab never diverged from bulk, a hoststore device chunk never went stale.
+An online delta push breaks all three at once. This module is the
+protocol that repairs them, in two modes:
+
+  invalidate  — the owner drops every other copy of the updated rows
+                (cheap on the wire: row ids only). The next access pays
+                the fabric / the bulk tier / a chunk fault, which
+                re-reads the owner's NEW value — correct by re-fetch.
+  propagate   — the owner piggybacks the new payloads onto the push, and
+                caches holding (or electing) the row install the fresh
+                value in place — correct by write-through. Costs payload
+                bytes but keeps the hit ratio through the update, which
+                is the whole bet of `bench_online`: under zipf_drift the
+                trainer's hot rows ARE the serving-hot rows.
+
+Either way the invariant the fleet's bit-identity proof needs holds: a
+copy is bit-equal to the owner's CURRENT row or it does not exist.
+
+The adapters below are deliberately dumb functions over the existing
+cache surfaces (`fabric.cache.RemoteRowCache`, `core.tiered_embedding.
+TieredTables`, `hoststore.chunks.ChunkParamMgr`) — coherence is a
+protocol, not a new data structure.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.tiered_embedding import TieredTables
+from repro.fabric.cache import RemoteRowCache
+from repro.hoststore.chunks import ChunkParamMgr
+from repro.online.delta import DeltaBatch
+
+MODES = ("invalidate", "propagate")
+
+
+def check_mode(mode: str) -> str:
+    if mode not in MODES:
+        raise ValueError(f"unknown coherence mode {mode!r}; one of {MODES}")
+    return mode
+
+
+def apply_to_remote_cache(cache: RemoteRowCache, batch: DeltaBatch, *,
+                          now: float, mode: str = "invalidate"
+                          ) -> Tuple[int, int]:
+    """Reconcile one board's remote-row cache with an update batch.
+
+    Returns (invalidated, admitted): rows whose cached copy was dropped,
+    and rows the propagate path installed/refreshed. Only rows REMOTE to
+    this board are touched — the board's own resident rows are the
+    owner's problem (`ShardedFleet._apply_delta` rewrites them)."""
+    check_mode(mode)
+    invalidated = admitted = 0
+    for d in batch.deltas:
+        if mode == "invalidate":
+            invalidated += cache.invalidate_rows(d.table, d.rows)
+        else:
+            admitted += cache.admit_rows(d.table, d.rows, now)
+    return invalidated, admitted
+
+
+def refresh_tiered(tiered: TieredTables, batch: DeltaBatch
+                   ) -> Tuple[TieredTables, int]:
+    """Write an update batch through a two-tier embedding store: bulk
+    rows always take the new payload; rows with a fast slot get their
+    hot copy refreshed IN PLACE (no re-election — hotness didn't change,
+    values did). Returns (new store, fast rows refreshed)."""
+    bulk = tiered.bulk
+    fast = tiered.fast
+    refreshed = 0
+    for d in batch.deltas:
+        vals = jnp.asarray(d.values, bulk.dtype)
+        bulk = bulk.at[d.table, jnp.asarray(d.rows)].set(vals)
+        slots = np.asarray(tiered.row_map)[d.table, d.rows]
+        hot = slots >= 0
+        if hot.any():
+            fast = fast.at[d.table, jnp.asarray(slots[hot])].set(vals[hot])
+            refreshed += int(hot.sum())
+    return TieredTables(fast, bulk, tiered.row_map, tiered.hot_rows), refreshed
+
+
+def write_through_host(mgr: ChunkParamMgr, batch: DeltaBatch) -> int:
+    """Write an update batch through the host chunk store: the pinned
+    host copy is canonical and takes every row; rows whose chunk is
+    RESIDENT in the device cache get that copy refreshed too (the
+    indirection map keeps pointing at the same slot, so in-flight jit
+    programs see the new value on their next gather). The rows are NOT
+    marked dirty — the update originated outside, host is already truth.
+    Returns the number of device-resident rows refreshed."""
+    refreshed = 0
+    cache = mgr.device_cache
+    touched = False
+    for d in batch.deltas:
+        mgr.host[d.table, d.rows] = d.values.astype(mgr.host.dtype)
+        pos = mgr.host_pos[d.table, d.rows]
+        res = pos < mgr.pad_pos               # resident rows only
+        if res.any():
+            cache = cache.at[jnp.asarray(pos[res])].set(
+                jnp.asarray(d.values[res], cache.dtype))
+            refreshed += int(res.sum())
+            touched = True
+    if touched:
+        mgr.device_cache = cache
+    return refreshed

@@ -1,0 +1,186 @@
+"""The producing end of the delta channel: tables-only online SGD.
+
+The online-training loop this subsystem models is the embedding-dominant
+regime Naumov et al. 2020 describe: the dense MLPs are retrained rarely
+(they are tiny and stable), but embedding ROWS churn continuously as
+user/item behaviour drifts. `OnlineTrainer` is that loop's minimal
+faithful form — vanilla SGD on the EMBEDDING TABLES ONLY against the
+synthetic stream's planted logistic teacher (`data/recsys.py`), with the
+dense parameters frozen. Freezing the MLPs is what makes the delta
+channel purely row-based: every update the trainer can ever emit is a
+(table, rows, payload) slice, exactly the currency the fleet's
+ownership map and caches speak.
+
+Drift is learnable by construction: the teacher's sparse signal is a
+function of the UNROTATED row ids, while `zipf_drift` serves queries
+through a rotating row-space permutation (`traffic/scenarios.py`) — so
+when the hot set rotates, the row -> value association genuinely moves
+and a frozen table is wrong until retrained. `train_steps(salt=...)`
+trains against the rotated stream, teaching the CURRENT hot rows the
+association; `teacher_probs` reconstructs the teacher's exact click
+probabilities for any query event, giving benches a deterministic
+accuracy proxy (expected log-loss) with no label sampling noise.
+
+`OnlineSource` puts the trainer on the virtual clock: at every interval
+boundary it runs a fixed number of steps against the drift state at
+that instant and emits the changed rows as a `DeltaBatch`. The schedule
+is a pure function of (trainer seed, interval, salt function), so two
+runs — or a 1-board and a k-board fleet — see identical update streams.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DLRMConfig
+from repro.core.dlrm import bce_loss, dlrm_forward
+from repro.data.recsys import make_recsys_batch, teacher_click_probs
+from repro.online.delta import DeltaBatch, DeltaChannel, diff_tables
+from repro.traffic.scenarios import QueryEvent
+
+
+def teacher_probs(cfg: DLRMConfig, event: QueryEvent,
+                  query_size: Optional[int] = None) -> np.ndarray:
+    """The planted teacher's exact P(click) for one query event — the
+    ground truth `make_recsys_batch` samples labels from, computed from
+    the UNROTATED indices (the teacher predates the drift rotation).
+    Deterministic, so benches can score served probabilities against it
+    as an expected-log-loss accuracy proxy."""
+    b = make_recsys_batch(cfg, event.step, event.seed, event.alpha,
+                          batch_size=query_size)
+    return np.asarray(teacher_click_probs(cfg, b["dense"], b["indices"],
+                                          event.seed))
+
+
+def expected_logloss(p_teacher: np.ndarray, q_served: np.ndarray,
+                     eps: float = 1e-7) -> float:
+    """Mean cross-entropy H(p, q) of served click probabilities against
+    the teacher's — the accuracy proxy. Lower is better; minimized when
+    the served model reproduces the teacher exactly."""
+    p = np.asarray(p_teacher, np.float64)
+    q = np.clip(np.asarray(q_served, np.float64), eps, 1.0 - eps)
+    return float(np.mean(-(p * np.log(q) + (1.0 - p) * np.log(1.0 - q))))
+
+
+class OnlineTrainer:
+    """Tables-only SGD against the planted-teacher stream; see module
+    docstring. Holds the canonical host copy of the tables it trains —
+    `params()` hands a serving-ready stacked dict to fleets/replicas."""
+
+    def __init__(self, cfg: DLRMConfig, params, *, lr: float = 0.05,
+                 seed: int = 0, alpha: float = 0.0,
+                 batch_size: Optional[int] = None, start_step: int = 0):
+        self.cfg = cfg
+        self.lr = float(lr)
+        self.seed = int(seed)
+        self.alpha = float(alpha)
+        self.batch_size = int(batch_size or cfg.batch_size)
+        self.step = int(start_step)
+        self._dense_params = {"bot_mlp": params["bot_mlp"],
+                              "top_mlp": params["top_mlp"]}
+        self._tables = np.array(np.asarray(params["tables"]), copy=True)
+        cfg_ = cfg
+
+        @jax.jit
+        def sgd(tables, dense_params, dense, idx, labels):
+            def loss(tab):
+                logits = dlrm_forward({**dense_params, "tables": tab},
+                                      dense, idx, cfg_)
+                return bce_loss(logits, labels)
+            l, g = jax.value_and_grad(loss)(tables)
+            return tables - self.lr * g, l
+
+        self._sgd = sgd
+
+    @property
+    def tables(self) -> np.ndarray:
+        """Host canonical (T, R, d) float32 — the trainer's latest state."""
+        return self._tables
+
+    def params(self):
+        """Serving-ready stacked params: frozen dense + current tables."""
+        return {**self._dense_params, "tables": jnp.asarray(self._tables)}
+
+    def train_steps(self, n_steps: int, *, salt: int = 0) -> float:
+        """Run `n_steps` SGD steps on the stream, with the drift rotation
+        `salt` applied to the index stream (training sees the SAME
+        rotated ids serving sees at that instant). Returns the mean
+        loss. Deterministic in (seed, step range, salt)."""
+        R = self.cfg.rows_per_table
+        losses: List[float] = []
+        tables = jnp.asarray(self._tables)
+        for _ in range(max(0, int(n_steps))):
+            b = make_recsys_batch(self.cfg, self.step, self.seed,
+                                  self.alpha, batch_size=self.batch_size)
+            idx = b["indices"]
+            if salt:
+                idx = ((idx + jnp.int32(salt % R)) % R).astype(jnp.int32)
+            tables, loss = self._sgd(tables, self._dense_params,
+                                     b["dense"], idx, b["labels"])
+            losses.append(float(loss))
+            self.step += 1
+        self._tables = np.asarray(tables)
+        return float(np.mean(losses)) if losses else float("nan")
+
+
+class OnlineSource:
+    """The trainer on the virtual clock: a lazy `next_time()`/`poll(now)`
+    schedule the fleet event loop merges with query arrivals and batch
+    deadlines (the same protocol `DeltaChannel` speaks, so a RECORDED
+    stream drops in wherever a live source does).
+
+    Every `interval_s` of virtual time it runs `steps_per_update` SGD
+    steps against the drift state at the boundary (`salt_fn(t)` — wire
+    the scenario's `stream_params(t)[1]` for zipf_drift) and emits the
+    changed rows as one versioned `DeltaBatch`."""
+
+    def __init__(self, trainer: OnlineTrainer, *, interval_s: float,
+                 steps_per_update: int = 1, start_s: Optional[float] = None,
+                 n_updates: Optional[int] = None,
+                 salt_fn: Optional[Callable[[float], int]] = None):
+        if interval_s <= 0:
+            raise ValueError(f"interval_s must be > 0, got {interval_s}")
+        self.trainer = trainer
+        self.interval_s = float(interval_s)
+        self.start_s = float(interval_s if start_s is None else start_s)
+        self.steps_per_update = int(steps_per_update)
+        self.n_updates = n_updates
+        self.salt_fn = salt_fn
+        self._k = 0
+        self._snapshot = trainer.tables.copy()
+        self.emitted: List[DeltaBatch] = []
+
+    def next_time(self) -> Optional[float]:
+        if self.n_updates is not None and self._k >= self.n_updates:
+            return None
+        return self.start_s + self._k * self.interval_s
+
+    def poll(self, now: float) -> List[DeltaBatch]:
+        """Train + emit every scheduled batch with t_emit_s <= now."""
+        out: List[DeltaBatch] = []
+        while True:
+            t = self.next_time()
+            if t is None or t > now:
+                break
+            salt = int(self.salt_fn(t)) if self.salt_fn is not None else 0
+            loss = self.trainer.train_steps(self.steps_per_update, salt=salt)
+            batch = diff_tables(self._snapshot, self.trainer.tables,
+                                version=self._k + 1, t_emit_s=t,
+                                step=self.trainer.step, train_loss=loss)
+            self._snapshot = self.trainer.tables.copy()
+            self._k += 1
+            self.emitted.append(batch)
+            out.append(batch)
+        return out
+
+    def run_to(self, t_end: float) -> DeltaChannel:
+        """Eagerly generate every batch scheduled up to `t_end` and hand
+        them back as a fresh `DeltaChannel` — the record-then-replay path
+        benches use so both arms (and both fleet sizes) consume the
+        IDENTICAL stream."""
+        self.poll(t_end)
+        return DeltaChannel(self.emitted)

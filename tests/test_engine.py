@@ -101,13 +101,18 @@ def test_open_loop_reports_full_distribution():
 
 
 def test_train_session_loss_decreases(tmp_path):
-    cfg = _cfg()
-    eng = Engine(cfg, lr=0.05)
-    sess = eng.train_session(ckpt_dir=str(tmp_path), ckpt_every=10)
-    rep = sess.run(20)
-    assert rep.steps_run == 20
+    # the planted teacher carries most of its signal in the embedding
+    # rows (data/recsys.py SPARSE_SIGNAL), which SGD only learns
+    # row-by-row — descent needs a real batch size and enough steps to
+    # clear the noise floor, not the 20-step dense-only warmup that
+    # sufficed when the teacher was nearly pure-dense
+    cfg = dataclasses.replace(_cfg(), batch_size=128)
+    eng = Engine(cfg, lr=1.0)
+    sess = eng.train_session(ckpt_dir=str(tmp_path), ckpt_every=50)
+    rep = sess.run(100)
+    assert rep.steps_run == 100
     losses = [h["loss"] for h in rep.history]
-    assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.02, losses
 
 
 @pytest.mark.parametrize("plan,optimizer", [("none", "sgd"),

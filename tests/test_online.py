@@ -1,0 +1,552 @@
+"""repro.online: continuous training streamed into the live serving fleet.
+
+The invariants the subsystem must hold:
+
+  * the delta channel is versioned, time-ordered, and replays bit-exactly
+    through its JSONL record/load round trip;
+  * `diff_tables` is an exact bitwise delta encoder — unchanged rows ship
+    nothing;
+  * the trainer and source are deterministic in (seed, schedule, salt),
+    so two runs (or two fleet sizes) consume identical update streams;
+  * the coherence protocol keeps every copy honest in both modes: a
+    `RemoteRowCache` / tiered fast slab / hoststore device chunk copy is
+    bit-equal to the owner's latest row or gone;
+  * THE online invariant (property-tested): with random row pushes and
+    lookups interleaved across a 2-board fabric, every served query is
+    bit-identical to the 1-board online reference, every served row is
+    bit-equal to the owner's latest visible version, and the 7-component
+    latency attribution (incl. update_stall) closes exactly;
+  * the cluster broadcasts batches to every replica bit-identically;
+  * per-run `metrics=` registries scope serving meters (no cross-run
+    contamination of the process-wide singleton);
+  * the bench is registered in benchmarks/run.py with a JSON receipt.
+"""
+import dataclasses
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_dlrm
+from repro.traffic import make_scenario
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cfg(**kw):
+    return dataclasses.replace(
+        get_dlrm("dlrm-rm2-small-unsharded").reduced(), batch_size=8, **kw)
+
+
+def _rand_batch(cfg, seed, version, t_emit):
+    """A deterministic pseudo-random DeltaBatch: a few tables, a few rows
+    each, fresh float32 payloads."""
+    from repro.online import DeltaBatch, RowDelta
+
+    rng = np.random.default_rng(seed)
+    T, R, d = cfg.num_tables, cfg.rows_per_table, cfg.embed_dim
+    n_t = int(rng.integers(1, min(4, T) + 1))
+    deltas = []
+    for t in sorted(rng.choice(T, size=n_t, replace=False).tolist()):
+        rows = np.unique(rng.integers(0, R, size=int(rng.integers(1, 17))))
+        vals = rng.standard_normal((len(rows), d)).astype(np.float32)
+        deltas.append(RowDelta(table=int(t), rows=rows, values=vals))
+    return DeltaBatch(version=int(version), t_emit_s=float(t_emit),
+                      step=int(version), deltas=tuple(deltas))
+
+
+def _apply(base, batches):
+    """Reference application of batches to a (T, R, d) snapshot, in
+    (t_emit, version) order — what the fleet's host canonical must equal
+    after a run that consumed them all."""
+    out = np.array(base, copy=True)
+    for b in sorted(batches, key=lambda x: (x.t_emit_s, x.version)):
+        for d in b.deltas:
+            out[d.table, d.rows] = d.values
+    return out
+
+
+def _closure_residual(records):
+    from repro.obs.attribution import COMPONENTS
+
+    return max(abs(sum(getattr(rec, c + "_s") for c in COMPONENTS)
+                   - rec.latency_s) for rec in records)
+
+
+# ---------------------------------------------------------------------------
+# Delta encoding + channel (unit)
+# ---------------------------------------------------------------------------
+def test_row_delta_validation_and_wire_bytes():
+    from repro.online import DeltaBatch, RowDelta
+    from repro.online.delta import ELEM_BYTES, INDEX_BYTES
+
+    d = 16
+    rd = RowDelta(table=2, rows=np.array([3, 7]),
+                  values=np.zeros((2, d), np.float32))
+    assert rd.n_rows == 2
+    assert rd.payload_bytes() == 2 * (INDEX_BYTES + d * ELEM_BYTES)
+    with pytest.raises(ValueError, match="rows"):
+        RowDelta(table=0, rows=np.array([1, 2, 3]),
+                 values=np.zeros((2, d), np.float32))
+    b = DeltaBatch(version=1, t_emit_s=0.5, step=10,
+                   deltas=(rd, RowDelta(table=5, rows=np.array([0]),
+                                        values=np.ones((1, d), np.float32))))
+    assert b.n_rows == 3 and b.tables == (2, 5)
+    assert b.payload_bytes() == 3 * (INDEX_BYTES + d * ELEM_BYTES)
+
+
+def test_diff_tables_is_exact():
+    from repro.online import diff_tables
+
+    rng = np.random.default_rng(0)
+    old = rng.standard_normal((3, 32, 8)).astype(np.float32)
+    new = old.copy()
+    new[0, 5] += 1.0
+    new[2, [1, 30]] = 0.0
+    batch = diff_tables(old, new, version=4, t_emit_s=1.25, step=99)
+    assert batch.version == 4 and batch.step == 99
+    assert batch.tables == (0, 2)
+    by_table = {d.table: d for d in batch.deltas}
+    assert by_table[0].rows.tolist() == [5]
+    assert by_table[2].rows.tolist() == [1, 30]
+    # payloads are the NEW rows, bitwise
+    assert np.array_equal(by_table[0].values, new[0, [5]])
+    # applying the diff reconstructs `new` exactly; untouched rows never ship
+    assert np.array_equal(_apply(old, [batch]), new)
+    assert diff_tables(old, old, version=1, t_emit_s=0.0).n_rows == 0
+    with pytest.raises(ValueError, match="shapes differ"):
+        diff_tables(old, old[:2], version=1, t_emit_s=0.0)
+
+
+def test_delta_channel_order_record_replay(tmp_path):
+    from repro.online import DeltaChannel
+
+    cfg = _cfg()
+    batches = [_rand_batch(cfg, s, v, t)
+               for s, v, t in [(1, 1, 0.1), (2, 2, 0.3), (3, 3, 0.7)]]
+    ch = DeltaChannel(batches[:2])
+    assert len(ch) == 2 and ch.next_time() == 0.1
+    assert [b.version for b in ch.poll(0.3)] == [1, 2]
+    assert ch.next_time() is None and ch.poll(10.0) == []
+    ch.push(batches[2])
+    assert ch.next_time() == 0.7
+    with pytest.raises(ValueError, match="time-ordered"):
+        ch.push(_rand_batch(cfg, 4, 4, 0.2))
+    # record captures drained AND pending batches; load round-trips bitwise
+    path = str(tmp_path / "deltas.jsonl")
+    assert ch.record(path) == 3
+    re = DeltaChannel.load(path)
+    assert len(re) == 3
+    for a, b in zip(ch.emitted, re.emitted):
+        assert (a.version, a.t_emit_s, a.step) == (b.version, b.t_emit_s,
+                                                   b.step)
+        for da, db in zip(a.deltas, b.deltas):
+            assert da.table == db.table
+            assert np.array_equal(da.rows, db.rows)
+            assert np.array_equal(da.values, db.values)
+
+
+# ---------------------------------------------------------------------------
+# Trainer + source (deterministic stream)
+# ---------------------------------------------------------------------------
+def test_trainer_determinism_and_source_schedule():
+    import jax
+
+    from repro.core.dlrm import init_dlrm
+    from repro.online import OnlineSource, OnlineTrainer
+
+    cfg = _cfg()
+    params = init_dlrm(jax.random.PRNGKey(0), cfg)
+
+    def mk():
+        return OnlineTrainer(cfg, params, lr=0.5, seed=0, alpha=1.05,
+                             batch_size=16)
+
+    t1, t2 = mk(), mk()
+    l1 = t1.train_steps(3, salt=5)
+    l2 = t2.train_steps(3, salt=5)
+    assert l1 == l2
+    assert np.array_equal(t1.tables, t2.tables)
+    assert not np.array_equal(t1.tables, np.asarray(params["tables"]))
+    # tables-only: the dense MLPs are frozen, updates are purely row deltas
+    p_out = t1.params()
+    assert p_out["bot_mlp"] is params["bot_mlp"]
+    assert p_out["top_mlp"] is params["top_mlp"]
+
+    def mk_src():
+        return OnlineSource(mk(), interval_s=0.5, steps_per_update=2,
+                            n_updates=3, salt_fn=lambda t: int(t * 10))
+
+    src = mk_src()
+    assert src.next_time() == 0.5
+    got = src.poll(1.0)
+    assert [b.version for b in got] == [1, 2]
+    assert [b.t_emit_s for b in got] == [0.5, 1.0]
+    assert src.next_time() == 1.5
+    ch = src.run_to(5.0)                      # capped by n_updates
+    assert len(ch) == 3 and src.next_time() is None
+    # the schedule is a pure function of (trainer seed, interval, salts):
+    # an identically-built source emits the SAME stream, bitwise
+    ch2 = mk_src().run_to(5.0)
+    for a, b in zip(ch.emitted, ch2.emitted):
+        assert (a.version, a.t_emit_s, a.step) == (b.version, b.t_emit_s,
+                                                   b.step)
+        for da, db in zip(a.deltas, b.deltas):
+            assert np.array_equal(da.rows, db.rows)
+            assert np.array_equal(da.values, db.values)
+
+
+# ---------------------------------------------------------------------------
+# Coherence protocol (unit, per cache surface)
+# ---------------------------------------------------------------------------
+def test_coherence_remote_cache_modes():
+    from repro.core import tiered_embedding as te
+    from repro.fabric import RemoteRowCache
+    from repro.online import DeltaBatch, RowDelta, apply_to_remote_cache
+    from repro.online.coherence import check_mode
+
+    with pytest.raises(ValueError, match="coherence mode"):
+        check_mode("gossip")
+
+    cfg = _cfg()
+    remote = [0, 1, 2, 3]
+    freq = te.measure_row_freq(cfg, alpha=1.2, seed=0, n_batches=8)
+    d = cfg.embed_dim
+
+    def touched_batch(cache):
+        """Rows of remote table 0: some cached, some not — plus rows of a
+        LOCAL table, which coherence must never touch."""
+        cached0 = np.flatnonzero(cache._cached[0])[:4]
+        uncached0 = np.setdiff1d(np.arange(cfg.rows_per_table),
+                                 np.flatnonzero(cache._cached[0]))[:4]
+        rows0 = np.unique(np.concatenate([cached0, uncached0]))
+        return cached0, DeltaBatch(
+            version=1, t_emit_s=0.1, step=1, deltas=(
+                RowDelta(0, rows0, np.ones((len(rows0), d), np.float32)),
+                RowDelta(5, np.arange(4),
+                         np.ones((4, d), np.float32))))
+
+    # -- invalidate: cached copies dropped, counts survive -------------------
+    cache = RemoteRowCache(cfg, remote, capacity_rows=32)
+    cache.warm(freq)
+    cached0, batch = touched_batch(cache)
+    assert len(cached0) > 0
+    counts_before = cache._counts.copy()
+    inv, adm = apply_to_remote_cache(cache, batch, now=0.1,
+                                     mode="invalidate")
+    assert inv == len(cached0) and adm == 0
+    assert not cache._cached[0, cached0].any()
+    assert np.array_equal(cache._counts, counts_before)
+
+    # -- propagate: rows refreshed/admitted, never over capacity, never a
+    # local row ---------------------------------------------------------------
+    cache2 = RemoteRowCache(cfg, remote, capacity_rows=32)
+    cache2.warm(freq)
+    cached0, batch = touched_batch(cache2)
+    rows0 = batch.deltas[0].rows
+    inv, adm = apply_to_remote_cache(cache2, batch, now=0.1,
+                                     mode="propagate")
+    assert inv == 0 and adm == len(rows0)
+    assert cache2._cached[0, rows0].all()
+    assert not cache2._cached[5].any()          # local table: untouched
+    assert cache2.cached_rows <= cache2.capacity_rows
+
+    # -- propagate into a FULL tiny cache: LRU eviction keeps the bound ------
+    tiny = RemoteRowCache(cfg, remote, capacity_rows=4)
+    tiny.warm(freq)
+    big_rows = np.arange(8)
+    big = DeltaBatch(version=1, t_emit_s=0.2, step=1, deltas=(
+        RowDelta(1, big_rows, np.ones((8, d), np.float32)),))
+    apply_to_remote_cache(tiny, big, now=0.2, mode="propagate")
+    assert tiny.cached_rows <= tiny.capacity_rows
+
+
+def test_coherence_tiered_and_hoststore_write_through():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import tiered_embedding as te
+    from repro.hoststore.chunks import ChunkParamMgr
+    from repro.online import (DeltaBatch, RowDelta, refresh_tiered,
+                              write_through_host)
+
+    T, R, d, H = 3, 64, 8, 8
+    tables = jax.random.normal(jax.random.PRNGKey(0), (T, R, d), jnp.float32)
+    freq = np.zeros((T, R), np.int32)
+    freq[0, :H] = np.arange(H, 0, -1)          # table 0 rows 0..H-1 are hot
+    tiered = te.build_tiered_tables(tables, jnp.asarray(freq), H)
+    rows = np.array([2, 5, 40])                # 2 hot + 1 bulk-only
+    vals = np.arange(len(rows) * d, dtype=np.float32).reshape(len(rows), d)
+    batch = DeltaBatch(version=1, t_emit_s=0.0, step=1, deltas=(
+        RowDelta(0, rows, vals),))
+
+    fresh, n_fast = refresh_tiered(tiered, batch)
+    assert n_fast == 2                          # rows 2 and 5 have fast slots
+    assert np.array_equal(np.asarray(fresh.bulk)[0, rows], vals)
+    slots = np.asarray(fresh.row_map)[0, rows[:2]]
+    assert (slots >= 0).all()
+    assert np.array_equal(np.asarray(fresh.fast)[0, slots], vals[:2])
+    # bulk row with no fast slot: only the bulk copy moved
+    assert int(np.asarray(fresh.row_map)[0, 40]) < 0
+
+    # -- hoststore: host canonical takes all rows; resident device chunks
+    # are refreshed in place --------------------------------------------------
+    mgr = ChunkParamMgr(tables, chunk_rows=8, cache_slots=4)
+    mgr.ensure(np.array([0, 0]), np.array([2, 5]))      # chunk 0 resident
+    n_dev = write_through_host(mgr, batch)
+    assert n_dev == 2                           # rows 2,5 resident; 40 not
+    assert np.array_equal(mgr.host[0, rows], vals)
+    pos = mgr.host_pos[0, rows[:2]]
+    assert (pos < mgr.pad_pos).all()
+    assert np.array_equal(np.asarray(mgr.device_cache)[pos], vals[:2])
+    assert mgr.host_pos[0, 40] == mgr.pad_pos   # still not resident
+
+
+# ---------------------------------------------------------------------------
+# Fleet: update barriers, accounting, served-version correctness
+# ---------------------------------------------------------------------------
+def test_fleet_applies_updates_and_accounts():
+    from repro.fabric import ShardedFleet
+    from repro.online import DeltaChannel, OnlineReport
+
+    cfg = _cfg()
+    events = make_scenario("zipf_drift", alpha=1.2, rotate_every_s=0.02,
+                           salt_stride=37).events(10, qps=2000.0, seed=3)
+    horizon = events[-1].arrival_s
+    batches = [_rand_batch(cfg, 11, 1, 0.3 * horizon),
+               _rand_batch(cfg, 12, 2, 0.6 * horizon)]
+    n_rows = sum(b.n_rows for b in batches)
+
+    for mode in ("invalidate", "propagate"):
+        fleet = ShardedFleet(cfg, n_boards=2, alpha=1.05, seed=0,
+                             max_batch_queries=2)
+        base = fleet._tables_host.copy()
+        r = fleet.run(events, online=DeltaChannel(batches), coherence=mode)
+        assert isinstance(r.online, OnlineReport)
+        assert r.online.mode == mode
+        assert r.online.n_updates == 2 and r.online.last_version == 2
+        assert r.online.rows_pushed == n_rows
+        assert r.online.staleness_max_s >= 0.0
+        # the host canonical ends at exactly the last version
+        assert np.array_equal(fleet._tables_host, _apply(base, batches))
+        # metrics registry carries the same ledger
+        m = fleet.metrics
+        assert m.value("update_batches") == 2
+        assert m.total("rows_pushed") == n_rows
+        assert m.histogram("update_staleness_s").count == 2
+        assert m.value("cache_invalidated_rows", cause="update") \
+            == r.online.cache_invalidated_rows
+        assert m.value("rows_propagated") == r.online.rows_propagated
+        if mode == "invalidate":
+            assert r.online.rows_propagated == 0
+        # attribution still closes with the update_stall component
+        assert _closure_residual(fleet.attribution.records) < 1e-9
+
+    # no channel -> no online ledger
+    frozen = ShardedFleet(cfg, n_boards=2, alpha=1.05, seed=0,
+                          max_batch_queries=2)
+    assert frozen.run(events).online is None
+
+
+def test_served_version_matches_owner_latest():
+    """Every query's served values are the owner's LATEST VISIBLE version:
+    bit-equal to a frozen single-board fleet holding exactly the tables
+    with V(q) = #{batches emitted at or before its arrival} applied."""
+    import jax
+
+    from repro.core.dlrm import init_dlrm
+    from repro.fabric import ShardedFleet
+    from repro.online import DeltaChannel
+
+    cfg = _cfg()
+    events = make_scenario("zipf_drift", alpha=1.2, rotate_every_s=0.02,
+                           salt_stride=37).events(8, qps=2000.0, seed=3)
+    arr = [e.arrival_s for e in events]
+    # emit strictly BETWEEN arrivals, so visibility is unambiguous
+    batches = [_rand_batch(cfg, 21, 1, (arr[2] + arr[3]) / 2),
+               _rand_batch(cfg, 22, 2, (arr[5] + arr[6]) / 2)]
+
+    fleet = ShardedFleet(cfg, n_boards=2, alpha=1.05, seed=0,
+                         max_batch_queries=1)
+    params0 = init_dlrm(jax.random.PRNGKey(0), cfg)
+    base = np.array(params0["tables"])
+    assert np.array_equal(fleet._tables_host, base)
+    fleet.run(events, online=DeltaChannel(batches), coherence="propagate")
+
+    visible = {ev.qid: sum(b.t_emit_s <= ev.arrival_s for b in batches)
+               for ev in events}
+    assert set(visible.values()) == {0, 1, 2}   # all three versions served
+    for v in sorted(set(visible.values())):
+        ref = ShardedFleet(cfg, n_boards=1, alpha=1.05, seed=0,
+                           max_batch_queries=1,
+                           params={**params0,
+                                   "tables": _apply(base, batches[:v])})
+        ref.run(events)
+        for ev in events:
+            if visible[ev.qid] != v:
+                continue
+            assert np.array_equal(fleet.completed[ev.qid].probs,
+                                  ref.completed[ev.qid].probs), \
+                f"query {ev.qid} diverged from its version-{v} reference"
+
+
+def test_online_random_interleaving_bit_identity_property():
+    """THE online invariant, property-tested: random row pushes + lookups
+    interleaved across a 2-board fabric serve bit-identically to the
+    1-board online reference at every interleaving point, the host
+    canonical converges to the last version, and the latency attribution
+    closes exactly with update_stall. Uses Hypothesis when available;
+    otherwise falls back to a seeded random case sweep."""
+    from repro.fabric import ShardedFleet
+    from repro.online import DeltaChannel
+
+    cfg = _cfg()
+    events = make_scenario("zipf_drift", alpha=1.2, rotate_every_s=0.02,
+                           salt_stride=37).events(10, qps=2000.0, seed=3)
+    horizon = events[-1].arrival_s
+
+    def check(fracs, seeds, mode):
+        batches = [_rand_batch(cfg, seeds[i], i + 1, fracs[i] * horizon)
+                   for i in range(len(fracs))]
+
+        def serve(k):
+            fleet = ShardedFleet(cfg, n_boards=k, alpha=1.05, seed=0,
+                                 max_batch_queries=2,
+                                 router="jsq" if k > 1 else "round_robin")
+            base = fleet._tables_host.copy()
+            fleet.run(events, online=DeltaChannel(batches), coherence=mode)
+            return fleet, base
+
+        (ref, base), (fleet, _) = serve(1), serve(2)
+        for ev in events:
+            assert np.array_equal(ref.completed[ev.qid].probs,
+                                  fleet.completed[ev.qid].probs), \
+                f"query {ev.qid} diverged between 1 and 2 boards"
+        # both fleets converge to exactly the last visible version
+        expected = _apply(base, batches)
+        assert np.array_equal(ref._tables_host, expected)
+        assert np.array_equal(fleet._tables_host, expected)
+        assert fleet.metrics.histogram("update_staleness_s").count \
+            == len(batches)
+        for f in (ref, fleet):
+            assert _closure_residual(f.attribution.records) < 1e-9
+
+    try:
+        from hypothesis import HealthCheck, given, settings
+        from hypothesis import strategies as st
+    except ImportError:
+        rng = np.random.default_rng(0)
+        for i, mode in enumerate(("invalidate", "propagate", "propagate")):
+            n_b = 1 + i
+            check(sorted(rng.uniform(0.02, 0.98, n_b).tolist()),
+                  rng.integers(0, 2 ** 16, n_b).tolist(), mode)
+        return
+
+    @settings(max_examples=4, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st.data())
+    def run(data):
+        n_b = data.draw(st.integers(1, 3))
+        fracs = sorted(data.draw(st.lists(
+            st.floats(0.02, 0.98, allow_nan=False), min_size=n_b,
+            max_size=n_b)))
+        seeds = data.draw(st.lists(st.integers(0, 2 ** 16), min_size=n_b,
+                                   max_size=n_b))
+        mode = data.draw(st.sampled_from(("invalidate", "propagate")))
+        check(fracs, seeds, mode)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# Cluster broadcast
+# ---------------------------------------------------------------------------
+def test_cluster_broadcasts_updates_bit_identically():
+    from repro.cluster import Cluster
+    from repro.obs.serialize import to_jsonable
+    from repro.online import DeltaBatch, DeltaChannel, OnlineReport, RowDelta
+
+    cfg = _cfg()
+    events = make_scenario("stationary", alpha=1.05).events(8, qps=2000.0,
+                                                            seed=2)
+    arr = [e.arrival_s for e in events]
+    rng = np.random.default_rng(7)
+    # a full-table rewrite guarantees every post-update lookup moves
+    full = DeltaBatch(version=1, t_emit_s=(arr[0] + arr[1]) / 2, step=1,
+                      deltas=tuple(
+                          RowDelta(t, np.arange(cfg.rows_per_table),
+                                   rng.standard_normal(
+                                       (cfg.rows_per_table, cfg.embed_dim))
+                                   .astype(np.float32))
+                          for t in range(cfg.num_tables)))
+    # max_batch_queries=1 pins the batch composition: with one query per
+    # micro-batch the served values are routing- and barrier-independent,
+    # so replica count must be bit-invisible (the replica path is
+    # composition-SENSITIVE in the last float bit, like any XLA batching)
+    kw = dict(alpha=1.05, seed=0, max_batch_queries=1)
+
+    c1 = Cluster(cfg, n_replicas=1, **kw)
+    c1.run(events, online=DeltaChannel([full]))
+    c2 = Cluster(cfg, n_replicas=2, **kw)
+    r2 = c2.run(events, online=DeltaChannel([full]))
+    frozen = Cluster(cfg, n_replicas=2, **kw)
+    frozen.run(events)
+
+    # broadcast keeps replica count out of the served values
+    for ev in events:
+        assert np.array_equal(c1.completed[ev.qid].probs,
+                              c2.completed[ev.qid].probs)
+    # the update genuinely changed what is served...
+    assert any(not np.array_equal(frozen.completed[ev.qid].probs,
+                                  c2.completed[ev.qid].probs)
+               for ev in events[1:])
+    # ...but queries that arrived BEFORE the emit flushed pre-update
+    assert np.array_equal(frozen.completed[events[0].qid].probs,
+                          c2.completed[events[0].qid].probs)
+    assert isinstance(r2.online, OnlineReport)
+    assert r2.online.n_updates == 1
+    assert r2.online.rows_pushed == cfg.num_tables * cfg.rows_per_table
+    doc = to_jsonable(r2.online)
+    assert doc["kind"] == "OnlineReport"
+    assert c2.metrics.histogram("update_staleness_s").count == 1
+
+
+# ---------------------------------------------------------------------------
+# Metrics scoping (regression: cross-run contamination)
+# ---------------------------------------------------------------------------
+def test_metrics_scoped_per_run_no_cross_contamination():
+    """Two serving runs handed their OWN registries must each count
+    exactly their own queries, and must leave the process-wide singleton
+    untouched; runs without `metrics=` still land on the singleton."""
+    from repro.engine import Engine
+    from repro.obs.metrics import MetricsRegistry, default_registry
+
+    cfg = _cfg()
+    sess = Engine(cfg, plan="none", alpha=1.05).serve_session(
+        max_batch_queries=2)
+    before = default_registry().total("queries_served")
+    m1, m2 = MetricsRegistry(), MetricsRegistry()
+    sess.run_open_loop(6, 2000.0, metrics=m1)
+    sess.run_open_loop(6, 2000.0, metrics=m2)
+    assert m1.total("queries_served") == 6
+    assert m2.total("queries_served") == 6
+    assert default_registry().total("queries_served") == before
+    # the singleton is still the default sink
+    sess.run_serial(3)
+    assert default_registry().total("queries_served") == before + 3
+
+
+# ---------------------------------------------------------------------------
+# Bench registration
+# ---------------------------------------------------------------------------
+def test_bench_online_registered():
+    if REPO not in sys.path:
+        sys.path.insert(0, REPO)
+    from benchmarks import run as bench_run
+
+    names = {name for name, _ in bench_run.SECTIONS}
+    assert "online" in names
+    for section in ("online", "pipeline", "tiered_embedding",
+                    "engine_serve"):
+        assert section in bench_run.EMITS_JSON

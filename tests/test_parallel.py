@@ -135,11 +135,15 @@ def test_compressed_grads_training_decreases_loss():
     the EF residual state must be live (non-zero after steps)."""
     import jax
     from repro.engine import Engine
-    eng = Engine(_cfg(), lr=0.05, compress_grads=True)
+    # the planted teacher carries most of its signal in the embedding rows
+    # (data/recsys.py SPARSE_SIGNAL) which SGD learns row-by-row — descent
+    # needs a real batch and enough steps to clear the per-batch noise
+    cfg = dataclasses.replace(_cfg(), batch_size=128)
+    eng = Engine(cfg, lr=1.0, compress_grads=True)
     sess = eng.train_session()
-    rep = sess.run(20)
+    rep = sess.run(100)
     losses = [h["loss"] for h in rep.history]
-    assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.02, losses
     ef_leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(
         jax.device_get(sess.opt_state["ef"]))]
     assert max(float(np.abs(e).max()) for e in ef_leaves) > 0.0
